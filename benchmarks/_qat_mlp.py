@@ -1,0 +1,112 @@
+"""Shared QAT MLP for the paper-mechanism benchmarks.
+
+The paper's accuracy experiments (Tables III/IV, Figs 2/5/8) ran
+ResNet18/CIFAR and a TNN-MLP/MNIST; offline we reproduce the *mechanisms*
+on SyntheticClassification (DESIGN.md §8) with the paper's TNN MLP shape
+(784-256-256-10) and a residual block so the §III claims are testable:
+
+    W-A-R notation: weight BSL - activation BSL - residual BSL.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import (lsq_fake_quant, ternary_weight_quant,
+                              thermometer_act_quant)
+from repro.data import SyntheticClassification
+from repro.optim import adamw_init, adamw_update
+
+__all__ = ["QatSpec", "init_mlp", "mlp_forward", "train_mlp", "eval_mlp",
+           "DATASET"]
+
+DATASET = SyntheticClassification(n_classes=10, dim=784, seed=0)
+
+
+@dataclass(frozen=True)
+class QatSpec:
+    weight_bsl: int | None = 2      # None = float weights
+    act_bsl: int | None = 2         # None = float activations
+    resid_bsl: int | None = None    # None = no residual path at all
+    hidden: int = 256
+    n_blocks: int = 2
+
+
+def init_mlp(key: jax.Array, spec: QatSpec) -> dict:
+    ks = jax.random.split(key, spec.n_blocks + 2)
+    h = spec.hidden
+    params = {"w_in": jax.random.normal(ks[0], (784, h)) * (1 / 28.0),
+              "blocks": [], "w_out": jax.random.normal(ks[-1], (h, 10)) / jnp.sqrt(h)}
+    for i in range(spec.n_blocks):
+        params["blocks"].append(
+            {"w": jax.random.normal(ks[1 + i], (h, h)) / jnp.sqrt(h),
+             "alpha_w": jnp.asarray(0.05),
+             "alpha_a": jnp.asarray(0.5),
+             "alpha_r": jnp.asarray(0.1)})
+    return params
+
+
+def _q_w(w, alpha, spec: QatSpec):
+    if spec.weight_bsl is None:
+        return w
+    half = spec.weight_bsl // 2
+    return lsq_fake_quant(w, alpha, -half, half)
+
+
+def _q_a(x, alpha, spec: QatSpec):
+    if spec.act_bsl is None:
+        return x
+    return thermometer_act_quant(x, alpha, spec.act_bsl)
+
+
+def mlp_forward(params: dict, x: jax.Array, spec: QatSpec) -> jax.Array:
+    h = jax.nn.relu(x @ params["w_in"])
+    for blk in params["blocks"]:
+        xa = _q_a(h, blk["alpha_a"], spec)
+        wq = _q_w(blk["w"], blk["alpha_w"], spec)
+        y = jax.nn.relu(xa @ wq)
+        if spec.resid_bsl is not None:
+            # high-precision residual fusion (paper §III, Fig 6b)
+            r = lsq_fake_quant(h, blk["alpha_r"], -spec.resid_bsl // 2,
+                               spec.resid_bsl // 2)
+            h = y + r
+        else:
+            h = y
+    return h @ params["w_out"]
+
+
+def train_mlp(spec: QatSpec, steps: int = 250, batch: int = 256,
+              lr: float = 2e-3, seed: int = 0):
+    params = init_mlp(jax.random.key(seed), spec)
+    opt = adamw_init(params)
+
+    def loss_fn(p, b):
+        logits = mlp_forward(p, b["x"], spec)
+        oh = jax.nn.one_hot(b["y"], 10)
+        return -jnp.mean(jnp.sum(oh * jax.nn.log_softmax(logits), -1))
+
+    @jax.jit
+    def step(p, o, b, lr_t):
+        l, g = jax.value_and_grad(loss_fn)(p, b)
+        p, o = adamw_update(g, o, p, lr_t, weight_decay=0.0)
+        return p, o, l
+
+    for i in range(steps):
+        b = DATASET.batch(i, batch)
+        lr_t = lr * min(1.0, (i + 1) / 20)
+        params, opt, _ = step(params, opt, b, lr_t)
+    return params
+
+
+def eval_mlp(params: dict, spec: QatSpec, n_batches: int = 10,
+             batch: int = 512) -> float:
+    correct = total = 0
+    for i in range(n_batches):
+        b = DATASET.batch(10_000 + i, batch)     # held-out step range
+        logits = mlp_forward(params, b["x"], spec)
+        correct += int(jnp.sum(jnp.argmax(logits, -1) == b["y"]))
+        total += batch
+    return correct / total

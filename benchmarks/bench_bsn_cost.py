@@ -1,0 +1,113 @@
+"""Fig 9 + Table V + Fig 4: BSN hardware cost model.
+
+Fig 9a: superlinear cost vs accumulation width; Fig 9b: ADP overhead of a
+max-width BSN on small layers. Table V: baseline vs spatial vs
+spatial-temporal approximate BSN for the 3x3x512 conv (4608 products,
+9216 bits), with bit-exact MSE. Fig 4: TOPS/W vs voltage (energy model
+calibrated at 198.9 TOPS/W @ 0.65 V).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hwmodel
+from repro.core.bsn import (ApproxBSNSpec, StageSpec, SubSampleSpec,
+                            approx_bsn_counts, spatial_temporal_counts)
+
+# Table V workload: 3x3x512 conv = 4608 2-bit products
+WIDTH, IN_BSL = 4608, 2
+
+# spatial spec: stage1 sorts groups of 64 (128 bits) and clips the
+# near-empty tails (Fig 11: sum of 64 ternary products has sigma~4.5, the
+# +-16 window covers 3.5 sigma); stage2 merges 72 compressed codes,
+# keeping a +-128 window (3.3 sigma of the 4608-wide sum) at stride 8.
+SPATIAL = ApproxBSNSpec(
+    width=WIDTH, in_bsl=IN_BSL,
+    stages=(StageSpec(64, SubSampleSpec(clip=48, stride=1)),
+            StageSpec(72, SubSampleSpec(clip=1024, stride=8))))
+# temporal: 512-wide spatial pipeline reused over 9 cycles (Fig 12)
+SP_TEMPORAL = ApproxBSNSpec(
+    width=512, in_bsl=IN_BSL,
+    stages=(StageSpec(64, SubSampleSpec(clip=48, stride=1)),
+            StageSpec(8, SubSampleSpec(clip=72, stride=8))))
+ST_CYCLES = 9
+
+
+def measured_mse(spec: ApproxBSNSpec, cycles: int = 1,
+                 n: int = 4096, seed: int = 0) -> float:
+    """Bit-exact MSE of the approximate BSN vs the exact sum, on the
+    near-Gaussian product distribution of Fig 11 (value scale: the sum is
+    normalized by width so MSE is comparable to the paper's ~1e-7)."""
+    key = jax.random.key(seed)
+    width = spec.width * cycles
+    # ternary products of quantized gaussians: mostly zeros, few +-1
+    probs = jnp.asarray([0.16, 0.68, 0.16])
+    vals = jax.random.choice(key, jnp.asarray([-1, 0, 1]), (n, width),
+                             p=probs)
+    counts = vals + IN_BSL // 2
+    exact = jnp.sum(vals, axis=-1)
+    if cycles == 1:
+        out = approx_bsn_counts(counts, spec)
+        approx = spec.scale * (out - spec.out_bsl // 2)
+    else:
+        out = spatial_temporal_counts(counts, spec, cycles)
+        approx = spec.scale * (out - cycles * spec.out_bsl // 2)
+    err = (approx - exact).astype(jnp.float32) / width
+    return float(jnp.mean(err * err))
+
+
+def run() -> list[tuple]:
+    rows = []
+    t0 = time.time()
+
+    # Fig 9a: superlinear growth
+    for w in (576, 1152, 2304, 4608, 9216):
+        c = hwmodel.bsn_cost(w * IN_BSL)
+        rows.append((f"fig9a_bsn_w{w}", 0.0,
+                     f"area={c.area_um2:.4g}um2 delay={c.delay_ns:.3f}ns "
+                     f"adp={c.adp:.4g}"))
+    # Fig 9b: big BSN on small accumulation
+    big = hwmodel.bsn_cost(9216)
+    small = hwmodel.bsn_cost(576 * IN_BSL)
+    rows.append(("fig9b_overhead_small_on_big", 0.0,
+                 f"adp_overhead={big.adp / small.adp:.1f}x"))
+
+    # Table V
+    base = hwmodel.bsn_cost(WIDTH * IN_BSL)
+    spat = hwmodel.approx_bsn_cost(SPATIAL)
+    st = hwmodel.spatial_temporal_cost(SP_TEMPORAL, ST_CYCLES)
+    mse_s = measured_mse(SPATIAL)
+    mse_st = measured_mse(SP_TEMPORAL, ST_CYCLES)
+    rows.append(("tableV_baseline", 0.0,
+                 f"area={base.area_um2:.3e} delay={base.delay_ns:.2f} "
+                 f"adp={base.adp:.3e} (paper 2.95e5/4.33/1.26e6)"))
+    rows.append(("tableV_spatial", 0.0,
+                 f"area={spat.area_um2:.3e} delay={spat.delay_ns:.2f} "
+                 f"adp={spat.adp:.3e} adp_red={base.adp / spat.adp:.1f}x "
+                 f"mse={mse_s:.2e} (paper 2.8x, 3.79e-7)"))
+    st_adp_throughput = st.area_um2 * ST_CYCLES * st.delay_ns
+    rows.append(("tableV_spatial_temporal", 0.0,
+                 f"area={st.area_um2:.3e} delay={st.delay_ns:.2f} "
+                 f"adp_iso_throughput={st_adp_throughput:.3e} "
+                 f"adp_red={base.adp / st_adp_throughput:.1f}x "
+                 f"mse={mse_st:.2e} (paper 4.1x)"))
+
+    # Fig 4: energy model
+    for v in (0.55, 0.65, 0.75, 0.9):
+        rows.append((f"fig4_tops_per_watt_{v}V", 0.0,
+                     f"{hwmodel.tops_per_watt(2, v):.1f} TOPS/W"))
+    rows.append(("fig4_peak_calibration", 0.0,
+                 f"{hwmodel.tops_per_watt(2, 0.65):.1f} TOPS/W "
+                 "(paper: 198.9 @ 0.65V/200MHz)"))
+    us = (time.time() - t0) * 1e6 / len(rows)
+    return [(n, us, d) for n, _, d in rows]
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

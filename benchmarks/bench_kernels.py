@@ -1,0 +1,81 @@
+"""Kernel micro-benchmarks: ternary_matmul (+ fused SI) and bsn_sort.
+
+On this CPU container the Pallas kernels run in interpret mode, so
+us_per_call is a correctness-path number, NOT TPU performance; the derived
+column reports the MXU-model FLOPs and the roofline-model time on v5e
+(int8 path, 394 TFLOP/s).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis.roofline import V5E
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, reps=3):
+    fn(*args).block_until_ready()          # compile + warm
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / reps * 1e6
+
+
+def run() -> list[tuple]:
+    rows = []
+    rng = np.random.default_rng(0)
+
+    for (m, k, n) in ((256, 1024, 256), (512, 2048, 512)):
+        x = jnp.asarray(rng.integers(-4, 5, (m, k)).astype(np.int8))
+        w = jnp.asarray(rng.integers(-1, 2, (k, n)).astype(np.int8))
+        us = _time(lambda a, b: ops.ternary_matmul(
+            a, b, min_flops_for_kernel=0, block_m=128, block_n=128,
+            block_k=256), x, w)
+        flops = 2 * m * k * n
+        t_v5e = flops / V5E.peak_flops_int8
+        ok = bool(jnp.array_equal(
+            ops.ternary_matmul(x, w, min_flops_for_kernel=0, block_m=128,
+                               block_n=128, block_k=256),
+            ref.ternary_matmul_ref(x, w)))
+        rows.append((f"ternary_matmul_{m}x{k}x{n}", us,
+                     f"exact={ok} flops={flops:.2e} "
+                     f"v5e_int8_roofline={t_v5e * 1e6:.2f}us"))
+
+    # fused SI epilogue variant
+    m, k, n, out_bsl = 256, 1024, 256, 16
+    x = jnp.asarray(rng.integers(-4, 5, (m, k)).astype(np.int8))
+    w = jnp.asarray(rng.integers(-1, 2, (k, n)).astype(np.int8))
+    t = jnp.sort(jnp.asarray(rng.integers(-k, k, (n, out_bsl)), jnp.int32),
+                 axis=-1)
+    us = _time(lambda a, b: ops.ternary_matmul(
+        a, b, t, min_flops_for_kernel=0, block_m=128, block_n=128,
+        block_k=256), x, w)
+    ok = bool(jnp.array_equal(
+        ops.ternary_matmul(x, w, t, min_flops_for_kernel=0, block_m=128,
+                           block_n=128, block_k=256),
+        ref.ternary_matmul_ref(x, w, t)))
+    rows.append((f"ternary_matmul_si_{m}x{k}x{n}", us,
+                 f"exact={ok} si_epilogue=fused(out_bsl={out_bsl})"))
+
+    for (r, length) in ((512, 512), (256, 2048)):
+        bits = jnp.asarray(rng.integers(0, 2, (r, length)).astype(np.int8))
+        us = _time(lambda b: ops.bsn_sort(b, min_rows_for_kernel=0,
+                                          block_r=128), bits)
+        ok = bool(jnp.array_equal(
+            ops.bsn_sort(bits, min_rows_for_kernel=0, block_r=128),
+            ref.bsn_sort_ref(bits)))
+        levels = int(np.log2(length)) * (int(np.log2(length)) + 1) // 2
+        rows.append((f"bsn_sort_{r}x{length}", us,
+                     f"exact={ok} compare_exchange_levels={levels}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

@@ -1,0 +1,41 @@
+"""Fig 8 + Fig 6: high-precision residual recovers the activation cliff.
+
+Paper: +8.69pp (CIFAR10) / +8.12pp (CIFAR100) from the 16-bit-BSL
+residual on a 2-2 datapath; 16b residual ~= FP residual (Fig 8b).
+"""
+
+from __future__ import annotations
+
+import time
+
+from ._qat_mlp import QatSpec, eval_mlp, train_mlp
+
+CASES = [
+    ("w2a2_no_residual", QatSpec(2, 2, resid_bsl=None)),
+    ("w2a2_r4", QatSpec(2, 2, resid_bsl=4)),
+    ("w2a2_r16", QatSpec(2, 2, resid_bsl=16)),
+    ("w2a2_r_fp", QatSpec(2, 2, resid_bsl=1 << 20)),   # effectively float
+]
+
+
+def run() -> list[tuple]:
+    rows, accs = [], {}
+    for name, spec in CASES:
+        t0 = time.time()
+        params = train_mlp(spec, steps=250, seed=1)
+        acc = eval_mlp(params, spec)
+        accs[name] = acc
+        rows.append((f"fig8_{name}", (time.time() - t0) * 1e6,
+                     f"top1={acc * 100:.2f}%"))
+    gain = accs["w2a2_r16"] - accs["w2a2_no_residual"]
+    vs_fp = accs["w2a2_r_fp"] - accs["w2a2_r16"]
+    rows.append(("fig8_claim", 0.0,
+                 f"r16_gain={gain * 100:.2f}pp "
+                 f"r16_vs_fp_residual={vs_fp * 100:.2f}pp "
+                 f"(paper: +8.69pp, ~0pp)"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

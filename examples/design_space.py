@@ -1,0 +1,107 @@
+"""Approximate-BSN design-space exploration (paper Fig 10b / §IV).
+
+Sweeps the parameterized BSN space (clip window x sampling stride x
+temporal fold) for a given accumulation width, bit-exactly measures each
+config's MSE, prices it with the calibrated gate model, and prints the
+ADP-vs-MSE Pareto front — the co-design loop a hardware team would run
+per layer.
+
+    PYTHONPATH=src python examples/design_space.py --width 4608
+"""
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hwmodel
+from repro.core.bsn import (ApproxBSNSpec, StageSpec, SubSampleSpec,
+                            approx_bsn_counts, spatial_temporal_counts)
+
+IN_BSL = 2
+
+
+def measure_mse(spec, cycles, n=2048, seed=0):
+    key = jax.random.key(seed)
+    width = spec.width * cycles
+    vals = jax.random.choice(key, jnp.asarray([-1, 0, 1]), (n, width),
+                             p=jnp.asarray([0.16, 0.68, 0.16]))
+    counts = vals + 1
+    exact = jnp.sum(vals, -1)
+    if cycles == 1:
+        out = approx_bsn_counts(counts, spec)
+        approx = spec.scale * (out - spec.out_bsl // 2)
+    else:
+        out = spatial_temporal_counts(counts, spec, cycles)
+        approx = spec.scale * (out - cycles * spec.out_bsl // 2)
+    err = (approx - exact).astype(jnp.float32) / width
+    return float(jnp.mean(err * err))
+
+
+def candidates(width):
+    """(spec, cycles) grid over clip-window sigmas, strides, folds."""
+    out = []
+    for fold in (1, 4, 9):
+        w = width // fold
+        if w * fold != width or w % 64:
+            continue
+        m = w // 64
+        sigma = (w * 0.32) ** 0.5
+        for stride in (2, 4, 8):
+            for nsig in (2.0, 3.0, 4.0):
+                sorted2 = m * 32
+                win = int(min(nsig * sigma, sorted2 // 2))
+                win = max(stride, win // stride * stride)
+                clip = (sorted2 - 2 * win) // 2
+                if clip < 0:
+                    continue
+                try:
+                    spec = ApproxBSNSpec(
+                        width=w, in_bsl=IN_BSL,
+                        stages=(StageSpec(64, SubSampleSpec(48, 1)),
+                                StageSpec(m, SubSampleSpec(clip, stride))))
+                except ValueError:
+                    continue
+                out.append((spec, fold, stride, nsig))
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--width", type=int, default=4608)
+    args = ap.parse_args()
+
+    base = hwmodel.bsn_cost(args.width * IN_BSL)
+    print(f"[dse] width {args.width}: baseline BSN adp={base.adp:.3e} "
+          f"(area {base.area_um2:.3e} um2)")
+
+    results = []
+    for spec, fold, stride, nsig in candidates(args.width):
+        if fold == 1:
+            cost = hwmodel.approx_bsn_cost(spec)
+            adp = cost.adp
+        else:
+            cost = hwmodel.spatial_temporal_cost(spec, fold)
+            adp = cost.area_um2 * fold * cost.delay_ns
+        mse = measure_mse(spec, fold)
+        results.append((adp, mse, fold, stride, nsig, spec))
+
+    # Pareto front on (adp, mse)
+    results.sort()
+    front, best_mse = [], float("inf")
+    for r in results:
+        if r[1] < best_mse:
+            front.append(r)
+            best_mse = r[1]
+
+    print(f"[dse] {len(results)} configs, Pareto front:")
+    print("   adp_red   mse        fold stride clip_sigma  out_bsl")
+    for adp, mse, fold, stride, nsig, spec in front:
+        print(f"   {base.adp / adp:6.1f}x  {mse:.2e}  {fold:4d} {stride:5d} "
+              f"{nsig:9.1f}  {spec.out_bsl:6d}")
+    print("[dse] pick per accuracy budget; bench_approx_bsn.py locks the "
+          "paper's Table V / Fig 13 operating points")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,96 @@
+"""Serve a trained model on the integer SC datapath (what the silicon runs).
+
+1. QAT-trains the paper's TNN MLP (784-256-256-10) on the synthetic set;
+2. exports every layer to ternary int8 weights + SI threshold tables
+   (BN/activation fused into the selective interconnect);
+3. serves batched requests through the Pallas ``ternary_matmul`` kernel
+   (fused SI epilogue), verifying the integer path against the QAT model.
+
+    PYTHONPATH=src:. python examples/serve_sc.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks._qat_mlp import DATASET, QatSpec, eval_mlp, train_mlp
+from repro.core import si
+from repro.core.coding import quantize_levels
+from repro.kernels import ops
+
+SPEC = QatSpec(weight_bsl=2, act_bsl=8, resid_bsl=None)
+ACT_BSL = 8
+
+
+def export_int_model(params):
+    """QAT params -> integer datapath: int8 ternary weights + SI tables."""
+    layers = []
+    for blk in params["blocks"]:
+        w = np.asarray(blk["w"], np.float32)
+        aw = float(blk["alpha_w"])
+        aa = float(blk["alpha_a"])
+        w_int = np.clip(np.round(w / aw), -1, 1).astype(np.int8)
+        sum_max = w.shape[0] * ACT_BSL // 2
+        # SI realizes ReLU + requantization to the next layer's alpha_a
+        t_counts = si.si_thresholds(si.relu_fn, 2 * sum_max, ACT_BSL,
+                                    alpha_in=aa * aw, alpha_out=aa)
+        t_q = (t_counts.astype(np.int64) - sum_max).astype(np.int32)
+        layers.append({"w_int": jnp.asarray(w_int),
+                       "thresholds_q": jnp.asarray(
+                           np.tile(t_q, (w.shape[1], 1))),
+                       "alpha_a": aa})
+    return layers
+
+
+def serve_batch(params, int_layers, x):
+    """float input -> frontend (float) -> SC integer core -> logits."""
+    h = jax.nn.relu(x @ params["w_in"])                 # frontend stays fp
+    alpha_a = int_layers[0]["alpha_a"]
+    x_q = quantize_levels(h, alpha_a, ACT_BSL).astype(jnp.int8)
+    for layer in int_layers:                            # the SC silicon part
+        out_q = ops.ternary_matmul(x_q, layer["w_int"],
+                                   layer["thresholds_q"],
+                                   min_flops_for_kernel=0,
+                                   block_m=128, block_n=128, block_k=128)
+        x_q = out_q.astype(jnp.int8)                    # thermometer q codes
+    h = x_q.astype(jnp.float32) * int_layers[-1]["alpha_a"]
+    return h @ params["w_out"]                          # classifier head fp
+
+
+def main():
+    print("[serve_sc] QAT-training the TNN (W2-A8)...")
+    params = train_mlp(SPEC, steps=250, seed=0)
+    acc_qat = eval_mlp(params, SPEC)
+    print(f"[serve_sc] QAT accuracy: {acc_qat * 100:.2f}%")
+
+    int_layers = export_int_model(params)
+    n_int8 = sum(int(l["w_int"].size) for l in int_layers)
+    print(f"[serve_sc] exported {len(int_layers)} SC layers, "
+          f"{n_int8 / 1e3:.0f}k ternary weights, SI tables fused")
+
+    # batched serving through the Pallas kernel (interpret mode on CPU)
+    correct = total = 0
+    lat = []
+    for i in range(4):
+        b = DATASET.batch(30_000 + i, 256)
+        t0 = time.time()
+        logits = serve_batch(params, int_layers, b["x"])
+        logits.block_until_ready()
+        lat.append((time.time() - t0) * 1e3)
+        correct += int(jnp.sum(jnp.argmax(logits, -1) == b["y"]))
+        total += 256
+    print(f"[serve_sc] integer-datapath accuracy: {correct / total * 100:.2f}%"
+          f" (QAT reference {acc_qat * 100:.2f}%)")
+    print(f"[serve_sc] batch-256 latency: first {lat[0]:.1f} ms (compile), "
+          f"steady {np.mean(lat[1:]):.1f} ms on CPU-interpret — "
+          "the TPU path compiles the same pallas_call natively")
+    drop = acc_qat - correct / total
+    assert drop < 0.02, f"integer path diverged from QAT by {drop:.3f}"
+    print("[serve_sc] OK: silicon-equivalent datapath matches QAT within "
+          f"{drop * 100:.2f}pp")
+
+
+if __name__ == "__main__":
+    main()

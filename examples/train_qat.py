@@ -1,0 +1,67 @@
+"""End-to-end driver: SC-QAT train a (reduced) zoo LM for a few hundred
+steps on the synthetic Markov language, with checkpoint/restart.
+
+This is launch/train.py exercised as a library — the same pjit'd
+train_step that the multi-pod dry-run lowers, here on one CPU device with
+a granite-family model reduced to ~15M params.
+
+    PYTHONPATH=src python examples/train_qat.py [--steps 300]
+"""
+
+import argparse
+import os
+import tempfile
+
+import jax
+
+from repro.configs import get_arch
+from repro.data import SyntheticLM
+from repro.models import init_params
+from repro.optim import warmup_cosine
+from repro.train import build_train_step, init_train_state, run_training
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=128)
+    args = ap.parse_args()
+
+    cfg = get_arch("granite-3-2b").scaled(
+        n_layers=4, d_model=256, n_heads=8, n_kv_heads=4, d_ff=512,
+        vocab_size=512, vocab_pad_multiple=64, dtype="float32",
+        attn_q_chunk=64)
+    print(f"[train_qat] {cfg.name} reduced: {cfg.n_layers}L d={cfg.d_model} "
+          f"quant={cfg.quant.mode} (W{cfg.quant.weight_bsl}-"
+          f"A{cfg.quant.act_bsl}-R{cfg.quant.resid_bsl})")
+
+    params = init_params(jax.random.key(0), cfg)
+    n = sum(p.size for p in jax.tree.leaves(params))
+    print(f"[train_qat] {n / 1e6:.1f}M params")
+    state = init_train_state(params, cfg)
+
+    ds = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=args.seq, seed=0)
+    step_fn = jax.jit(build_train_step(
+        cfg, lambda s: warmup_cosine(s, 2e-3, 20, args.steps)),
+        donate_argnums=0)
+
+    ckpt = os.path.join(tempfile.mkdtemp(), "ckpt")
+    os.makedirs(ckpt, exist_ok=True)
+    state, hist = run_training(
+        step_fn, state, lambda s: ds.batch(s, args.batch), args.steps,
+        ckpt_dir=ckpt, ckpt_every=100,
+        log_every=max(args.steps // 15, 1))
+
+    floor = ds.entropy_floor()
+    first, last = hist[0]["loss"], hist[-1]["loss"]
+    print(f"[train_qat] loss {first:.3f} -> {last:.3f} "
+          f"(entropy floor of the synthetic language: {floor:.3f})")
+    print(f"[train_qat] checkpoints in {ckpt} — rerun resumes from the "
+          "latest step (kill -TERM to test preemption safety)")
+    assert last < first - 0.5, "SC-QAT LM failed to learn"
+    print("[train_qat] OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""repro: end-to-end stochastic-computing acceleration framework in JAX.
+
+Reproduction + TPU adaptation of "Efficient yet Accurate End-to-End SC
+Accelerator Design" (Li et al., 2024). See DESIGN.md.
+"""
+
+__version__ = "1.0.0"

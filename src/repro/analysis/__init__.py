@@ -1,0 +1,7 @@
+"""Roofline analysis from compiled dry-run artifacts."""
+
+from .hlo_cost import HloCost, analyze_hlo
+from .roofline import RooflineReport, V5E, roofline_from_compiled
+
+__all__ = ["HloCost", "analyze_hlo", "RooflineReport", "V5E",
+           "roofline_from_compiled"]

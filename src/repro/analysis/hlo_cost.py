@@ -1,0 +1,424 @@
+"""Trip-count-aware HLO cost model (the dry-run "profiler").
+
+``compiled.cost_analysis()`` counts each ``while`` body ONCE — a 94-layer
+scan-over-layers model would be undercounted ~94x, and flash-attention /
+selective-scan / token-scan bodies compound the error (verified
+empirically; see EXPERIMENTS.md §Roofline methodology).  This module
+re-derives FLOPs / HBM bytes / collective wire-bytes by walking the
+post-SPMD HLO text:
+
+* ``while`` ops multiply their (body + cond) cost by the trip count,
+  recovered from the loop-bound ``s32 constant`` in the condition
+  computation (jax scans always lower to counted loops);
+* ``fusion`` ops contribute their *internal* FLOPs but only their
+  boundary bytes (VMEM-resident intermediates don't touch HBM);
+* collectives are tallied separately with a ring-model wire-bytes
+  estimate using the replica-group size.
+
+All shapes in a post-partitioning module are per-shard, so every number
+this produces is PER-DEVICE.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+__all__ = ["HloCost", "analyze_hlo", "parse_computations"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2,
+    "f32": 4, "f64": 8, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+    "token": 0, "opaque": 0,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# ops costed at ~1 flop per output element (everything heavier is dot/conv)
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "power",
+    "exponential", "tanh", "logistic", "log", "rsqrt", "sqrt", "negate",
+    "abs", "floor", "ceil", "round-nearest-afz", "compare", "select",
+    "and", "or", "xor", "not", "clamp", "sign", "cosine", "sine", "atan2",
+    "expm1", "log1p", "reduce", "reduce-window", "erf",
+}
+
+
+@dataclass
+class Instr:
+    name: str
+    type_str: str
+    op: str
+    operands: list[str]
+    attrs: str
+
+
+@dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: dict = field(default_factory=dict)   # kind -> wire bytes
+    collective_count: int = 0
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+    def add(self, other: "HloCost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        for k, v in other.collective_bytes.items():
+            self.collective_bytes[k] = self.collective_bytes.get(k, 0.0) \
+                + v * mult
+        self.collective_count += int(other.collective_count * mult)
+
+
+# ---------------------------------------------------------------------------
+# parsing
+# ---------------------------------------------------------------------------
+
+def _shape_bytes(type_str: str) -> float:
+    """Bytes of one (possibly tuple) HLO type string."""
+    total = 0.0
+    # tuple: sum each component
+    for m in re.finditer(r"([a-z][a-z0-9]*)\[([\d,]*)\]", type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> list[int]:
+    m = re.search(r"[a-z][a-z0-9]*\[([\d,]*)\]", type_str)
+    if not m or not m.group(1):
+        return []
+    return [int(d) for d in m.group(1).split(",")]
+
+
+def _match_paren(s: str, start: int) -> int:
+    """Index of the paren matching s[start] == '('."""
+    depth = 0
+    for i in range(start, len(s)):
+        if s[i] == "(":
+            depth += 1
+        elif s[i] == ")":
+            depth -= 1
+            if depth == 0:
+                return i
+    return len(s) - 1
+
+
+def _parse_instr(line: str) -> Instr | None:
+    """Manual instruction parser — regexes break on tuple types that embed
+    ``/*index=5*/`` comments (i.e. every big while loop's carry)."""
+    s = line.strip()
+    if s.startswith("ROOT "):
+        s = s[5:]
+    if not s.startswith("%"):
+        return None
+    eq = s.find(" = ")
+    if eq < 0:
+        return None
+    name = s[1:eq].strip()
+    rest = s[eq + 3:]
+    if rest.startswith("("):                      # tuple type
+        close = _match_paren(rest, 0)
+        tstr, rest2 = rest[:close + 1], rest[close + 1:].lstrip()
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        tstr, rest2 = rest[:sp], rest[sp + 1:].lstrip()
+    par = rest2.find("(")
+    if par <= 0:
+        return None
+    op = rest2[:par].strip()
+    if not re.fullmatch(r"[\w\-]+", op):
+        return None
+    close = _match_paren(rest2, par)
+    operands = [o.strip().lstrip("%")
+                for o in _split_operands(rest2[par + 1:close])]
+    attrs = rest2[close + 1:]
+    return Instr(name, tstr, op, operands, attrs)
+
+
+def parse_computations(text: str) -> dict[str, list[Instr]]:
+    comps: dict[str, list[Instr]] = {}
+    current: list[Instr] | None = None
+    for line in text.splitlines():
+        header = re.match(r"^\s*(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*{",
+                          line)
+        if header and not line.lstrip().startswith("//"):
+            current = []
+            comps[header.group(1)] = current
+            if "ENTRY" in line:
+                comps["__entry__"] = current
+            continue
+        if current is None:
+            continue
+        ins = _parse_instr(line)
+        if ins is not None:
+            current.append(ins)
+    return comps
+
+
+def _split_operands(s: str) -> list[str]:
+    out, depth, cur = [], 0, []
+    for ch in s:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        out.append("".join(cur))
+    return [o for o in (x.strip() for x in out) if o]
+
+
+# ---------------------------------------------------------------------------
+# cost walk
+# ---------------------------------------------------------------------------
+
+def _trip_count(cond: list[Instr]) -> int:
+    """Loop bound = the largest s32 constant in the condition computation.
+    jax counted loops compare the induction var LT bound."""
+    best = 1
+    for ins in cond:
+        if ins.op == "constant" and "s32[]" in ins.type_str:
+            m = re.search(r"constant\((\d+)\)", f"{ins.op}({ins.operands[0] if ins.operands else ''})")
+            val = None
+            if ins.operands and ins.operands[0].isdigit():
+                val = int(ins.operands[0])
+            if val is not None:
+                best = max(best, val)
+    return best
+
+
+def _group_size(attrs: str) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", attrs)
+    if m:
+        return max(int(m.group(2)), 1)
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", attrs)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+
+def _collective_wire_bytes(op: str, result_bytes: float, g: int) -> float:
+    """Ring-model per-device wire bytes from the (local) result shape."""
+    if g <= 1:
+        return 0.0
+    if op == "all-reduce":
+        return 2.0 * result_bytes * (g - 1) / g
+    if op == "all-gather":
+        return result_bytes * (g - 1) / g
+    if op == "reduce-scatter":
+        return result_bytes * (g - 1)
+    if op == "all-to-all":
+        return result_bytes * (g - 1) / g
+    if op == "collective-permute":
+        return result_bytes
+    return 0.0
+
+
+def _dot_flops(ins: Instr, types: dict[str, str]) -> float:
+    out_elems = 1
+    for d in _shape_dims(ins.type_str):
+        out_elems *= d
+    lhs = types.get(ins.operands[0]) if ins.operands else None
+    contraction = 1
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.attrs)
+    if lhs and m and m.group(1):
+        dims = _shape_dims(lhs)
+        for idx in m.group(1).split(","):
+            i = int(idx)
+            if i < len(dims):
+                contraction *= dims[i]
+    return 2.0 * out_elems * contraction
+
+
+def _conv_flops(ins: Instr, types: dict[str, str]) -> float:
+    out_elems = 1
+    for d in _shape_dims(ins.type_str):
+        out_elems *= d
+    rhs = types.get(ins.operands[1]) if len(ins.operands) > 1 else None
+    k = 1
+    if rhs:
+        for d in _shape_dims(rhs):
+            k *= d
+    # per output element: 2 * kernel_elems / out_channels (approximation)
+    dims = _shape_dims(ins.type_str)
+    oc = dims[-1] if dims else 1
+    return 2.0 * out_elems * max(k // max(oc, 1), 1)
+
+
+def _fusion_boundary_bytes(body: list[Instr], result_bytes: float) -> float:
+    """HBM traffic at a fusion boundary, region-aware.
+
+    A loop-body fusion often takes the WHOLE carried buffer as an operand
+    and slices it internally — the real read is the slice, not the buffer.
+    Rule: an internal parameter consumed ONLY by slice/dynamic-slice/gather
+    contributes its consumers' result bytes; otherwise its full size.
+    Symmetrically, a fusion whose root is dynamic-update-slice writes only
+    the update region (the output aliases the input buffer).
+    """
+    if not body:
+        return result_bytes
+    by_name = {i.name: i for i in body}
+    types = {i.name: i.type_str for i in body}
+    consumers: dict[str, list[Instr]] = {}
+    for ins in body:
+        for o in ins.operands:
+            consumers.setdefault(o, []).append(ins)
+
+    _PASS = ("convert", "bitcast", "copy", "reshape", "transpose")
+    # XLA-CPU artifact: bf16 dus lowers as convert(full) -> dus f32 ->
+    # convert(full); on TPU the dus is native.  Seeing through pass-through
+    # chains keeps the TPU roofline honest.
+
+    def final_consumers(name, depth=0):
+        out = []
+        if depth > 6:
+            return out
+        for c in consumers.get(name, []):
+            if c.op in _PASS:
+                out += final_consumers(c.name, depth + 1)
+            else:
+                out.append((c, name))
+        return out
+
+    total = 0.0
+    for ins in body:
+        if ins.op != "parameter":
+            continue
+        fc = final_consumers(ins.name)
+        if fc and all(c.op in ("dynamic-slice", "slice", "gather")
+                      for c, _ in fc):
+            total += sum(_shape_bytes(c.type_str) for c, _ in fc)
+        elif fc and all(c.op == "dynamic-update-slice"
+                        and c.operands and c.operands[0] == via
+                        for c, via in fc):
+            # in-place update target: aliased, traffic = update region
+            # (region read+write accounted at the root below)
+            pass
+        else:
+            total += _shape_bytes(ins.type_str)
+    root = body[-1]
+    while root.op in _PASS and root.operands and root.operands[0] in by_name:
+        root = by_name[root.operands[0]]
+    if root.op == "dynamic-update-slice" and len(root.operands) > 1:
+        total += 2 * _shape_bytes(types.get(root.operands[1], ""))
+    else:
+        total += result_bytes
+    return total
+
+
+def _cost_of(comp_name: str, comps: dict, memo: dict) -> HloCost:
+    if comp_name in memo:
+        return memo[comp_name]
+    cost = HloCost()
+    instrs = comps.get(comp_name, [])
+    types = {i.name: i.type_str for i in instrs}
+
+    for ins in instrs:
+        rb = _shape_bytes(ins.type_str)
+        ob = sum(_shape_bytes(types.get(o, "")) for o in ins.operands)
+
+        if ins.op == "while":
+            body = re.search(r"body=%?([\w\.\-]+)", ins.attrs)
+            cond = re.search(r"condition=%?([\w\.\-]+)", ins.attrs)
+            trips = _trip_count(comps.get(cond.group(1), [])) if cond else 1
+            if body:
+                cost.add(_cost_of(body.group(1), comps, memo), trips)
+            if cond:
+                cost.add(_cost_of(cond.group(1), comps, memo), trips)
+        elif ins.op == "fusion":
+            called = re.search(r"calls=%?([\w\.\-]+)", ins.attrs)
+            if called:
+                inner = _cost_of(called.group(1), comps, memo)
+                # fusion: internal flops count, internal bytes don't
+                cost.flops += inner.flops
+                for k, v in inner.collective_bytes.items():
+                    cost.collective_bytes[k] = \
+                        cost.collective_bytes.get(k, 0.0) + v
+                cost.bytes += _fusion_boundary_bytes(
+                    comps.get(called.group(1), []), rb)
+            else:
+                cost.bytes += rb + ob
+        elif ins.op in ("call", "conditional", "async-start"):
+            for target in re.findall(
+                    r"(?:to_apply|calls|branch_computations=\{)[=%]*"
+                    r"([\w\.\-]+)", ins.attrs):
+                cost.add(_cost_of(target, comps, memo))
+            cost.bytes += rb + ob
+        elif ins.op in _COLLECTIVES:
+            g = _group_size(ins.attrs)
+            rb_wire = rb
+            # XLA:CPU promotes bf16 all-reduce accumulation to f32
+            # ("to_apply=%add.N.clone_promoted"); on the TPU target the
+            # wire stays bf16 — price it at its true width.
+            if "promoted" in ins.attrs:
+                rb_wire = rb / 2
+            wire = _collective_wire_bytes(ins.op, rb_wire, g)
+            cost.collective_bytes[ins.op] = \
+                cost.collective_bytes.get(ins.op, 0.0) + wire
+            cost.collective_count += 1
+            cost.bytes += rb + ob
+        elif ins.op == "dot":
+            cost.flops += _dot_flops(ins, types)
+            cost.bytes += rb + ob
+        elif ins.op == "convolution":
+            cost.flops += _conv_flops(ins, types)
+            cost.bytes += rb + ob
+        elif ins.op in ("parameter", "constant", "get-tuple-element",
+                        "tuple", "bitcast", "after-all", "reshape"):
+            pass                                    # free / aliasing
+        elif ins.op in ("dynamic-slice", "slice", "gather"):
+            # traffic = the touched region, NOT the sliced buffer
+            cost.bytes += 2 * rb
+        elif ins.op == "dynamic-update-slice":
+            upd = _shape_bytes(types.get(ins.operands[1], "")) \
+                if len(ins.operands) > 1 else rb
+            cost.bytes += 2 * upd                   # read+write region; aliased
+        elif ins.op == "scatter":
+            upd = _shape_bytes(types.get(ins.operands[2], "")) \
+                if len(ins.operands) > 2 else rb
+            cost.bytes += 3 * upd
+        elif ins.op in ("broadcast", "iota"):
+            cost.bytes += rb
+        elif ins.op in ("concatenate", "pad"):
+            cost.bytes += 2 * rb
+        else:
+            if ins.op in _ELEMENTWISE:
+                elems = 1
+                for d in _shape_dims(ins.type_str):
+                    elems *= d
+                cost.flops += elems
+            cost.bytes += rb + ob
+    memo[comp_name] = cost
+    return cost
+
+
+def analyze_hlo(text: str) -> HloCost:
+    """Per-device cost of a post-SPMD HLO module (see module docstring)."""
+    comps = parse_computations(text)
+    # cost every computation reachable from ENTRY only
+    if "__entry__" not in comps:
+        raise ValueError("no ENTRY computation found")
+    entry_name = [k for k, v in comps.items()
+                  if v is comps["__entry__"] and k != "__entry__"]
+    memo: dict[str, HloCost] = {}
+    total = HloCost()
+    total.add(_cost_of(entry_name[0], comps, memo))
+    return total

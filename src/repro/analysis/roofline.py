@@ -1,0 +1,163 @@
+"""Three-term roofline from a compiled dry-run artifact (deliverable g).
+
+    compute    = FLOPs_per_device / peak_FLOPS
+    memory     = HBM_bytes_per_device / HBM_bw
+    collective = wire_bytes_per_device / link_bw
+
+FLOPs/bytes come from the trip-count-aware HLO walk (hlo_cost.py);
+``compiled.cost_analysis()`` numbers are recorded alongside for reference
+(they undercount scan bodies — §Roofline methodology in EXPERIMENTS.md).
+Formula note: the assignment's ``collective_bytes / (chips x link_bw)``
+with *global* collective bytes equals our per-device wire bytes / link_bw
+— the same quantity, computed shard-locally.
+
+MODEL_FLOPS is the analytic 6·N·D (train) / 2·N·D (prefill/decode) with
+active-N for MoE; the ratio MODEL_FLOPS / HLO_FLOPS exposes remat /
+dispatch / quantization overhead.
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import asdict, dataclass, field
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+from .hlo_cost import HloCost, analyze_hlo
+
+__all__ = ["V5E", "RooflineReport", "roofline_from_compiled",
+           "count_params", "model_flops"]
+
+
+@dataclass(frozen=True)
+class HwSpec:
+    name: str
+    peak_flops_bf16: float
+    peak_flops_int8: float
+    hbm_bw: float
+    link_bw: float
+    hbm_bytes: float
+
+
+V5E = HwSpec(name="tpu-v5e", peak_flops_bf16=197e12,
+             peak_flops_int8=394e12, hbm_bw=819e9, link_bw=50e9,
+             hbm_bytes=16e9)
+
+
+# ---------------------------------------------------------------------------
+# analytic parameter / FLOP counts
+# ---------------------------------------------------------------------------
+
+def count_params(cfg: ModelConfig, active_only: bool = False) -> float:
+    """Analytic parameter count (matmul weights; norms/scales ignored)."""
+    d, dh = cfg.d_model, cfg.head_dim
+    total = 2.0 * cfg.padded_vocab * d              # embed + head
+    for spec in cfg.period:
+        if spec.mixer == "attn":
+            total_l = d * dh * (cfg.n_heads * 2 + cfg.n_kv_heads * 2)
+        elif spec.mixer == "mamba":
+            din, n, r = cfg.mamba_d_inner, cfg.mamba_d_state, cfg.dt_rank
+            total_l = d * 2 * din + din * (r + 2 * n) + r * din + din * d
+        elif spec.mixer == "rwkv6":
+            total_l = 5 * d * d                      # r,k,v,g,o
+        else:
+            total_l = 0
+        if spec.ffn == "dense":
+            total_l += d * cfg.d_ff * (3 if cfg.ffn_gated else 2)
+        elif spec.ffn == "moe":
+            e = (cfg.n_experts_per_tok if active_only else cfg.n_experts)
+            total_l += e * d * cfg.d_ff * (3 if cfg.ffn_gated else 2) \
+                + d * cfg.n_experts
+        elif spec.ffn == "rwkv_cmix":
+            total_l += d * cfg.d_ff * 2 + d * d
+        total += total_l * cfg.n_periods
+    return total
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """6·N_active·D train; 2·N_active·D forward (decode: D = new tokens)."""
+    n_active = count_params(cfg, active_only=True)
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.tokens
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.tokens
+    return 2.0 * n_active * shape.global_batch       # decode: 1 tok/seq
+
+
+# ---------------------------------------------------------------------------
+# report
+# ---------------------------------------------------------------------------
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    n_chips: int
+    # per-device, from the trip-count-aware HLO walk
+    flops_per_device: float
+    hbm_bytes_per_device: float
+    wire_bytes_per_device: float
+    collective_breakdown: dict
+    # raw XLA numbers for reference
+    xla_flops: float
+    xla_bytes: float
+    # memory fit
+    peak_hbm_bytes: float
+    argument_bytes: float
+    # terms (seconds)
+    t_compute: float = 0.0
+    t_memory: float = 0.0
+    t_collective: float = 0.0
+    # analytics
+    model_flops_total: float = 0.0
+    useful_flops_ratio: float = 0.0
+    bottleneck: str = ""
+    roofline_fraction: float = 0.0
+    fits_hbm: bool = True
+    note: str = ""
+
+    def finalize(self, hw: HwSpec):
+        self.t_compute = self.flops_per_device / hw.peak_flops_bf16
+        self.t_memory = self.hbm_bytes_per_device / hw.hbm_bw
+        self.t_collective = self.wire_bytes_per_device / hw.link_bw
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        self.bottleneck = max(terms, key=terms.get)
+        t_bound = max(terms.values())
+        if t_bound > 0:
+            # fraction of the dominant-bound time that is useful model math
+            useful_t = (self.model_flops_total / self.n_chips) \
+                / hw.peak_flops_bf16
+            self.roofline_fraction = min(useful_t / t_bound, 1.0)
+        if self.flops_per_device > 0:
+            self.useful_flops_ratio = (self.model_flops_total / self.n_chips) \
+                / self.flops_per_device
+        self.fits_hbm = self.peak_hbm_bytes <= hw.hbm_bytes
+        return self
+
+    def to_json(self) -> str:
+        return json.dumps(asdict(self), indent=1)
+
+
+def roofline_from_compiled(compiled, cfg: ModelConfig, shape: ShapeConfig,
+                           mesh_name: str, n_chips: int,
+                           hw: HwSpec = V5E) -> RooflineReport:
+    cost: HloCost = analyze_hlo(compiled.as_text())
+    ca = compiled.cost_analysis() or {}
+    ma = compiled.memory_analysis()
+    peak = getattr(ma, "peak_memory_in_bytes", 0) if ma else 0
+    args = getattr(ma, "argument_size_in_bytes", 0) if ma else 0
+    rep = RooflineReport(
+        arch=cfg.name, shape=shape.name, mesh=mesh_name, n_chips=n_chips,
+        flops_per_device=cost.flops,
+        hbm_bytes_per_device=cost.bytes,
+        wire_bytes_per_device=cost.total_collective_bytes,
+        collective_breakdown=dict(cost.collective_bytes),
+        xla_flops=float(ca.get("flops", 0.0)),
+        xla_bytes=float(ca.get("bytes accessed", 0.0)),
+        peak_hbm_bytes=float(peak) if peak else float(args),
+        argument_bytes=float(args),
+        model_flops_total=model_flops(cfg, shape),
+    )
+    return rep.finalize(hw)

@@ -1,0 +1,10 @@
+"""Default SC quantization for the assigned archs: the paper's co-design
+(ternary weights, thermometer activations, 16-bit-BSL residual) applied as
+W2-A8-R16 — act BSL 8 rather than the paper's CIFAR-scale 2, per §III's own
+accuracy-vs-BSL trade-off analysis at SOTA-model scale (DESIGN.md §3).
+"""
+
+from repro.core.sc_layers import SCQuantConfig
+
+DEFAULT_SC = SCQuantConfig(mode="sc_qat", weight_bsl=2, act_bsl=8,
+                           resid_bsl=16, per_channel=True)

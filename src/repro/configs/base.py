@@ -1,0 +1,183 @@
+"""Model / shape / run configuration system.
+
+``ModelConfig`` describes an architecture as a *period* of layers (a layer
+pattern repeated ``n_periods`` times) so heterogeneous stacks (Jamba's
+1-attention:7-mamba interleave with alternating MoE) stack-scan exactly
+like homogeneous ones.  ``ShapeConfig`` is one (seq_len, global_batch,
+kind) cell of the assignment; ``RunConfig`` bundles everything a launcher
+needs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field, replace
+
+from repro.core.sc_layers import SC_OFF, SCQuantConfig
+
+__all__ = [
+    "LayerSpec",
+    "ModelConfig",
+    "ShapeConfig",
+    "SHAPES",
+    "shape_by_name",
+    "register_arch",
+    "get_arch",
+    "list_archs",
+]
+
+
+@dataclass(frozen=True)
+class LayerSpec:
+    """One layer within the repeating period."""
+    mixer: str = "attn"        # attn | mamba | rwkv6 | none
+    ffn: str = "dense"         # dense | moe | rwkv_cmix | none
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                 # dense | moe | ssm | hybrid | encoder | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    d_head: int = 0             # 0 -> d_model // n_heads
+    period: tuple[LayerSpec, ...] = (LayerSpec(),)
+    # normalization / activations
+    norm: str = "rmsnorm"       # rmsnorm | layernorm
+    ffn_act: str = "silu"       # silu | gelu | relu2 | relu
+    ffn_gated: bool = True
+    # positional
+    rope_theta: float = 10000.0
+    rope_fraction: float = 1.0  # stablelm-2 uses 0.25
+    causal: bool = True         # encoders: False
+    qk_norm: bool = False       # qwen3 per-head q/k RMSNorm
+    # MoE
+    n_experts: int = 0
+    n_experts_per_tok: int = 0
+    moe_capacity_factor: float = 1.25
+    # SSM (mamba)
+    mamba_expand: int = 2
+    mamba_d_state: int = 16
+    mamba_d_conv: int = 4
+    mamba_dt_rank: int = 0      # 0 -> ceil(d_model / 16)
+    # RWKV
+    rwkv_head_dim: int = 64
+    rwkv_lora_w: int = 0        # 0 -> d_model // 32 (decay lora rank)
+    rwkv_wkv_impl: str = "scan" # scan (token recurrence) | chunked (GLA
+                                # quasi-matmul form — §Perf cell B)
+    rwkv_chunk: int = 32
+    # frontend stub (vlm / audio): inputs arrive as embeddings
+    frontend: str = "none"      # none | vision_stub | audio_stub
+    # output
+    tie_embeddings: bool = False
+    logit_softcap: float = 0.0
+    # quantization (the paper's technique)
+    quant: SCQuantConfig = SC_OFF
+    # numerics / memory
+    dtype: str = "bfloat16"
+    opt_state_dtype: str = "float32"   # jamba-398b uses bfloat16 to fit HBM
+    remat: str = "full"         # full | none  (per-layer remat policy)
+    attn_q_chunk: int = 1024    # flash-attention scan block sizes
+    attn_kv_chunk: int = 1024
+    ce_chunks: int = 0          # >0: chunked cross-entropy (never
+                                # materializes (B,S,V) logits — §Perf)
+    mamba_chunk: int = 64
+    moe_group_size: int = 1024  # tokens per dispatch group (GShard-style)
+    # vocab padding for TP (actual table size rounded up)
+    vocab_pad_multiple: int = 256
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_head if self.d_head else self.d_model // self.n_heads
+
+    @property
+    def n_periods(self) -> int:
+        assert self.n_layers % len(self.period) == 0, \
+            f"{self.name}: n_layers {self.n_layers} % period {len(self.period)}"
+        return self.n_layers // len(self.period)
+
+    @property
+    def padded_vocab(self) -> int:
+        m = self.vocab_pad_multiple
+        return (self.vocab_size + m - 1) // m * m
+
+    @property
+    def mamba_d_inner(self) -> int:
+        return self.mamba_expand * self.d_model
+
+    @property
+    def dt_rank(self) -> int:
+        return self.mamba_dt_rank or -(-self.d_model // 16)
+
+    @property
+    def is_encoder(self) -> bool:
+        return not self.causal
+
+    def has_mixer(self, kind: str) -> bool:
+        return any(l.mixer == kind for l in self.period)
+
+    def has_ffn(self, kind: str) -> bool:
+        return any(l.ffn == kind for l in self.period)
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """True if the arch can run 500k contexts (no full-attn KV blowup
+        OR hybrid where attention is sparse enough to shard)."""
+        return self.has_mixer("mamba") or self.has_mixer("rwkv6")
+
+    def with_quant(self, mode: str, **kw) -> "ModelConfig":
+        return replace(self, quant=dataclasses.replace(
+            self.quant if self.quant.enabled else SCQuantConfig(),
+            mode=mode, **kw))
+
+    def scaled(self, **kw) -> "ModelConfig":
+        """Reduced copy for smoke tests."""
+        return replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                   # train | prefill | decode
+
+    @property
+    def tokens(self) -> int:
+        return self.seq_len * self.global_batch
+
+
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+def shape_by_name(name: str) -> ShapeConfig:
+    return SHAPES[name]
+
+
+_ARCH_REGISTRY: dict[str, "ModelConfig"] = {}
+
+
+def register_arch(cfg: ModelConfig) -> ModelConfig:
+    _ARCH_REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get_arch(name: str) -> ModelConfig:
+    if name not in _ARCH_REGISTRY:
+        # import the configs package to populate the registry lazily
+        import repro.configs  # noqa: F401
+    return _ARCH_REGISTRY[name]
+
+
+def list_archs() -> list[str]:
+    import repro.configs  # noqa: F401
+    return sorted(_ARCH_REGISTRY)

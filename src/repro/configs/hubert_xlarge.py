@@ -1,0 +1,24 @@
+"""hubert-xlarge [audio]: encoder-only, bidirectional, conv-stem stub.
+
+[arXiv:2106.07447; unverified] — 48L d=1280 16H d_ff=5120 vocab=504
+(masked-cluster prediction). Encoder-only => NO decode step: decode_32k
+and long_500k cells are skipped (DESIGN.md §4). The 7-layer conv stem is
+the STUB frontend: input_specs() provides (B, T, 512) frame features;
+positions come from the (stubbed) conv positional encoding, so
+rope_fraction=0.
+"""
+
+from .base import LayerSpec, ModelConfig, register_arch
+from ._default_quant import DEFAULT_SC
+
+CONFIG = register_arch(ModelConfig(
+    name="hubert-xlarge",
+    family="audio",
+    n_layers=48, d_model=1280, n_heads=16, n_kv_heads=16,
+    d_ff=5120, vocab_size=504,
+    period=(LayerSpec("attn", "dense"),),
+    norm="layernorm", ffn_act="gelu", ffn_gated=False,
+    causal=False, rope_fraction=0.0,
+    frontend="audio_stub",
+    quant=DEFAULT_SC,
+))

@@ -1,0 +1,24 @@
+"""llava-next-34b [vlm]: Yi-34B-class LM backbone + anyres vision stub.
+
+[hf:llava-hf/llava-v1.6-mistral-7b-hf family; unverified] — 60L d=7168
+56H (GQA kv=8) d_ff=20480 vocab=64000. The modality frontend is a STUB:
+input_specs() provides precomputed patch embeddings (B, S_img, 1024)
+(anyres tiling: 4 tiles + base = 5 x 576 = 2880 image tokens at train).
+"""
+
+from .base import LayerSpec, ModelConfig, register_arch
+from ._default_quant import DEFAULT_SC
+
+CONFIG = register_arch(ModelConfig(
+    name="llava-next-34b",
+    family="vlm",
+    n_layers=60, d_model=7168, n_heads=56, n_kv_heads=8,
+    d_ff=20480, vocab_size=64000,
+    period=(LayerSpec("attn", "dense"),),
+    norm="rmsnorm", ffn_act="silu", ffn_gated=True,
+    rope_theta=5_000_000.0,
+    frontend="vision_stub",
+    quant=DEFAULT_SC,
+))
+
+IMG_TOKENS = 2880   # 5 anyres tiles x 576

@@ -1,0 +1,11 @@
+"""The paper's own silicon model (§II-C): a ternary MLP for MNIST-class
+10-way classification (the 28-nm chip's workload, 98.28% soft accuracy).
+
+Used by the fault-tolerance benchmark (Fig 5) and the end-to-end QAT
+example; not part of the LM zoo. Layer sizes follow the DATE'20/SSCL'22
+TNN processor (784-256-256-10, all ternary, BSN+SI activations).
+"""
+
+TNN_LAYERS = (784, 256, 256, 10)
+TNN_ACT_BSL = 2          # the chip's fully-ternary datapath
+TNN_RESID_BSL = 16       # §III residual extension used by bench_residual

@@ -1,0 +1,23 @@
+"""The paper's contribution: deterministic-coding end-to-end SC datapath.
+
+Modules:
+  coding       — thermometer en/decode (Table II)
+  multiplier   — ternary SC multiplier (Fig 3a)
+  bsn          — exact + approximate spatial-temporal sorting networks (§II, §IV)
+  si           — selective-interconnect activation / BN fusion (Fig 3b, Eq 1)
+  quant        — LSQ-style SC-friendly QAT (§III-B)
+  residual     — high-precision residual re-scaling block (§III-C)
+  fault        — bit-error injection (Fig 5)
+  hwmodel      — gate-level area/delay/energy model (Tables IV/V, Figs 2/4/9/13)
+  fsm_baseline — the stochastic FSM designs the paper improves on (Fig 1)
+  sc_layers    — composable SC-quantized layers (QAT + integer paths)
+"""
+
+from . import (bsn, coding, fault, fsm_baseline, hwmodel, multiplier, quant,
+               residual, sc_layers, si)
+from .sc_layers import SC_OFF, SCQuantConfig
+
+__all__ = [
+    "bsn", "coding", "fault", "fsm_baseline", "hwmodel", "multiplier",
+    "quant", "residual", "sc_layers", "si", "SCQuantConfig", "SC_OFF",
+]

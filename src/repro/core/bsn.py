@@ -1,0 +1,262 @@
+"""Bitonic Sorting Network non-linear adder (paper §II-B, §IV).
+
+Exact path (Fig 3b): concatenate the thermometer bitstreams of all addends
+and bitonic-sort them.  The sorted vector is a thermometer code whose
+popcount is the exact sum of input popcounts, so the accumulated value is
+``sum_q = popcount(sorted) - (N*L)/2``.
+
+Approximate spatial path (Fig 10b): a parameterized progressive-sorting
+pipeline.  Stage ``i`` groups ``g_i`` partial codes, sorts them, then
+*sub-samples*: clip ``c_i`` bits off each end (inputs are near-Gaussian, the
+tails carry almost no mass — Fig 11), keep one of every ``s_i`` bits.  Each
+surviving bit then represents ``s_i`` units of the original scale, so the
+overall output scale is ``prod(s_i)`` (a power of two, realigned by the
+residual re-scaling block of §III-C).
+
+Temporal path (Fig 12): a physically small BSN is reused over ``T`` cycles
+to cover a ``T``-times-wider accumulation; functionally a chunked reduce
+with the spatial pipeline applied per cycle.
+
+Everything exists twice:
+
+* ``*_bits``   — bit-exact circuit simulation (compare-exchange network on
+  the actual bit vectors).  Used by fault-injection and MSE experiments.
+* ``*_counts`` — the TPU-native functional equivalent on popcounts.  The
+  two are proven equivalent in tests (the count path is the oracle for the
+  Pallas kernel as well).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "bitonic_sort",
+    "exact_bsn_bits",
+    "exact_bsn_counts",
+    "SubSampleSpec",
+    "StageSpec",
+    "ApproxBSNSpec",
+    "approx_bsn_counts",
+    "approx_bsn_bits",
+    "approx_bsn_output_bsl",
+    "approx_bsn_scale",
+    "spatial_temporal_counts",
+]
+
+
+# ---------------------------------------------------------------------------
+# bitonic sort (Batcher 1968) — vectorized compare-exchange network
+# ---------------------------------------------------------------------------
+
+def _ceil_pow2(n: int) -> int:
+    return 1 << (n - 1).bit_length()
+
+
+def bitonic_sort(x: jax.Array, descending: bool = True) -> jax.Array:
+    """Sort the trailing axis with Batcher's bitonic network.
+
+    Works on any dtype supporting min/max. Non-power-of-two lengths are
+    padded with sentinels and cropped (hardware pads with constant bits).
+    The stage structure mirrors the circuit exactly: ``log2(n)`` merge
+    phases of ``1..log2(n)`` compare-exchange levels, each level a fully
+    parallel bank of comparators (AND/OR pairs for 1-bit inputs).
+    """
+    n = x.shape[-1]
+    m = _ceil_pow2(n)
+    if m != n:
+        pad_val = jnp.array(jnp.iinfo(x.dtype).min if descending
+                            else jnp.iinfo(x.dtype).max, dtype=x.dtype) \
+            if jnp.issubdtype(x.dtype, jnp.integer) else \
+            jnp.array(-jnp.inf if descending else jnp.inf, dtype=x.dtype)
+        pad = jnp.broadcast_to(pad_val, x.shape[:-1] + (m - n,))
+        x = jnp.concatenate([x, pad], axis=-1)
+
+    idx = jnp.arange(m)
+    for k_bit in range(1, m.bit_length()):            # merge phase size 2^k
+        k = 1 << k_bit
+        for j_bit in range(k_bit - 1, -1, -1):        # exchange distance 2^j
+            j = 1 << j_bit
+            partner = idx ^ j
+            lo = jnp.minimum(idx, partner)
+            a = x[..., lo]
+            b = x[..., lo ^ j]
+            up = (idx & k) == 0                       # direction per block
+            if descending:
+                keep_hi = up
+            else:
+                keep_hi = ~up
+            hi_v = jnp.maximum(a, b)
+            lo_v = jnp.minimum(a, b)
+            first = jnp.where(keep_hi, hi_v, lo_v)    # value at position lo
+            second = jnp.where(keep_hi, lo_v, hi_v)   # value at position lo^j
+            x = jnp.where((idx & j) == 0, first, second)
+    return x[..., :n]
+
+
+def exact_bsn_bits(bits: jax.Array) -> jax.Array:
+    """Exact BSN: ``(..., N, L)`` thermometer codes -> ``(..., N*L)`` sorted.
+
+    The output is again a thermometer code (descending sort of 0/1 bits)
+    representing the exact sum.
+    """
+    flat = bits.reshape(bits.shape[:-2] + (bits.shape[-2] * bits.shape[-1],))
+    return bitonic_sort(flat.astype(jnp.int8), descending=True)
+
+
+def exact_bsn_counts(counts: jax.Array, axis: int = -1) -> jax.Array:
+    """Functional equivalent: the sorted popcount is just the sum."""
+    return jnp.sum(counts.astype(jnp.int32), axis=axis)
+
+
+# ---------------------------------------------------------------------------
+# approximate spatial BSN (paper §IV-B, Fig 10b)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class SubSampleSpec:
+    """Truncated-quantization sub-sampler inside one sub-BSN.
+
+    clip ``clip`` bits from *each* end of the sorted code, then keep one of
+    every ``stride`` bits (phase picks which of the ``stride`` wires is
+    tapped; ``stride//2`` centers the quantizer).
+    """
+    clip: int = 0
+    stride: int = 1
+
+    def out_len(self, in_len: int) -> int:
+        kept = in_len - 2 * self.clip
+        if kept <= 0 or kept % self.stride != 0:
+            raise ValueError(
+                f"sub-sample (clip={self.clip}, stride={self.stride}) "
+                f"invalid for BSL {in_len}")
+        return kept // self.stride
+
+    @property
+    def phase(self) -> int:
+        return self.stride // 2
+
+    def apply_counts(self, c: jax.Array, in_len: int) -> jax.Array:
+        """Count-domain semantics: saturate then floor-divide with phase."""
+        kept = in_len - 2 * self.clip
+        c = jnp.clip(c - self.clip, 0, kept)
+        return (c + self.phase) // self.stride
+
+    def apply_bits(self, sorted_bits: jax.Array) -> jax.Array:
+        """Bit-domain semantics: literally tap wires of the sorted vector."""
+        in_len = sorted_bits.shape[-1]
+        out_len = self.out_len(in_len)
+        # output bit j taps sorted position clip + j*stride + (stride-1-phase)
+        pos = self.clip + jnp.arange(out_len) * self.stride \
+            + (self.stride - 1 - self.phase)
+        return sorted_bits[..., pos]
+
+
+@dataclass(frozen=True)
+class StageSpec:
+    """One progressive-sorting stage: group ``group`` codes, sort, sample."""
+    group: int
+    sub: SubSampleSpec = field(default_factory=SubSampleSpec)
+
+
+@dataclass(frozen=True)
+class ApproxBSNSpec:
+    """Parameterized BSN design space (paper Fig 10b).
+
+    ``in_bsl``: BSL of each of the ``width`` input codes.
+    ``stages``: progressive stages; ``prod(group_i)`` must equal ``width``.
+    """
+    width: int
+    in_bsl: int
+    stages: tuple[StageSpec, ...]
+
+    def __post_init__(self):
+        g = math.prod(s.group for s in self.stages)
+        if g != self.width:
+            raise ValueError(f"prod(groups)={g} != width={self.width}")
+        self.layer_bsls()  # validates divisibility
+
+    def layer_bsls(self) -> list[int]:
+        """BSL entering each stage (and the final output BSL last)."""
+        bsls = [self.in_bsl]
+        for s in self.stages:
+            sorted_len = bsls[-1] * s.group
+            bsls.append(s.sub.out_len(sorted_len))
+        return bsls
+
+    @property
+    def out_bsl(self) -> int:
+        return self.layer_bsls()[-1]
+
+    @property
+    def scale(self) -> int:
+        """Units-per-bit of the output relative to the input (prod strides)."""
+        return math.prod(s.sub.stride for s in self.stages)
+
+
+def approx_bsn_output_bsl(spec: ApproxBSNSpec) -> int:
+    return spec.out_bsl
+
+
+def approx_bsn_scale(spec: ApproxBSNSpec) -> int:
+    return spec.scale
+
+
+def approx_bsn_counts(counts: jax.Array, spec: ApproxBSNSpec) -> jax.Array:
+    """Count-domain approximate BSN.
+
+    ``counts``: ``(..., width)`` popcounts of the input codes (each in
+    ``[0, in_bsl]``).  Returns the output code's popcount in
+    ``[0, out_bsl]``; the represented q value is
+    ``scale * (out_count - out_bsl/2)``.
+    """
+    if counts.shape[-1] != spec.width:
+        raise ValueError(f"expected width {spec.width}, got {counts.shape}")
+    c = counts.astype(jnp.int32)
+    bsl = spec.in_bsl
+    for s in spec.stages:
+        c = c.reshape(c.shape[:-1] + (c.shape[-1] // s.group, s.group))
+        c = jnp.sum(c, axis=-1)                       # sorted popcount
+        sorted_len = bsl * s.group
+        c = s.sub.apply_counts(c, sorted_len)
+        bsl = s.sub.out_len(sorted_len)
+    return jnp.squeeze(c, axis=-1)
+
+
+def approx_bsn_bits(bits: jax.Array, spec: ApproxBSNSpec) -> jax.Array:
+    """Bit-exact approximate BSN on ``(..., width, in_bsl)`` codes."""
+    if bits.shape[-2] != spec.width or bits.shape[-1] != spec.in_bsl:
+        raise ValueError(f"expected (..., {spec.width}, {spec.in_bsl}), "
+                         f"got {bits.shape}")
+    x = bits
+    for s in spec.stages:
+        m = x.shape[-2] // s.group
+        x = x.reshape(x.shape[:-2] + (m, s.group * x.shape[-1]))
+        x = bitonic_sort(x.astype(jnp.int8), descending=True)
+        x = s.sub.apply_bits(x)
+    return jnp.squeeze(x, axis=-2)
+
+
+# ---------------------------------------------------------------------------
+# spatial-temporal BSN (paper §IV-B, Fig 12)
+# ---------------------------------------------------------------------------
+
+def spatial_temporal_counts(counts: jax.Array, spec: ApproxBSNSpec,
+                            cycles: int) -> jax.Array:
+    """Fold a ``cycles * spec.width`` accumulation onto one small BSN.
+
+    Input ``(..., cycles * width)`` popcounts. Each cycle runs the spatial
+    pipeline on its chunk; the compressed partial sums (already short codes)
+    are accumulated exactly by a final small adder. Output is in *output
+    scale units* of the spatial spec: value = scale*(out - cycles*out_bsl/2).
+    """
+    w = spec.width
+    if counts.shape[-1] != cycles * w:
+        raise ValueError(f"expected {cycles * w} inputs, got {counts.shape}")
+    c = counts.reshape(counts.shape[:-1] + (cycles, w))
+    partial = approx_bsn_counts(c, spec)              # (..., cycles)
+    return jnp.sum(partial, axis=-1)

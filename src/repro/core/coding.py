@@ -1,0 +1,119 @@
+"""Deterministic thermometer coding (paper §II, Table II).
+
+A value ``x`` is represented as ``x = alpha * x_q`` where ``x_q`` is an
+integer *level* in ``[-L/2, +L/2]`` (L+1 levels) and the bitstream is the
+L-bit thermometer code with ``x_q + L/2`` ones followed by zeros::
+
+    BSL=2 :  00 -> -1   10 -> 0   11 -> +1          (ternary)
+    BSL=4 :  0000 -> -2 ... 1111 -> +2
+    BSL=16:  levels -8..+8
+
+Three value domains are used throughout the code base:
+
+* **bit domain**   — int8 arrays with a trailing length-L axis of {0,1}.
+* **q domain**     — integer levels ``x_q = popcount(bits) - L/2``.
+* **count domain** — ``c = popcount(bits) = x_q + L/2 in [0, L]``.
+
+The bit domain exists for bit-exact circuit simulation (fault injection,
+sorting-network experiments); the q/count domains are the TPU-native
+functional equivalents (popcount of a sorted thermometer code depends only
+on the count, so every downstream circuit is a function of the count).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "check_bsl",
+    "encode_thermometer",
+    "decode_thermometer",
+    "counts_from_bits",
+    "negate_bits",
+    "zero_code",
+    "quantize_levels",
+    "dequantize_levels",
+    "is_thermometer",
+    "THERMOMETER_TABLE",
+]
+
+# Table II of the paper, used directly by tests.
+THERMOMETER_TABLE = {
+    2: {-1: "00", 0: "10", 1: "11"},
+    4: {-2: "0000", -1: "1000", 0: "1100", 1: "1110", 2: "1111"},
+}
+
+
+def check_bsl(bsl: int) -> int:
+    """Validate a bitstream length: positive and even (zero must be exact)."""
+    if bsl < 2 or bsl % 2 != 0:
+        raise ValueError(f"BSL must be an even integer >= 2, got {bsl}")
+    return bsl
+
+
+def encode_thermometer(x_q: jax.Array, bsl: int) -> jax.Array:
+    """q domain -> bit domain.
+
+    ``x_q`` integer levels in [-bsl/2, bsl/2] (values outside are clipped,
+    matching saturating hardware registers). Output int8 ``(..., bsl)``.
+    """
+    check_bsl(bsl)
+    half = bsl // 2
+    count = jnp.clip(x_q, -half, half).astype(jnp.int32) + half
+    positions = jnp.arange(bsl, dtype=jnp.int32)
+    return (positions < count[..., None]).astype(jnp.int8)
+
+
+def counts_from_bits(bits: jax.Array) -> jax.Array:
+    """bit domain -> count domain (popcount along the trailing axis)."""
+    return jnp.sum(bits.astype(jnp.int32), axis=-1)
+
+
+def decode_thermometer(bits: jax.Array) -> jax.Array:
+    """bit domain -> q domain: ``popcount - L/2``."""
+    bsl = bits.shape[-1]
+    check_bsl(bsl)
+    return counts_from_bits(bits) - bsl // 2
+
+
+def negate_bits(bits: jax.Array) -> jax.Array:
+    """Bit-domain negation: complement + reverse keeps thermometer form.
+
+    popcount' = L - popcount  =>  x_q' = -x_q. In hardware this is free
+    (wiring + inverters); here it is a flip + logical not.
+    """
+    return (1 - bits[..., ::-1]).astype(jnp.int8)
+
+
+def zero_code(bsl: int, shape: tuple[int, ...] = ()) -> jax.Array:
+    """The thermometer code of level 0 (L/2 ones then L/2 zeros)."""
+    check_bsl(bsl)
+    one = encode_thermometer(jnp.zeros(shape, jnp.int32), bsl)
+    return one
+
+
+def quantize_levels(x: jax.Array, alpha: jax.Array, bsl: int) -> jax.Array:
+    """float -> q domain: ``clip(round(x / alpha), -L/2, L/2)``.
+
+    This is the *inference-time* quantizer; the differentiable QAT version
+    with learned-step-size gradients lives in :mod:`repro.core.quant`.
+    """
+    check_bsl(bsl)
+    half = bsl // 2
+    return jnp.clip(jnp.round(x / alpha), -half, half).astype(jnp.int32)
+
+
+def dequantize_levels(x_q: jax.Array, alpha: jax.Array) -> jax.Array:
+    """q domain -> float: ``alpha * x_q``."""
+    return x_q.astype(jnp.float32) * alpha
+
+
+def is_thermometer(bits: np.ndarray | jax.Array) -> np.ndarray:
+    """True where the trailing axis is a valid thermometer code (1s first)."""
+    b = np.asarray(bits)
+    # once a 0 appears, no 1 may follow: cumulative min equals the sequence
+    descending = np.all(b[..., :-1] >= b[..., 1:], axis=-1)
+    binary = np.all((b == 0) | (b == 1), axis=-1)
+    return descending & binary

@@ -1,0 +1,56 @@
+"""Bit-error fault injection (paper Fig 5).
+
+Thermometer SC codes degrade gracefully under bit flips: a flipped bit
+changes the popcount by exactly 1 LSB regardless of position.  Positional
+binary is catastrophic: a flipped MSB changes the value by 2^(B-1).  The
+paper reports ~70% lower accuracy loss under equal BER; we reproduce the
+mechanism with both representations decoded back to values.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .coding import counts_from_bits, encode_thermometer
+
+__all__ = [
+    "flip_bits",
+    "thermometer_under_ber",
+    "binary_under_ber",
+]
+
+
+def flip_bits(bits: jax.Array, ber: float, key: jax.Array) -> jax.Array:
+    """XOR a Bernoulli(ber) mask into a {0,1} bit tensor."""
+    mask = jax.random.bernoulli(key, ber, bits.shape)
+    return jnp.bitwise_xor(bits.astype(jnp.int8), mask.astype(jnp.int8))
+
+
+def thermometer_under_ber(x_q: jax.Array, bsl: int, ber: float,
+                          key: jax.Array) -> jax.Array:
+    """Encode q levels as thermometer, flip at BER, decode.
+
+    Note the decode is popcount - L/2: flipped bits are +-1 LSB each, and
+    flips in the 1-region and 0-region partially cancel.
+    """
+    bits = encode_thermometer(x_q, bsl)
+    noisy = flip_bits(bits, ber, key)
+    return counts_from_bits(noisy) - bsl // 2
+
+
+def binary_under_ber(x_q: jax.Array, n_bits: int, ber: float,
+                     key: jax.Array) -> jax.Array:
+    """Two's-complement baseline: flip bits of the positional encoding.
+
+    ``x_q`` in [-2^(B-1), 2^(B-1)-1]. A single MSB flip moves the value by
+    2^(B-1) — the failure mode thermometer coding removes.
+    """
+    v = x_q.astype(jnp.int32) & ((1 << n_bits) - 1)   # two's complement field
+    weights = (1 << jnp.arange(n_bits, dtype=jnp.int32))
+    bits = ((v[..., None] // weights) % 2).astype(jnp.int8)
+    noisy = flip_bits(bits, ber, key)
+    nv = jnp.sum(noisy.astype(jnp.int32) * weights, axis=-1)
+    # sign-extend
+    sign = nv >= (1 << (n_bits - 1))
+    return jnp.where(sign, nv - (1 << n_bits), nv)

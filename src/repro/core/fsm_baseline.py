@@ -1,0 +1,95 @@
+"""FSM-based stochastic computing baseline (paper refs [6]-[9], Fig 1).
+
+The designs the paper improves on: values are *stochastic* bipolar
+bitstreams (P(bit=1) = (x+1)/2), multiplication is XNOR, accumulation is a
+mux/adder tree, and activation functions are saturating-counter FSMs
+processed serially over the stream:
+
+* **Stanh** (Brown & Card): K-state up/down counter; output bit = 1 iff
+  state >= K/2.  Approximates tanh(K*x/2) in expectation, with output
+  variance that only decays as 1/sqrt(stream length) — hence the paper's
+  Fig 1 observation that 1024-bit streams are still visibly wrong, and the
+  latency argument for deterministic coding.
+* **FSM ReLU** ([9]-style): same counter, but the output bit mirrors the
+  input when the state is in the upper half (positive estimate) and
+  emits the 0-code (alternating bits, bipolar zero) otherwise.
+
+These run under ``jax.lax.scan`` (the serial FSM is inherently sequential —
+that is the point the paper makes against it).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "stochastic_bitstream",
+    "xnor_multiply",
+    "fsm_stanh",
+    "fsm_relu",
+    "decode_bipolar",
+]
+
+
+def stochastic_bitstream(x: jax.Array, length: int, key: jax.Array) -> jax.Array:
+    """Bipolar stochastic stream: bit_t ~ Bernoulli((x+1)/2), x in [-1,1].
+
+    Shape: x (...,) -> (..., length), int8.
+    """
+    p = jnp.clip((x + 1.0) / 2.0, 0.0, 1.0)
+    u = jax.random.uniform(key, x.shape + (length,))
+    return (u < p[..., None]).astype(jnp.int8)
+
+
+def decode_bipolar(bits: jax.Array) -> jax.Array:
+    """E[x] estimate: 2*mean(bits) - 1."""
+    return 2.0 * jnp.mean(bits.astype(jnp.float32), axis=-1) - 1.0
+
+
+def xnor_multiply(a_bits: jax.Array, b_bits: jax.Array) -> jax.Array:
+    """Bipolar SC multiply: XNOR of independent streams."""
+    return (a_bits == b_bits).astype(jnp.int8)
+
+
+@partial(jax.jit, static_argnames=("n_states",))
+def fsm_stanh(bits: jax.Array, n_states: int = 8) -> jax.Array:
+    """Stanh FSM over a (..., T) bipolar stream -> (..., T) output stream.
+
+    state += bit ? +1 : -1, saturating in [0, n_states-1];
+    out bit = state >= n_states/2. Approximates tanh(n_states/2 * x).
+    """
+    half = n_states // 2
+    init = jnp.full(bits.shape[:-1], half, jnp.int32)
+
+    def step(state, b):
+        b = b.astype(jnp.int32)
+        nstate = jnp.clip(state + 2 * b - 1, 0, n_states - 1)
+        out = (nstate >= half).astype(jnp.int8)
+        return nstate, out
+
+    _, outs = jax.lax.scan(step, init, jnp.moveaxis(bits, -1, 0))
+    return jnp.moveaxis(outs, 0, -1)
+
+
+@partial(jax.jit, static_argnames=("n_states",))
+def fsm_relu(bits: jax.Array, n_states: int = 8) -> jax.Array:
+    """FSM-based ReLU ([9]): pass the input bit when the running estimate is
+    positive, emit bipolar-zero (alternating 0/1) otherwise."""
+    half = n_states // 2
+    init_state = jnp.full(bits.shape[:-1], half, jnp.int32)
+    init_tog = jnp.zeros(bits.shape[:-1], jnp.int32)
+
+    def step(carry, b):
+        state, toggle = carry
+        bi = b.astype(jnp.int32)
+        nstate = jnp.clip(state + 2 * bi - 1, 0, n_states - 1)
+        zero_bit = toggle               # alternating 0,1,0,1 == bipolar 0
+        out = jnp.where(nstate >= half, bi, zero_bit).astype(jnp.int8)
+        return (nstate, 1 - toggle), out
+
+    _, outs = jax.lax.scan(step, (init_state, init_tog),
+                           jnp.moveaxis(bits, -1, 0))
+    return jnp.moveaxis(outs, 0, -1)

@@ -1,0 +1,83 @@
+"""Ternary SC multiplier (paper §II-B, Fig 3a).
+
+The paper's deterministic multiplier takes a 2-bit thermometer activation
+``a`` and a 2-bit thermometer weight ``w`` (both ternary, {-1,0,+1}) and
+produces their 2-bit thermometer product with ~5 logic gates.
+
+Truth table (q domain)::
+
+        w\\a   -1   0   +1
+        -1     +1   0   -1
+         0      0   0    0
+        +1     -1   0   +1
+
+Bit-level derivation.  Write a ternary code as (f, s) = (first bit, second
+bit): -1 = (0,0), 0 = (1,0), +1 = (1,1); thermometer implies f >= s.
+For the product code (pf, ps):
+
+    product == -1  iff  (a==+1 and w==-1) or (a==-1 and w==+1)
+    =>  pf = (fa | ~sw) & (fw | ~sa)
+    product == +1  iff  (a==+1 and w==+1) or (a==-1 and w==-1)
+    =>  ps = (sa & sw) | (~fa & ~fw)
+
+which is 6 two-input gates before sharing / 5 after the De-Morgan share of
+the inverted pair — matching the paper's gate count (tracked in
+:mod:`repro.core.hwmodel`).  The generalized form used by the wider
+datapaths (ternary weight x L-bit activation) is pass / zero-code / negate.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .coding import check_bsl, negate_bits, zero_code
+
+__all__ = [
+    "ternary_mul_bits",
+    "ternary_mul_q",
+    "ternary_scale_bits",
+    "TERNARY_MUL_GATES",
+]
+
+# gate count of the 2-bit multiplier, used by the hardware cost model
+TERNARY_MUL_GATES = 5
+
+
+def ternary_mul_bits(a_bits: jax.Array, w_bits: jax.Array) -> jax.Array:
+    """Gate-level 2-bit ternary multiplier. Inputs/outputs int8 ``(..., 2)``.
+
+    Implements exactly the gate network documented in the module docstring;
+    used to validate the functional q-domain path bit-for-bit.
+    """
+    if a_bits.shape[-1] != 2 or w_bits.shape[-1] != 2:
+        raise ValueError("ternary_mul_bits operates on 2-bit BSL codes")
+    fa, sa = a_bits[..., 0].astype(jnp.int32), a_bits[..., 1].astype(jnp.int32)
+    fw, sw = w_bits[..., 0].astype(jnp.int32), w_bits[..., 1].astype(jnp.int32)
+    # pf = (fa | ~sw) & (fw | ~sa)
+    pf = jnp.clip(fa + (1 - sw), 0, 1) * jnp.clip(fw + (1 - sa), 0, 1)
+    # ps = (sa & sw) | (~fa & ~fw)
+    ps = jnp.clip(sa * sw + (1 - fa) * (1 - fw), 0, 1)
+    return jnp.stack([pf, ps], axis=-1).astype(jnp.int8)
+
+
+def ternary_mul_q(a_q: jax.Array, w_q: jax.Array) -> jax.Array:
+    """Functional (q domain) equivalent: plain integer product."""
+    return a_q.astype(jnp.int32) * w_q.astype(jnp.int32)
+
+
+def ternary_scale_bits(w_q: jax.Array, a_bits: jax.Array) -> jax.Array:
+    """Generalized multiplier: ternary weight x L-bit thermometer activation.
+
+    w=+1 passes the code, w=0 emits the zero code, w=-1 emits the negated
+    code (complement+reverse) — all wiring-level operations in hardware.
+    ``w_q`` broadcasts against ``a_bits[..., :-1]``.
+    """
+    bsl = a_bits.shape[-1]
+    check_bsl(bsl)
+    w = w_q[..., None].astype(jnp.int32)
+    neg = negate_bits(a_bits)
+    zero = zero_code(bsl)
+    zero = jnp.broadcast_to(zero, a_bits.shape)
+    out = jnp.where(w > 0, a_bits, jnp.where(w < 0, neg, zero))
+    return out.astype(jnp.int8)

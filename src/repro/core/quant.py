@@ -1,0 +1,111 @@
+"""SC-friendly quantization-aware training (paper §III-B, Table III).
+
+The paper's co-designed models use:
+
+* **ternary weights** (2-bit BSL thermometer codes, levels {-1,0,+1}) with a
+  trained scale ``alpha_w`` — Table III shows weight ternarization alone
+  costs ~0.3% accuracy;
+* **low-BSL activations** (levels ``[-L/2, L/2]``) with a trained scale
+  ``alpha_a`` — the accuracy cliff lives here, fixed by the high-precision
+  residual (§III, :mod:`repro.core.residual`).
+
+Both quantizers are LSQ-style (learned step size, Esser et al. 2020):
+straight-through estimator for the rounding, an analytically-derived
+gradient for the scale, and the 1/sqrt(N*Qp) gradient scale that keeps the
+scale's learning rate commensurate with the weights'.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "lsq_fake_quant",
+    "ternary_weight_quant",
+    "thermometer_act_quant",
+    "init_alpha",
+    "ternary_weight_init_alpha",
+]
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def lsq_fake_quant(x: jax.Array, alpha: jax.Array, qn: int, qp: int) -> jax.Array:
+    """Fake-quantize ``x`` to integer levels [qn, qp] with step ``alpha``.
+
+    Returns the dequantized value ``alpha * clip(round(x/alpha), qn, qp)``.
+    ``alpha`` broadcasts against ``x`` (per-tensor scalar or per-channel).
+
+    dtype discipline: the value path runs in ``x.dtype`` (alpha is cast
+    down) so a bf16 model stays bf16 end-to-end — an f32 alpha would
+    promote every activation/weight and, transitively, every TP
+    all-reduce to f32 (measured 2x wire + memory on the train cells,
+    EXPERIMENTS.md §Perf). q is a small exact integer; ``q*alpha`` in
+    bf16 adds <=0.4% value rounding. The alpha *gradient* still
+    accumulates in f32.
+    """
+    a = alpha.astype(x.dtype) if alpha.dtype != x.dtype else alpha
+    q = jnp.clip(jnp.round(x / a), qn, qp)
+    return q * a
+
+
+def _lsq_fwd(x, alpha, qn, qp):
+    a = alpha.astype(x.dtype) if alpha.dtype != x.dtype else alpha
+    xs = x / a
+    q = jnp.clip(jnp.round(xs), qn, qp)
+    # grad scale stored as a static python float: x.size can exceed int32
+    gscale = 1.0 / float(x.size * max(qp, 1)) ** 0.5
+    return q * a, (xs, q, alpha, gscale)
+
+
+def _lsq_bwd(qn, qp, res, g):
+    xs, q, alpha, grad_scale = res
+    in_range = (xs >= qn) & (xs <= qp)
+    gx = jnp.where(in_range, g, jnp.zeros((), g.dtype))
+    # d(out)/d(alpha): round(x/a) - x/a inside the range, the rail outside
+    dalpha = jnp.where(xs <= qn, float(qn),
+                       jnp.where(xs >= qp, float(qp),
+                                 (q - xs))).astype(jnp.float32)
+    galpha_full = g.astype(jnp.float32) * dalpha * grad_scale
+    # reduce over the broadcasted axes so galpha matches alpha's shape
+    galpha = _reduce_to_shape(galpha_full, jnp.shape(alpha))
+    return gx, galpha
+
+
+def _reduce_to_shape(x: jax.Array, shape: tuple[int, ...]) -> jax.Array:
+    if shape == ():
+        return jnp.sum(x)
+    # sum leading broadcast axes
+    while x.ndim > len(shape):
+        x = jnp.sum(x, axis=0)
+    axes = tuple(i for i, (a, b) in enumerate(zip(x.shape, shape)) if b == 1 and a != 1)
+    if axes:
+        x = jnp.sum(x, axis=axes, keepdims=True)
+    return x.reshape(shape)
+
+
+lsq_fake_quant.defvjp(_lsq_fwd, _lsq_bwd)
+
+
+def ternary_weight_quant(w: jax.Array, alpha: jax.Array) -> jax.Array:
+    """2-bit-BSL (ternary) weight fake-quant: levels {-1, 0, +1}."""
+    return lsq_fake_quant(w, alpha, -1, 1)
+
+
+def thermometer_act_quant(x: jax.Array, alpha: jax.Array, bsl: int) -> jax.Array:
+    """L-bit-BSL activation fake-quant: levels [-L/2, L/2] (L+1 of them)."""
+    half = bsl // 2
+    return lsq_fake_quant(x, alpha, -half, half)
+
+
+def init_alpha(x: jax.Array, qp: int) -> jax.Array:
+    """LSQ init: 2 * mean|x| / sqrt(qp)."""
+    return 2.0 * jnp.mean(jnp.abs(x)) / jnp.sqrt(float(max(qp, 1)))
+
+
+def ternary_weight_init_alpha(w: jax.Array) -> jax.Array:
+    """TWN-flavored init for ternary weights: 0.7 * mean|w| is the classic
+    threshold; LSQ's 2*mean|w| works as the *step*, use the midpoint."""
+    return jnp.maximum(1.4 * jnp.mean(jnp.abs(w)), 1e-8)

@@ -1,0 +1,83 @@
+"""High-precision residual fusion + re-scaling block (paper §III).
+
+The SC-friendly model keeps the *datapath* at 2-bit BSL but carries the
+residual stream at 16-bit BSL (levels -8..+8 — Fig 6).  Before the residual
+joins the accumulation, its scale must match the convolution products'
+scale; the paper's re-scaling block aligns them by powers of two:
+
+* multiply by 2^N  — replicate the bitstream 2^N times into the buffer
+  (count doubles per step, zero level is preserved because the implicit
+  offset L/2 doubles too);
+* divide by 2^N    — N cycles of "keep 1 of 2 bits", each cycle appending
+  the zero code ('11110000') to keep the BSL constant; in the value domain
+  one cycle is ``v -> floor((v + 1)/2)`` (round-half-up).
+
+Both are wiring/buffer operations — no arithmetic logic.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "pow2_exponent",
+    "rescale_q",
+    "rescale_bits_div2",
+    "residual_add_q",
+]
+
+
+def pow2_exponent(alpha_from: float, alpha_to: float) -> int:
+    """N such that alpha_from * 2^N best matches alpha_to (round(log2))."""
+    return int(np.round(np.log2(alpha_to / alpha_from)))
+
+
+def rescale_q(v_q: jax.Array, n: int) -> jax.Array:
+    """q-domain re-scaling block: value * 2^n (n may be negative).
+
+    n >= 0: exact (bitstream replication).
+    n <  0: |n| divide cycles, each ``v -> floor((v+1)/2)`` — the bit-level
+    subsample with centered phase, so dividing then decoding matches the
+    hardware bit-for-bit (see tests/test_residual.py).
+    """
+    v = v_q.astype(jnp.int32)
+    if n >= 0:
+        return v * (1 << n)
+    for _ in range(-n):
+        v = (v + 1) >> 1
+    return v
+
+
+def rescale_bits_div2(bits: jax.Array) -> jax.Array:
+    """One bit-level divide cycle on an L-bit thermometer code.
+
+    Keep 1 of every 2 bits (phase 1: tap positions 0,2,4.. of the code —
+    bit j out = bit 2j in), then append the L/2-bit zero code so the BSL is
+    constant (the paper's '11110000' padding for L=16).
+
+    Note the output is a *concatenation* of two thermometer codes, not one
+    canonical code — which is exactly what the hardware produces and all
+    the BSN accumulator needs (its value is popcount - L/2 in any order).
+    """
+    L = bits.shape[-1]
+    half = L // 2
+    kept = bits[..., 0:L:2]                       # floor((c+1)/2) ones
+    quarter = half // 2
+    pad_shape = bits.shape[:-1] + (half,)
+    pad = jnp.concatenate(
+        [jnp.ones(bits.shape[:-1] + (quarter,), jnp.int8),
+         jnp.zeros(bits.shape[:-1] + (half - quarter,), jnp.int8)], axis=-1)
+    assert pad.shape == pad_shape
+    return jnp.concatenate([kept, pad], axis=-1)
+
+
+def residual_add_q(conv_q: jax.Array, resid_q: jax.Array, n: int) -> jax.Array:
+    """Accumulate a re-scaled residual with the conv partial sum (q domain).
+
+    ``n`` is the residual's re-scale exponent into the conv scale
+    (``alpha_resid * 2^-n == alpha_conv`` i.e. resid levels are worth
+    ``2^n`` conv levels ... resolved by ``pow2_exponent`` at export).
+    """
+    return conv_q.astype(jnp.int32) + rescale_q(resid_q, n)

@@ -1,0 +1,184 @@
+"""SC-quantized layers: the paper's datapath as composable JAX modules.
+
+Two execution modes per layer (selected by ``config.quant`` at the model
+level):
+
+* ``sc_qat``  — differentiable fake-quant training path: LSQ ternary
+  weights + thermometer activations, high-precision residual stream
+  (paper §III-B).  This is what ``train_step`` lowers.
+* ``sc_int``  — the integer inference datapath that is bit-equivalent to
+  the silicon: int8 activations (q domain) x int8 ternary weights with an
+  int32 accumulate (== BSN popcount) and an SI threshold epilogue.  This is
+  what ``serve_step --quant sc_int`` lowers and what the Pallas
+  ``ternary_matmul`` kernel implements.
+
+The equivalence (qat-rounded values == alpha-scaled int path == bit-exact
+bitstream path) is asserted in tests/test_sc_layers.py.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import si as si_mod
+from .quant import (init_alpha, lsq_fake_quant, ternary_weight_init_alpha,
+                    ternary_weight_quant, thermometer_act_quant)
+
+__all__ = [
+    "SCQuantConfig",
+    "SC_OFF",
+    "init_sc_linear",
+    "sc_linear_qat",
+    "export_sc_linear",
+    "sc_linear_int",
+    "sc_residual_quant",
+]
+
+
+@dataclass(frozen=True)
+class SCQuantConfig:
+    """Per-model SC quantization settings (paper notation W-A-R/BSL)."""
+    mode: str = "none"              # none | sc_qat | sc_int
+    weight_bsl: int = 2             # ternary weights
+    act_bsl: int = 8                # datapath activation BSL
+    resid_bsl: int = 16             # high-precision residual BSL
+    per_channel: bool = True        # per-output-channel weight scales
+
+    @property
+    def enabled(self) -> bool:
+        return self.mode != "none"
+
+    @property
+    def act_half(self) -> int:
+        return self.act_bsl // 2
+
+    @property
+    def resid_half(self) -> int:
+        return self.resid_bsl // 2
+
+    def with_mode(self, mode: str) -> "SCQuantConfig":
+        return replace(self, mode=mode)
+
+
+SC_OFF = SCQuantConfig(mode="none")
+
+
+# ---------------------------------------------------------------------------
+# parameter init
+# ---------------------------------------------------------------------------
+
+def init_sc_linear(key: jax.Array, in_dim: int, out_dim: int,
+                   cfg: SCQuantConfig,
+                   w_init_scale: float | None = None,
+                   dtype=jnp.float32) -> dict:
+    """Linear params + LSQ scales. ``w`` stored (in_dim, out_dim)."""
+    scale = w_init_scale if w_init_scale is not None else 1.0 / np.sqrt(in_dim)
+    w = jax.random.normal(key, (in_dim, out_dim), dtype) * scale
+    params = {"w": w}
+    if cfg.enabled:
+        if cfg.per_channel:
+            aw = jnp.maximum(1.4 * jnp.mean(jnp.abs(w), axis=0), 1e-8)
+        else:
+            aw = ternary_weight_init_alpha(w)
+        params["alpha_w"] = aw.astype(jnp.float32)
+        # activation scale initialized for unit-variance inputs
+        params["alpha_a"] = jnp.asarray(
+            2.0 / np.sqrt(max(cfg.act_half, 1)), jnp.float32)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# QAT path
+# ---------------------------------------------------------------------------
+
+def sc_linear_qat(params: dict, x: jax.Array, cfg: SCQuantConfig) -> jax.Array:
+    """Fake-quant linear: quantize activations + weights, matmul in the
+    compute dtype. With mode == none this is a plain matmul."""
+    w = params["w"]
+    if not cfg.enabled:
+        return x @ w
+    x_fq = thermometer_act_quant(x, params["alpha_a"], cfg.act_bsl)
+    w_fq = ternary_weight_quant(w, params["alpha_w"])
+    return x_fq.astype(x.dtype) @ w_fq.astype(x.dtype)
+
+
+def sc_residual_quant(r: jax.Array, alpha_r: jax.Array,
+                      cfg: SCQuantConfig) -> jax.Array:
+    """High-precision residual fake-quant (16-bit BSL by default, §III)."""
+    if not cfg.enabled:
+        return r
+    return lsq_fake_quant(r, alpha_r, -cfg.resid_half, cfg.resid_half)
+
+
+# ---------------------------------------------------------------------------
+# integer (silicon-equivalent) path
+# ---------------------------------------------------------------------------
+
+def export_sc_linear(params: dict, cfg: SCQuantConfig,
+                     act_fn: Callable[[np.ndarray], np.ndarray] | None = None,
+                     out_bsl: int | None = None,
+                     alpha_out: float | None = None) -> dict:
+    """Quantize trained params into the deployable integer form.
+
+    Returns ``{"w_int": int8 (in,out), "alpha_w", "alpha_a",
+    "thresholds": int32 (out_bsl,) or None, "alpha_out"}``.
+
+    The SI thresholds realize ``act_fn`` on the *accumulated* integer sum:
+    sum value = alpha_a*alpha_w * sum_q, so the threshold table is designed
+    over the sum's level range with effective input scale alpha_a*alpha_w.
+    Per-channel weight scales get per-channel threshold tables (stacked).
+    """
+    w = np.asarray(params["w"], np.float32)
+    aw = np.asarray(params["alpha_w"], np.float32)
+    aa = float(params["alpha_a"])
+    w_int = np.clip(np.round(w / aw), -1, 1).astype(np.int8)
+    out = {"w_int": w_int, "alpha_w": aw, "alpha_a": aa, "thresholds": None,
+           "alpha_out": None}
+    if act_fn is not None:
+        if out_bsl is None or alpha_out is None:
+            raise ValueError("SI epilogue needs out_bsl and alpha_out")
+        in_dim = w.shape[0]
+        half = cfg.act_half
+        sum_max = in_dim * half          # |sum_q| <= in_dim * L/2
+        aw_vec = np.atleast_1d(aw)
+        tables = [si_mod.si_thresholds(act_fn, 2 * sum_max, out_bsl,
+                                       alpha_in=float(a) * aa,
+                                       alpha_out=alpha_out)
+                  for a in aw_vec]
+        out["thresholds"] = np.stack(tables)      # (C or 1, out_bsl)
+        out["alpha_out"] = alpha_out
+        out["sum_max"] = sum_max
+    return out
+
+
+def sc_linear_int(int_params: dict, x_q: jax.Array,
+                  matmul_fn: Callable | None = None) -> jax.Array:
+    """Integer datapath: x_q int8 levels @ ternary int8 weights -> int32 sum
+    (== the BSN's popcount, proven in tests), then optional SI epilogue.
+
+    ``matmul_fn(x_q, w_int)`` may be supplied to route through the Pallas
+    kernel; default is the jnp reference (int32 accumulate).
+    """
+    w_int = jnp.asarray(int_params["w_int"])
+    if matmul_fn is None:
+        sum_q = jax.lax.dot_general(
+            x_q.astype(jnp.int32), w_int.astype(jnp.int32),
+            (((x_q.ndim - 1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32)
+    else:
+        sum_q = matmul_fn(x_q, w_int)
+    thresholds = int_params.get("thresholds")
+    if thresholds is None:
+        return sum_q
+    t = jnp.asarray(thresholds)                    # (C or 1, out_bsl)
+    sum_max = int(int_params["sum_max"])
+    counts = sum_q + sum_max                       # count domain
+    # counts (..., C) -> (..., C, 1) vs t (C, out_bsl): broadcast compare
+    out_counts = jnp.sum(counts[..., None] >= t, axis=-1, dtype=jnp.int32)
+    out_bsl = t.shape[-1]
+    return out_counts - out_bsl // 2               # back to q domain

@@ -1,0 +1,10 @@
+"""Data pipeline: stateless-seeded synthetic streams (no offline datasets).
+
+Statelessness is the fault-tolerance property: batch(step) is a pure
+function of (seed, step, shard), so a restarted/rescaled job resumes the
+exact data order from the checkpointed step with no iterator state.
+"""
+
+from .synthetic import SyntheticLM, SyntheticClassification, host_batch
+
+__all__ = ["SyntheticLM", "SyntheticClassification", "host_batch"]

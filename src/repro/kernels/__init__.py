@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the SC datapath + framework hot-spots.
+
+ternary_matmul  — int8 ternary matmul + fused SI epilogue (the SC
+                  accelerator datapath, DESIGN.md §2); bit-exact vs
+                  ref.ternary_matmul_ref and the circuit simulation.
+bsn_sort        — bitonic sorting network as VPU compare-exchange levels.
+flash_attention — fused online-softmax attention (serving path),
+                  motivated by the §Perf memory-term attribution.
+"""
+
+from . import ops, ref
+from .flash_attention import flash_attention_pallas
+from .ops import bsn_sort, ternary_matmul
+
+__all__ = ["ops", "ref", "bsn_sort", "ternary_matmul",
+           "flash_attention_pallas"]

@@ -1,0 +1,115 @@
+"""Pallas TPU kernel: fused flash attention (forward / serving path).
+
+Motivated directly by the §Perf attribution: the XLA-lowered flash scan
+materializes ~8 logits-sized tensors per (q,kv) tile pair at HBM fusion
+boundaries — several TB/step on the train_4k cells.  In this kernel the
+whole online-softmax tile pipeline lives in VMEM: HBM traffic is exactly
+q + k + v + o (the flash ideal), which is what the roofline's memory term
+should charge for attention.
+
+Layout: grid (B*Hq, n_q_blocks); each program brings its q tile and the
+(GQA-mapped) kv-head's full K/V into VMEM (32k x 128 bf16 = 8 MiB — fits
+v5e VMEM with the default 1024-row q tile) and runs a causal-bounded
+fori_loop over kv tiles with m/l/acc carries in registers/VMEM.
+
+Forward only: training still uses the XLA path (a matching backward
+kernel is the natural next step — see EXPERIMENTS.md §Perf cell C);
+prefill/serving route here via ``cfg.attn_impl = "pallas"`` on TPU.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_pallas"]
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, *, bq: int, bk: int, seq: int,
+            causal: bool, scale: float):
+    qi = pl.program_id(1)
+    q = q_ref[...][0].astype(jnp.float32) * scale         # (bq, D)
+    d = q.shape[-1]
+
+    m0 = jnp.full((bq,), -1e30, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    a0 = jnp.zeros((bq, d), jnp.float32)
+
+    if causal:
+        n_kv = (qi + 1) * (bq // bk)      # bq % bk == 0 enforced by caller
+    else:
+        n_kv = seq // bk
+
+    q_rows = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kv_full = k_ref[...][0]
+    v_full = v_ref[...][0]
+
+    def body(j, carry):
+        m, l, acc = carry
+        k = jax.lax.dynamic_slice_in_dim(kv_full, j * bk, bk, 0)
+        v = jax.lax.dynamic_slice_in_dim(v_full, j * bk, bk, 0)
+        logits = q @ k.astype(jnp.float32).T               # (bq, bk)
+        if causal:
+            k_cols = j * bk + jax.lax.broadcasted_iota(jnp.int32,
+                                                       (bq, bk), 1)
+            logits = jnp.where(q_rows >= k_cols, logits, -1e30)
+        new_m = jnp.maximum(m, jnp.max(logits, axis=-1))
+        p = jnp.exp(logits - new_m[:, None])
+        corr = jnp.exp(m - new_m)
+        l = l * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[:, None] + p @ v.astype(jnp.float32)
+        return new_m, l, acc
+
+    m, l, acc = jax.lax.fori_loop(0, n_kv, body, (m0, l0, a0))
+    o_ref[...] = (acc / jnp.maximum(l[:, None], 1e-30)
+                  ).astype(o_ref.dtype)[None]
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                              "interpret"))
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
+                           *, causal: bool = True, block_q: int = 1024,
+                           block_k: int = 1024,
+                           interpret: bool = False) -> jax.Array:
+    """q: (B, S, Hq, D); k, v: (B, S, Hkv, D) -> (B, S, Hq, D).
+
+    S must divide by the block sizes (callers pad); Hq % Hkv == 0 (GQA
+    head mapping happens in the kv BlockSpec index map).
+    """
+    B, S, Hq, D = q.shape
+    Hkv = k.shape[2]
+    g = Hq // Hkv
+    bq = min(block_q, S)
+    bk = min(block_k, S)
+    assert S % bq == 0 and S % bk == 0 and bq % bk == 0, (S, bq, bk)
+
+    # (B*H, S, D) head-major layouts
+    qh = jnp.moveaxis(q, 2, 1).reshape(B * Hq, S, D)
+    kh = jnp.moveaxis(k, 2, 1).reshape(B * Hkv, S, D)
+    vh = jnp.moveaxis(v, 2, 1).reshape(B * Hkv, S, D)
+
+    kernel = functools.partial(_kernel, bq=bq, bk=bk, seq=S, causal=causal,
+                               scale=1.0 / math.sqrt(D))
+
+    def kv_index(bh, qi):
+        # bh = batch * Hq + q_head  ->  batch * Hkv + q_head // g
+        return ((bh // Hq) * Hkv + (bh % Hq) // g, 0, 0)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * Hq, S // bq),
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda bh, qi: (bh, qi, 0)),
+            pl.BlockSpec((1, S, D), kv_index),
+            pl.BlockSpec((1, S, D), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda bh, qi: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * Hq, S, D), q.dtype),
+        interpret=interpret,
+    )(qh, kh, vh)
+    return jnp.moveaxis(out.reshape(B, Hq, S, D), 1, 2)

@@ -1,0 +1,89 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+Handle batching, ragged shapes (padding to block multiples), backend
+selection (interpret=True on CPU so the kernels validate bit-for-bit in
+this container, compiled path on real TPU), and small-shape fallbacks to
+the jnp reference (a 16x16 matmul doesn't deserve a pallas_call).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ref
+from .bsn_sort import bsn_sort_pallas
+from .ternary_matmul import ternary_matmul_pallas
+
+__all__ = ["ternary_matmul", "bsn_sort", "use_interpret"]
+
+_FORCE_INTERPRET: bool | None = None
+
+
+def use_interpret() -> bool:
+    if _FORCE_INTERPRET is not None:
+        return _FORCE_INTERPRET
+    return jax.default_backend() != "tpu"
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def ternary_matmul(x_q: jax.Array, w_int: jax.Array,
+                   thresholds_q: jax.Array | None = None,
+                   *, block_m: int = 256, block_n: int = 256,
+                   block_k: int = 512,
+                   min_flops_for_kernel: int = 2 ** 22) -> jax.Array:
+    """SC integer datapath matmul: (..., K) x (K, N) -> (..., N) int32.
+
+    ``x_q``: int8 activation levels; ``w_int``: int8 ternary weights;
+    ``thresholds_q``: optional (N, out_bsl) SI table (q domain).
+    """
+    *batch, k = x_q.shape
+    k2, n = w_int.shape
+    assert k == k2, (x_q.shape, w_int.shape)
+    m = int(np.prod(batch)) if batch else 1
+
+    if 2 * m * n * k < min_flops_for_kernel:
+        return ref.ternary_matmul_ref(x_q, w_int, thresholds_q)
+
+    x2 = x_q.reshape(m, k)
+    mp, np_, kp = (_round_up(m, block_m), _round_up(n, block_n),
+                   _round_up(k, block_k))
+    x2 = jnp.pad(x2, ((0, mp - m), (0, kp - k)))
+    w2 = jnp.pad(w_int, ((0, kp - k), (0, np_ - n)))
+    t2 = None
+    if thresholds_q is not None:
+        # padded output channels get a never-firing threshold table
+        big = jnp.iinfo(jnp.int32).max
+        t2 = jnp.pad(thresholds_q.astype(jnp.int32),
+                     ((0, np_ - n), (0, 0)), constant_values=big)
+    out = ternary_matmul_pallas(x2, w2, t2, block_m=block_m,
+                                block_n=block_n, block_k=block_k,
+                                interpret=use_interpret())
+    out = out[:m, :n]
+    return out.reshape(*batch, n) if batch else out[0]
+
+
+def bsn_sort(bits: jax.Array, *, block_r: int = 256,
+             min_rows_for_kernel: int = 8) -> jax.Array:
+    """Descending bitonic sort of thermometer bit vectors (..., L).
+
+    Pads L to the next power of two with 0s (they sink to the tail and are
+    cropped — count-preserving for {0,1} bit inputs) and rows to block_r.
+    """
+    *batch, length = bits.shape
+    r = int(np.prod(batch)) if batch else 1
+    if r < min_rows_for_kernel:
+        return ref.bsn_sort_ref(bits)
+
+    lp = 1 << (length - 1).bit_length()
+    rp = _round_up(r, block_r)
+    x2 = bits.reshape(r, length)
+    x2 = jnp.pad(x2, ((0, rp - r), (0, lp - length)))
+    out = bsn_sort_pallas(x2, descending=True, block_r=block_r,
+                          interpret=use_interpret())
+    out = out[:r, :length]
+    return out.reshape(*batch, length) if batch else out[0]

@@ -1,0 +1,65 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness ground truth).
+
+``ternary_matmul_ref`` is additionally proven equivalent to the bit-exact
+multiplier+BSN circuit simulation in tests/test_hwmodel_sc_layers.py, so
+the chain  Pallas kernel == this oracle == the silicon datapath  is closed.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ternary_matmul_ref", "bsn_sort_ref", "si_epilogue_ref"]
+
+
+def si_epilogue_ref(sum_q: jax.Array, thresholds_q: jax.Array) -> jax.Array:
+    """SI activation on accumulated sums (q domain).
+
+    thresholds_q: (N, out_bsl) int32, ascending along the last axis.
+    out_q = #{j : sum_q >= t_j} - out_bsl/2.
+    """
+    t = thresholds_q.astype(jnp.int32)
+    out_counts = jnp.sum(sum_q[..., None] >= t, axis=-1, dtype=jnp.int32)
+    return out_counts - t.shape[-1] // 2
+
+
+def ternary_matmul_ref(x_q: jax.Array, w_int: jax.Array,
+                       thresholds_q: jax.Array | None = None) -> jax.Array:
+    """int8 activation levels x int8 ternary weights -> int32 sums.
+
+    Functional identity with the SC datapath: the int32 accumulate equals
+    the BSN's sorted popcount (minus the fixed offset), and the optional
+    epilogue is the SI wiring.
+    """
+    sum_q = jax.lax.dot_general(
+        x_q.astype(jnp.int32), w_int.astype(jnp.int32),
+        (((x_q.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+    if thresholds_q is None:
+        return sum_q
+    return si_epilogue_ref(sum_q, thresholds_q)
+
+
+def bsn_sort_ref(bits: jax.Array) -> jax.Array:
+    """Descending sort of the trailing axis (thermometer normal form)."""
+    return jnp.sort(bits, axis=-1)[..., ::-1]
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        causal: bool = True) -> jax.Array:
+    """Plain softmax attention oracle with GQA broadcast.
+
+    q: (B,S,Hq,D); k,v: (B,S,Hkv,D)."""
+    B, S, Hq, D = q.shape
+    Hkv = k.shape[2]
+    g = Hq // Hkv
+    qg = q.reshape(B, S, Hkv, g, D).astype(jnp.float32)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg,
+                        k.astype(jnp.float32)) / jnp.sqrt(float(D))
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", w, v.astype(jnp.float32))
+    return o.reshape(B, S, Hq, D).astype(q.dtype)

@@ -1,0 +1,42 @@
+"""Production mesh construction (DESIGN.md §5).
+
+A FUNCTION, not a module-level constant: importing this module never
+touches jax device state (required so smoke tests see 1 CPU device while
+the dry-run sees 512 forced host devices).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+
+__all__ = ["make_production_mesh", "mesh_chips", "mesh_name"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """(16, 16) data x model single pod; (2, 16, 16) pod x data x model
+    across 2 pods = 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = math.prod(shape)
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, found {len(devices)} — the "
+            "dry-run entrypoint must set XLA_FLAGS="
+            "--xla_force_host_platform_device_count=512 before importing jax")
+    return jax.sharding.Mesh(_device_grid(devices[:n], shape), axes)
+
+
+def _device_grid(devices, shape):
+    import numpy as np
+    return np.asarray(devices, dtype=object).reshape(shape)
+
+
+def mesh_chips(mesh) -> int:
+    return mesh.devices.size
+
+
+def mesh_name(mesh) -> str:
+    return "x".join(str(s) for s in mesh.devices.shape)

@@ -1,0 +1,20 @@
+"""Model zoo: a single unified implementation covering all assigned archs.
+
+transformer.py — period-scan LM (dense/MoE/SSM/hybrid/encoder/VLM)
+attention.py   — GQA flash attention (train/prefill) + cached decode
+ffn.py         — gated / squared-ReLU FFN
+moe.py         — GShard-style expert-parallel MoE
+mamba.py       — chunked selective scan (Jamba)
+rwkv6.py       — RWKV-6 time-mix / channel-mix
+"""
+
+from . import attention, common, ffn, mamba, moe, rwkv6, transformer
+from .transformer import (batch_specs, cache_specs, decode_step, forward,
+                          init_cache, init_params, loss_fn,
+                          make_dummy_batch, param_specs, prefill)
+
+__all__ = [
+    "attention", "common", "ffn", "mamba", "moe", "rwkv6", "transformer",
+    "batch_specs", "cache_specs", "decode_step", "forward", "init_cache",
+    "init_params", "loss_fn", "make_dummy_batch", "param_specs", "prefill",
+]

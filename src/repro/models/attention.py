@@ -1,0 +1,222 @@
+"""GQA attention: flash-style (triangle-exact) training/prefill + cached decode.
+
+The chunked path scans over exactly the lower-triangle (q-block, kv-block)
+pairs with an online-softmax carry, so (a) no (S, S) logits tensor ever
+materializes (required for the 32k prefill cells) and (b) the HLO FLOPs
+match the true causal work — no 2x masked overcompute polluting the
+roofline (DESIGN.md §6).
+
+Decode attends one query against the full KV cache directly; with the
+cache sequence-sharded (long_500k) GSPMD lowers the softmax into the
+flash-decoding LSE-merge pattern automatically.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain, current_rules
+from .common import (DATA, MODEL, apply_rope, dense_apply, dense_init,
+                     dense_spec, norm_apply, norm_init, norm_spec)
+
+__all__ = ["attn_init", "attn_spec", "attn_train", "attn_decode",
+           "flash_attention"]
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+def attn_init(key: jax.Array, cfg: ModelConfig) -> dict:
+    dh, hq, hkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    q = cfg.quant
+    dt = jnp.dtype(cfg.dtype)
+    p = {
+        "wq": dense_init(ks[0], cfg.d_model, hq * dh, q, dtype=dt),
+        "wk": dense_init(ks[1], cfg.d_model, hkv * dh, q, dtype=dt),
+        "wv": dense_init(ks[2], cfg.d_model, hkv * dh, q, dtype=dt),
+        "wo": dense_init(ks[3], hq * dh, cfg.d_model, q, dtype=dt),
+    }
+    if getattr(cfg, "qk_norm", False):
+        p["q_norm"] = norm_init(dh, "rmsnorm")
+        p["k_norm"] = norm_init(dh, "rmsnorm")
+    return p
+
+
+def attn_spec(cfg: ModelConfig) -> dict:
+    q = cfg.quant
+    s = {
+        "wq": dense_spec(DATA, MODEL, q),
+        "wk": dense_spec(DATA, MODEL, q),
+        "wv": dense_spec(DATA, MODEL, q),
+        "wo": dense_spec(MODEL, DATA, q),
+    }
+    if getattr(cfg, "qk_norm", False):
+        s["q_norm"] = norm_spec("rmsnorm")
+        s["k_norm"] = norm_spec("rmsnorm")
+    return s
+
+
+# ---------------------------------------------------------------------------
+# flash attention (pair-list scan, exact triangle FLOPs)
+# ---------------------------------------------------------------------------
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool, chunk: int) -> jax.Array:
+    """q: (B,S,Hkv,G,Dh); k,v: (B,S,Hkv,Dh) -> (B,S,Hkv,G,Dh).
+
+    Scans (i, j) block pairs — j<=i for causal, all for bidirectional —
+    carrying (m, l, acc) online-softmax state per q block; each row i is
+    flushed into the output buffer at its final pair.
+    """
+    B, S, H, G, D = q.shape
+    c = min(chunk, S)
+    if S % c:
+        c = math.gcd(S, c)
+    n = S // c
+    scale = 1.0 / math.sqrt(D)
+    qb = (q * scale).astype(jnp.float32).reshape(B, n, c, H, G, D)
+    kb = k.astype(jnp.float32).reshape(B, n, c, H, D)
+    vb = v.astype(jnp.float32).reshape(B, n, c, H, D)
+
+    if causal:
+        pairs = [(i, j) for i in range(n) for j in range(i + 1)]
+    else:
+        pairs = [(i, j) for i in range(n) for j in range(n)]
+    pi = jnp.asarray([p[0] for p in pairs], jnp.int32)
+    pj = jnp.asarray([p[1] for p in pairs], jnp.int32)
+
+    neg = -1e30
+    m0 = jnp.full((B, H, G, c), neg, jnp.float32)
+    l0 = jnp.zeros((B, H, G, c), jnp.float32)
+    a0 = jnp.zeros((B, H, G, c, D), jnp.float32)
+    tri = (jnp.arange(c)[:, None] >= jnp.arange(c)[None, :])  # (cq, ck)
+
+    # The step is checkpointed: its backward recomputes the (c, c) logits
+    # tile instead of saving one per pair (the stacked residual would be
+    # n_pairs x tile — 10s of GB/device at 32k — the flash point exactly).
+    @jax.checkpoint
+    def step(carry, ij):
+        m, l, acc = carry
+        i, j = ij
+        fresh = (j == 0)
+        m = jnp.where(fresh, neg, m)
+        l = jnp.where(fresh, 0.0, l)
+        acc = jnp.where(fresh, 0.0, acc)
+        qi = jax.lax.dynamic_index_in_dim(qb, i, 1, keepdims=False)
+        kj = jax.lax.dynamic_index_in_dim(kb, j, 1, keepdims=False)
+        vj = jax.lax.dynamic_index_in_dim(vb, j, 1, keepdims=False)
+        logits = jnp.einsum("bqhgd,bkhd->bhgqk", qi, kj)
+        if causal:  # mask only the diagonal block's upper triangle
+            diag = (i == j)
+            logits = jnp.where(jnp.logical_or(~diag, tri), logits, neg)
+        blk_max = jnp.max(logits, axis=-1)
+        new_m = jnp.maximum(m, blk_max)
+        p = jnp.exp(logits - new_m[..., None])
+        corr = jnp.exp(m - new_m)
+        l = l * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum("bhgqk,bkhd->bhgqd", p, vj)
+        # emit this pair's normalized tile; the post-scan gather keeps only
+        # each row's final (diagonal / last-column) emission
+        o_blk = (acc / jnp.maximum(l[..., None], 1e-30))
+        o_blk = jnp.moveaxis(o_blk, -2, 1).astype(q.dtype)    # (B,c,H,G,D)
+        return (new_m, l, acc), o_blk
+
+    (_, _, _), ys = jax.lax.scan(step, (m0, l0, a0), (pi, pj))
+    if causal:  # row i finalized at its diagonal pair
+        final_idx = jnp.asarray([i * (i + 1) // 2 + i for i in range(n)])
+    else:
+        final_idx = jnp.asarray([(i + 1) * n - 1 for i in range(n)])
+    out = jnp.moveaxis(ys[final_idx], 0, 1)                   # (B,n,c,H,G,D)
+    return out.reshape(B, S, H, G, D)
+
+
+# ---------------------------------------------------------------------------
+# full layers
+# ---------------------------------------------------------------------------
+
+def _project_qkv(p: dict, x: jax.Array, cfg: ModelConfig,
+                 positions: jax.Array):
+    B, S, _ = x.shape
+    dh, hq, hkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    q = dense_apply(p["wq"], x, cfg.quant).reshape(B, S, hq, dh)
+    k = dense_apply(p["wk"], x, cfg.quant).reshape(B, S, hkv, dh)
+    v = dense_apply(p["wv"], x, cfg.quant).reshape(B, S, hkv, dh)
+    if "q_norm" in p:
+        q = norm_apply(p["q_norm"], q, "rmsnorm")
+        k = norm_apply(p["k_norm"], k, "rmsnorm")
+    q = apply_rope(q, positions, dh, cfg.rope_fraction, cfg.rope_theta)
+    k = apply_rope(k, positions, dh, cfg.rope_fraction, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_train(p: dict, x: jax.Array, cfg: ModelConfig,
+               positions: jax.Array):
+    """Full-sequence attention (train / prefill). Returns (y, (k, v))."""
+    B, S, _ = x.shape
+    dh, hq, hkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    g = hq // hkv
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    qg = q.reshape(B, S, hkv, g, dh)
+    o = flash_attention(qg, k, v, cfg.causal, cfg.attn_q_chunk)
+    o = o.reshape(B, S, hq * dh)
+    y = dense_apply(p["wo"], o, cfg.quant)
+    return y, (k, v)
+
+
+def _decode_kv_time_axis(cfg: ModelConfig, batch: int) -> str | None:
+    """Which logical axis carries the KV cache's time dimension — must
+    mirror launch/dryrun.py's cache_specs choice so the attention einsums
+    are constrained consistently with the cache's input sharding."""
+    rules = current_rules()
+    if rules is None:
+        return None
+    sizes = dict(zip(rules.mesh.axis_names, rules.mesh.devices.shape))
+    if batch == 1:
+        return "seq"                              # long_500k context shard
+    if cfg.n_kv_heads % sizes.get("model", 1) != 0:
+        return "model"                            # flash-decoding split-KV
+    return None                                   # heads carry "model"
+
+
+def attn_decode(p: dict, x: jax.Array, cfg: ModelConfig,
+                k_cache: jax.Array, v_cache: jax.Array, pos: jax.Array):
+    """One-token decode. x: (B, 1, D); caches: (B, T, Hkv, Dh); pos scalar.
+
+    Returns (y (B,1,D), new k_cache, new v_cache).  When the cache's time
+    axis is sharded ("model" for small-KV-head archs, "seq" for long
+    contexts), the logits/output einsums are constrained to keep the
+    partials sharded over time and merge via psum — flash-decoding —
+    instead of letting GSPMD all-gather the whole cache (54 GB/step for
+    qwen3 decode_32k; see EXPERIMENTS.md §Perf).
+    """
+    B, _, _ = x.shape
+    T = k_cache.shape[1]
+    dh, hq, hkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    g = hq // hkv
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        k_cache, k.astype(k_cache.dtype), pos, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        v_cache, v.astype(v_cache.dtype), pos, axis=1)
+    qg = q.reshape(B, hkv, g, dh)
+    t_axis = _decode_kv_time_axis(cfg, B)
+    logits = jnp.einsum("bhgd,bthd->bhgt", qg.astype(jnp.float32),
+                        k_cache.astype(jnp.float32)) / math.sqrt(dh)
+    if t_axis is not None:
+        logits = constrain(logits, "batch" if B > 1 else None,
+                           None, None, t_axis)
+    valid = (jnp.arange(T) <= pos)[None, None, None, :]
+    logits = jnp.where(valid, logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bhgt,bthd->bhgd", w, v_cache.astype(jnp.float32))
+    o = o.reshape(B, 1, hq * dh).astype(x.dtype)
+    y = dense_apply(p["wo"], o, cfg.quant)
+    return y, k_cache, v_cache

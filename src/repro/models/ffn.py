@@ -1,0 +1,50 @@
+"""Dense FFN (gated SwiGLU/GeGLU or plain squared-ReLU) — SC-quantized.
+
+nemotron's squared-ReLU is the paper's best case: accumulate -> monotone
+activation is *exactly* the BSN+SI pattern (DESIGN.md §4).  Gated variants
+quantize the three projections; the gate multiply stays in the residual
+(high-precision) domain, mirroring §III's split.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.configs.base import ModelConfig
+from .common import ACT_FNS, DATA, MODEL, dense_apply, dense_init, dense_spec
+
+__all__ = ["ffn_init", "ffn_spec", "ffn_apply"]
+
+
+def ffn_init(key: jax.Array, cfg: ModelConfig, d_ff: int | None = None) -> dict:
+    import jax.numpy as jnp
+    d_ff = d_ff or cfg.d_ff
+    q = cfg.quant
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.ffn_gated:
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {"w_gate": dense_init(k1, cfg.d_model, d_ff, q, dtype=dt),
+                "w_up": dense_init(k2, cfg.d_model, d_ff, q, dtype=dt),
+                "w_down": dense_init(k3, d_ff, cfg.d_model, q, dtype=dt)}
+    k1, k2 = jax.random.split(key, 2)
+    return {"w_up": dense_init(k1, cfg.d_model, d_ff, q, dtype=dt),
+            "w_down": dense_init(k2, d_ff, cfg.d_model, q, dtype=dt)}
+
+
+def ffn_spec(cfg: ModelConfig) -> dict:
+    q = cfg.quant
+    s = {"w_up": dense_spec(DATA, MODEL, q),
+         "w_down": dense_spec(MODEL, DATA, q)}
+    if cfg.ffn_gated:
+        s["w_gate"] = dense_spec(DATA, MODEL, q)
+    return s
+
+
+def ffn_apply(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    act = ACT_FNS[cfg.ffn_act]
+    if cfg.ffn_gated:
+        h = act(dense_apply(p["w_gate"], x, cfg.quant)) \
+            * dense_apply(p["w_up"], x, cfg.quant)
+    else:
+        h = act(dense_apply(p["w_up"], x, cfg.quant))
+    return dense_apply(p["w_down"], h, cfg.quant)

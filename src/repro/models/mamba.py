@@ -1,0 +1,172 @@
+"""Mamba (S6) selective-state-space mixer — Jamba's dominant layer type.
+
+TPU adaptation (DESIGN.md §2/§4): the CUDA selective-scan becomes a
+*chunked associative scan* — within a chunk of ``cfg.mamba_chunk`` tokens
+the recurrence h_t = dA_t h_{t-1} + dBx_t runs as a log-depth
+``associative_scan`` on (B, c, D, N) tiles that fit VMEM-scale working
+sets; chunks are threaded by a ``lax.scan`` carrying only the (B, D, N)
+boundary state, so the (B, S, D, N) tensor never materializes (at jamba
+train scale that tensor would be ~0.5 PB).
+
+The selective scan itself stays bf16/f32 — a data-dependent multiplicative
+recurrence is not an accumulate->monotone-activate pattern, so the paper's
+BSN/SI does not apply here (DESIGN.md §4); the four projections around it
+are SC-quantized.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from .common import DATA, MODEL, dense_apply, dense_init, dense_spec
+
+__all__ = ["mamba_init", "mamba_spec", "mamba_train", "mamba_decode",
+           "mamba_state_init"]
+
+
+def mamba_init(key: jax.Array, cfg: ModelConfig) -> dict:
+    d, din, n, r = (cfg.d_model, cfg.mamba_d_inner, cfg.mamba_d_state,
+                    cfg.dt_rank)
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 6)
+    q = cfg.quant
+    # S4D-real init for A
+    a = jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32)[None, :], (din, 1))
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * din, q, dtype=dtype),
+        "conv_w": (jax.random.normal(ks[1], (din, cfg.mamba_d_conv),
+                                     jnp.float32) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((din,), jnp.float32),
+        "x_proj": dense_init(ks[2], din, r + 2 * n, q, dtype=dtype),
+        "dt_proj": dense_init(ks[3], r, din, q, dtype=dtype),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.clip(jax.random.uniform(ks[4], (din,)) * 0.1, 1e-3, None))),
+        "a_log": jnp.log(a),
+        "d_skip": jnp.ones((din,), jnp.float32),
+        "out_proj": dense_init(ks[5], din, d, q, dtype=dtype),
+    }
+
+
+def mamba_spec(cfg: ModelConfig) -> dict:
+    q = cfg.quant
+    return {
+        "in_proj": dense_spec(DATA, MODEL, q),
+        "conv_w": P(MODEL, None),
+        "conv_b": P(MODEL),
+        "x_proj": dense_spec(MODEL, None, q),
+        "dt_proj": dense_spec(None, MODEL, q),
+        "dt_bias": P(MODEL),
+        "a_log": P(MODEL, None),
+        "d_skip": P(MODEL),
+        "out_proj": dense_spec(MODEL, DATA, q),
+    }
+
+
+def _split_xz(p, u, cfg):
+    xz = dense_apply(p["in_proj"], u, cfg.quant)
+    din = cfg.mamba_d_inner
+    return xz[..., :din], xz[..., din:]
+
+
+def _ssm_params(p, x, cfg):
+    """x: (..., din) -> dt (..., din), B (..., N), C (..., N)."""
+    n, r = cfg.mamba_d_state, cfg.dt_rank
+    dbc = dense_apply(p["x_proj"], x, cfg.quant)
+    dt_r, bm, cm = (dbc[..., :r], dbc[..., r:r + n], dbc[..., r + n:])
+    dt = jax.nn.softplus(
+        dense_apply(p["dt_proj"], dt_r, cfg.quant).astype(jnp.float32)
+        + p["dt_bias"])
+    return dt, bm.astype(jnp.float32), cm.astype(jnp.float32)
+
+
+def _conv_full(p, x, cfg):
+    """Causal depthwise conv over (B, S, din) as k weighted shifts."""
+    k = cfg.mamba_d_conv
+    w = p["conv_w"].astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    out = xf * w[:, k - 1]
+    for i in range(1, k):
+        shifted = jnp.pad(xf[:, :-i, :], ((0, 0), (i, 0), (0, 0)))
+        out = out + shifted * w[:, k - 1 - i]
+    return (out + p["conv_b"]).astype(x.dtype)
+
+
+def _assoc_combine(left, right):
+    a1, b1 = left
+    a2, b2 = right
+    return a1 * a2, b1 * a2 + b2
+
+
+def mamba_train(p: dict, u: jax.Array, cfg: ModelConfig):
+    """u: (B, S, D) -> (y, (h_final, conv_tail)) for prefill caching."""
+    B, S, _ = u.shape
+    din, n = cfg.mamba_d_inner, cfg.mamba_d_state
+    c = min(cfg.mamba_chunk, S)
+    while S % c:
+        c -= 1
+    nc = S // c
+
+    x_raw, z = _split_xz(p, u, cfg)
+    x = _conv_full(p, x_raw, cfg)
+    x = jax.nn.silu(x)
+    dt, bm, cm = _ssm_params(p, x, cfg)
+    a = -jnp.exp(p["a_log"])                              # (din, n)
+
+    xf = x.astype(jnp.float32)
+    # chunked scan: xs time-major over chunks
+    def chunk_step(h0, inp):
+        xc, dtc, bc, cc = inp                             # (B,c,din),(B,c,n)..
+        da = jnp.exp(dtc[..., None] * a)                  # (B,c,din,n)
+        dbx = (dtc * xc)[..., None] * bc[:, :, None, :]   # (B,c,din,n)
+        pa, hs = jax.lax.associative_scan(_assoc_combine, (da, dbx), axis=1)
+        hs = hs + pa * h0[:, None]                        # include carry-in
+        y = jnp.einsum("bcdn,bcn->bcd", hs, cc)
+        return hs[:, -1], y
+
+    def to_chunks(t):
+        return jnp.moveaxis(t.reshape(B, nc, c, *t.shape[2:]), 1, 0)
+
+    h0 = jnp.zeros((B, din, n), jnp.float32)
+    hT, ys = jax.lax.scan(chunk_step, h0,
+                          (to_chunks(xf), to_chunks(dt), to_chunks(bm),
+                           to_chunks(cm)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, din)
+    y = y + xf * p["d_skip"]
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(u.dtype)
+    out = dense_apply(p["out_proj"], y, cfg.quant)
+    # decode cache: final SSM state + the last (k-1) *pre-conv* inputs
+    conv_tail = x_raw[:, S - (cfg.mamba_d_conv - 1):, :]
+    return out, (hT, conv_tail)
+
+
+def mamba_state_init(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    din, n, k = cfg.mamba_d_inner, cfg.mamba_d_state, cfg.mamba_d_conv
+    return {"h": jnp.zeros((batch, din, n), jnp.float32),
+            "conv": jnp.zeros((batch, k - 1, din), dtype)}
+
+
+def mamba_decode(p: dict, u: jax.Array, cfg: ModelConfig, state: dict):
+    """u: (B, 1, D); state {"h": (B,din,n), "conv": (B,k-1,din)}."""
+    B = u.shape[0]
+    k = cfg.mamba_d_conv
+    x, z = _split_xz(p, u, cfg)                           # (B,1,din)
+    x1 = x[:, 0, :]
+    w = p["conv_w"].astype(jnp.float32)
+    conv = state["conv"].astype(jnp.float32)
+    xc = x1.astype(jnp.float32) * w[:, k - 1] + p["conv_b"]
+    for i in range(1, k):
+        xc = xc + conv[:, k - 1 - i, :] * w[:, k - 1 - i]
+    xc = jax.nn.silu(xc)
+    dt, bm, cm = _ssm_params(p, xc.astype(u.dtype)[:, None, :], cfg)
+    dt, bm, cm = dt[:, 0], bm[:, 0], cm[:, 0]
+    a = -jnp.exp(p["a_log"])
+    da = jnp.exp(dt[..., None] * a)                       # (B,din,n)
+    h = state["h"] * da + (dt * xc)[..., None] * bm[:, None, :]
+    y = jnp.einsum("bdn,bn->bd", h, cm) + xc * p["d_skip"]
+    y = (y * jax.nn.silu(z[:, 0].astype(jnp.float32))).astype(u.dtype)
+    out = dense_apply(p["out_proj"], y[:, None, :], cfg.quant)
+    new_conv = jnp.concatenate([state["conv"][:, 1:], x], axis=1)
+    return out, {"h": h, "conv": new_conv}

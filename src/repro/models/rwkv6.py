@@ -1,0 +1,268 @@
+"""RWKV-6 "Finch" mixer: data-dependent-decay linear attention.
+
+Attention-free: the time-mix recurrence
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t,   y_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+carries a per-head (Dh x Dh) state, so long_500k decode is O(1) in context
+length.  Training/prefill runs the recurrence as a ``lax.scan`` over
+tokens (the baseline; the chunked-GLA matmul form is a §Perf hillclimb
+candidate — see EXPERIMENTS.md).
+
+The decay w_t = exp(-exp(w0 + lora(x))) is a multiplicative data-dependent
+recurrence — not SC-SI-realizable (DESIGN.md §4) — kept f32; the R/K/V/G/O
+projections and the channel-mix matmuls (whose squared-ReLU is *exactly*
+SI-realizable) are SC-quantized.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from .common import (DATA, MODEL, dense_apply, dense_init, dense_spec,
+                     norm_apply, norm_init, norm_spec)
+
+__all__ = ["rwkv_tmix_init", "rwkv_tmix_spec", "rwkv_tmix_train",
+           "rwkv_tmix_decode", "rwkv_cmix_init", "rwkv_cmix_spec",
+           "rwkv_cmix_train", "rwkv_cmix_decode", "rwkv_state_init"]
+
+_MIX_NAMES = ("w", "k", "v", "r", "g")
+
+
+def _n_heads(cfg: ModelConfig) -> int:
+    return cfg.d_model // cfg.rwkv_head_dim
+
+
+def rwkv_tmix_init(key: jax.Array, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    h, dh = _n_heads(cfg), cfg.rwkv_head_dim
+    lora = max(32, d // 64)
+    lora_w = cfg.rwkv_lora_w or max(64, d // 32)
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 8)
+    q = cfg.quant
+    p = {
+        "maa_x": jnp.zeros((d,), jnp.float32),
+        "maa": jnp.zeros((5, d), jnp.float32),            # w,k,v,r,g
+        "tm_w1": (jax.random.normal(ks[0], (d, 5 * lora), jnp.float32)
+                  * 1e-2).astype(dtype),
+        "tm_w2": (jax.random.normal(ks[1], (5, lora, d), jnp.float32)
+                  * 1e-2).astype(dtype),
+        "w0": jnp.full((d,), -6.0, jnp.float32),
+        "dw1": (jax.random.normal(ks[2], (d, lora_w), jnp.float32)
+                * 1e-2).astype(dtype),
+        "dw2": (jax.random.normal(ks[3], (lora_w, d), jnp.float32)
+                * 1e-2).astype(dtype),
+        "u": jnp.zeros((h, dh), jnp.float32),
+        "wr": dense_init(ks[4], d, d, q, dtype=dtype),
+        "wk": dense_init(ks[5], d, d, q, dtype=dtype),
+        "wv": dense_init(ks[6], d, d, q, dtype=dtype),
+        "wg": dense_init(ks[7], d, d, q, dtype=dtype),
+        "wo": dense_init(jax.random.fold_in(key, 99), d, d, q, dtype=dtype),
+        "ln_x": norm_init(d, "layernorm"),                # per-head groupnorm
+    }
+    return p
+
+
+def rwkv_tmix_spec(cfg: ModelConfig) -> dict:
+    # LoRA adapters (tm_w1/dw1 etc, <=0.5% of params) are REPLICATED:
+    # sharding their contraction dim turns every adapter matmul into a
+    # (B,S,*) activation all-reduce — 260 GB/step on train_4k (§Perf).
+    q = cfg.quant
+    return {
+        # tm_w2 stays output-sharded: replicating it makes every ddlerp
+        # output full-width on every chip (+14 TB/step memory for -14 GB
+        # wire — measured, §Perf cell B iter 3, reverted)
+        "maa_x": P(None), "maa": P(None, None),
+        "tm_w1": P(None, None), "tm_w2": P(None, None, MODEL),
+        "w0": P(MODEL), "dw1": P(None, None), "dw2": P(None, MODEL),
+        "u": P(MODEL, None),
+        "wr": dense_spec(DATA, MODEL, q), "wk": dense_spec(DATA, MODEL, q),
+        "wv": dense_spec(DATA, MODEL, q), "wg": dense_spec(DATA, MODEL, q),
+        "wo": dense_spec(MODEL, DATA, q),
+        "ln_x": norm_spec("layernorm"),
+    }
+
+
+def _ddlerp(p, x, sx):
+    """Data-dependent token-shift interpolation (the Finch trick)."""
+    xxx = x + sx * p["maa_x"]
+    lora = jnp.tanh(xxx @ p["tm_w1"].astype(x.dtype))
+    B, S, _ = lora.shape
+    lora = lora.reshape(B, S, 5, -1)
+    adj = jnp.einsum("bsfl,fld->bsfd", lora, p["tm_w2"].astype(x.dtype))
+    mixed = []
+    for i, _ in enumerate(_MIX_NAMES):
+        mi = p["maa"][i] + adj[:, :, i, :].astype(jnp.float32)
+        mixed.append(x + sx * mi.astype(x.dtype))
+    return mixed                                           # xw, xk, xv, xr, xg
+
+
+def _decay(p, xw):
+    ww = jnp.tanh(xw @ p["dw1"].astype(xw.dtype)) @ p["dw2"].astype(xw.dtype)
+    return jnp.exp(-jnp.exp(p["w0"] + ww.astype(jnp.float32)))  # (B,S,D) in (0,1)
+
+
+def _wkv_scan(r, k, v, w, u, s0):
+    """r,k,v: (B,S,H,Dh) bf16; w f32 decay; s0: (B,H,Dh,Dh) f32 state.
+
+    The recurrence is head-local: carry and time-major inputs are pinned
+    head-sharded ("model") so every step is collective-free.  r/k/v ride
+    in the compute dtype (the f32 state/decay carry the numerics); the
+    emitted y is compute-dtype too — halves the scan's residual traffic.
+    """
+    def step(s, inp):
+        rt, kt, vt, wt = inp                               # (B,H,Dh) f32
+        kv = kt[..., :, None] * vt[..., None, :]           # (B,H,K,V)
+        y = jnp.einsum("bhk,bhkv->bhv", rt, s + u[None, :, :, None] * kv)
+        s = wt[..., :, None] * s + kv
+        return s, y
+
+    # note: no sharding constraints here — the recurrence inherits the
+    # head sharding of r/k/v/w and stays collective-free (verified by HLO
+    # attribution; forcing constraints only added layout copies — §Perf)
+    tm = lambda t: jnp.moveaxis(t, 1, 0).astype(jnp.float32)  # time-major
+    sT, ys = jax.lax.scan(step, s0, (tm(r), tm(k), tm(v), tm(w)))
+    return jnp.moveaxis(ys, 0, 1), sT                      # (B,S,H,Dh), state
+
+
+def _wkv_chunked(r, k, v, w, u, s0, chunk: int):
+    """GLA-style quasi-matmul wkv (exactly the recurrence, chunked).
+
+    Per chunk of C tokens (log-space decays, all exponent differences
+    <= 0 so no overflow at any decay strength):
+
+        y_t = (r_t . e^{L_{t-1}}) @ S_0                        (inter)
+            + sum_{s<t} [sum_k r_t k_s e^{L_{t-1}-L_s}]_k v_s  (intra)
+            + ((r_t . u) @ k_t) v_t                            (bonus)
+        S_C = e^{L_C} . S_0 + sum_s (k_s . e^{L_C - L_s}) v_s^T
+
+    Replaces the S-step serial scan with S/C steps of batched dense work
+    — the MXU-friendly form the token recurrence can't reach (§Perf).
+    """
+    B, S, H, D = r.shape
+    C = min(chunk, S)
+    while S % C:
+        C -= 1
+    nc = S // C
+    f32 = jnp.float32
+
+    def to_chunks(t):
+        return jnp.moveaxis(t.reshape(B, nc, C, H, D), 1, 0).astype(f32)
+
+    rc, kc, vc = to_chunks(r), to_chunks(k), to_chunks(v)
+    logw = jnp.log(jnp.clip(to_chunks(w), 1e-30, 1.0))
+    tri = jnp.tril(jnp.ones((C, C), bool), k=-1)          # strict lower
+
+    def chunk_step(s0, inp):
+        rc, kc, vc, lw = inp                              # (B,C,H,D)
+        L = jnp.cumsum(lw, axis=1)                        # L_t
+        Lprev = L - lw                                    # L_{t-1}
+        r_w = rc * jnp.exp(Lprev)
+        y_inter = jnp.einsum("bchk,bhkv->bchv", r_w, s0)
+        # intra attention matrix with per-channel decays
+        diff = Lprev[:, :, None, :, :] - L[:, None, :, :, :]  # (B,t,s,H,K)
+        diff = jnp.where(tri[None, :, :, None, None], diff, -1e30)
+        a = jnp.einsum("bthk,bshk,btshk->bths", rc, kc, jnp.exp(diff))
+        bonus = jnp.einsum("bthk,bthk->bth", rc * u[None, None], kc)
+        a = a + bonus[..., None] * jnp.eye(C)[None, :, None, :]
+        y = y_inter + jnp.einsum("bths,bshv->bthv", a, vc)
+        # carry state across the chunk boundary
+        L_C = L[:, -1]                                    # (B,H,K)
+        k_w = kc * jnp.exp(L_C[:, None] - L)
+        s1 = s0 * jnp.exp(L_C)[..., None] \
+            + jnp.einsum("bshk,bshv->bhkv", k_w, vc)
+        return s1, y
+
+    sT, ys = jax.lax.scan(chunk_step, s0, (rc, kc, vc, logw))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, H, D)
+    return y, sT
+
+
+def _tmix_core(p, x, sx, cfg, s0):
+    B, S, d = x.shape
+    h, dh = _n_heads(cfg), cfg.rwkv_head_dim
+    xw, xk, xv, xr, xg = _ddlerp(p, x, sx)
+    w = _decay(p, xw).reshape(B, S, h, dh)
+    r = dense_apply(p["wr"], xr, cfg.quant).reshape(B, S, h, dh)
+    k = dense_apply(p["wk"], xk, cfg.quant).reshape(B, S, h, dh)
+    v = dense_apply(p["wv"], xv, cfg.quant).reshape(B, S, h, dh)
+    g = jax.nn.silu(dense_apply(p["wg"], xg, cfg.quant))
+    if cfg.rwkv_wkv_impl == "chunked" and S > 1:
+        y, sT = _wkv_chunked(r, k, v, w, p["u"], s0, cfg.rwkv_chunk)
+    else:
+        y, sT = _wkv_scan(r, k, v, w, p["u"], s0)
+    y = y.reshape(B, S, d)
+    y = norm_apply(p["ln_x"], y, "layernorm", eps=1e-5, groups=h)
+    out = dense_apply(p["wo"], (y * g).astype(x.dtype), cfg.quant)
+    return out, sT
+
+
+def rwkv_tmix_train(p: dict, x: jax.Array, cfg: ModelConfig):
+    """Returns (y, (state_T, x_last)) for prefill caching."""
+    B, S, d = x.shape
+    h, dh = _n_heads(cfg), cfg.rwkv_head_dim
+    prev = jnp.pad(x[:, :-1, :], ((0, 0), (1, 0), (0, 0)))
+    sx = prev - x
+    s0 = jnp.zeros((B, h, dh, dh), jnp.float32)
+    out, sT = _tmix_core(p, x, sx, cfg, s0)
+    return out, (sT, x[:, -1, :])
+
+
+def rwkv_tmix_decode(p: dict, x: jax.Array, cfg: ModelConfig, state: dict):
+    """x: (B,1,D); state {"s": (B,H,Dh,Dh), "shift": (B,D)}."""
+    sx = state["shift"][:, None, :].astype(x.dtype) - x
+    out, sT = _tmix_core(p, x, sx, cfg, state["s"])
+    return out, {"s": sT, "shift": x[:, 0, :]}
+
+
+# ---------------------------------------------------------------------------
+# channel mix
+# ---------------------------------------------------------------------------
+
+def rwkv_cmix_init(key: jax.Array, cfg: ModelConfig) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 3)
+    q = cfg.quant
+    return {
+        "mk": jnp.zeros((d,), jnp.float32),
+        "mr": jnp.zeros((d,), jnp.float32),
+        "wk": dense_init(ks[0], d, f, q, dtype=dtype),
+        "wv": dense_init(ks[1], f, d, q, dtype=dtype),
+        "wr": dense_init(ks[2], d, d, q, dtype=dtype),
+    }
+
+
+def rwkv_cmix_spec(cfg: ModelConfig) -> dict:
+    q = cfg.quant
+    return {"mk": P(None), "mr": P(None),
+            "wk": dense_spec(DATA, MODEL, q),
+            "wv": dense_spec(MODEL, DATA, q),
+            "wr": dense_spec(DATA, None, q)}
+
+
+def _cmix_core(p, x, sx, cfg):
+    xk = x + sx * p["mk"].astype(x.dtype)
+    xr = x + sx * p["mr"].astype(x.dtype)
+    k = jnp.square(jax.nn.relu(dense_apply(p["wk"], xk, cfg.quant)))
+    kv = dense_apply(p["wv"], k, cfg.quant)
+    return jax.nn.sigmoid(dense_apply(p["wr"], xr, cfg.quant)) * kv
+
+
+def rwkv_cmix_train(p: dict, x: jax.Array, cfg: ModelConfig):
+    prev = jnp.pad(x[:, :-1, :], ((0, 0), (1, 0), (0, 0)))
+    return _cmix_core(p, x, prev - x, cfg), x[:, -1, :]
+
+
+def rwkv_cmix_decode(p: dict, x: jax.Array, cfg: ModelConfig, state: dict):
+    sx = state["shift"][:, None, :].astype(x.dtype) - x
+    return _cmix_core(p, x, sx, cfg), {"shift": x[:, 0, :]}
+
+
+def rwkv_state_init(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    h, dh, d = _n_heads(cfg), cfg.rwkv_head_dim, cfg.d_model
+    return {"s": jnp.zeros((batch, h, dh, dh), jnp.float32),
+            "shift": jnp.zeros((batch, d), dtype)}

@@ -1,0 +1,456 @@
+"""Unified LM: dense / MoE / SSM / hybrid / encoder / VLM-backbone.
+
+The architecture is a *period* of heterogeneous layers (cfg.period)
+repeated ``cfg.n_periods`` times; parameters are stacked over the period
+axis and the forward pass is a single ``lax.scan`` (compile time stays
+flat in depth — required for the 94-layer qwen3 dry-run), with per-period
+``jax.checkpoint`` remat.
+
+High-precision-residual fusion (paper §III): in ``sc_qat`` mode the
+datapath matmuls run at ``act_bsl`` while the residual stream re-quantizes
+at ``resid_bsl`` after every add (learned scales ``alpha_r*``), the LM
+analogue of Fig 6(b).
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import LayerSpec, ModelConfig
+from repro.core.sc_layers import sc_residual_quant
+from repro.distributed.sharding import constrain
+
+from . import attention, ffn, mamba, moe, rwkv6
+from .common import (DATA, MODEL, add_leading_none, dense_apply, dense_init,
+                     dense_spec, embed_init, embed_spec, norm_apply,
+                     norm_init, norm_spec)
+
+__all__ = ["init_params", "param_specs", "forward", "loss_fn", "init_cache",
+           "cache_specs", "decode_step", "prefill", "batch_specs",
+           "make_dummy_batch"]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+_MIXER_INIT = {"attn": attention.attn_init, "mamba": mamba.mamba_init,
+               "rwkv6": rwkv6.rwkv_tmix_init}
+_MIXER_SPEC = {"attn": attention.attn_spec, "mamba": mamba.mamba_spec,
+               "rwkv6": rwkv6.rwkv_tmix_spec}
+
+
+def _ffn_init(key, cfg: ModelConfig, kind: str):
+    if kind == "dense":
+        return ffn.ffn_init(key, cfg)
+    if kind == "moe":
+        return moe.moe_init(key, cfg)
+    if kind == "rwkv_cmix":
+        return rwkv6.rwkv_cmix_init(key, cfg)
+    raise ValueError(kind)
+
+
+def _ffn_spec(cfg: ModelConfig, kind: str, serving: bool = False):
+    if kind == "dense":
+        return ffn.ffn_spec(cfg)
+    if kind == "moe":
+        return moe.moe_spec(cfg, serving=serving)
+    if kind == "rwkv_cmix":
+        return rwkv6.rwkv_cmix_spec(cfg)
+    raise ValueError(kind)
+
+
+def _position_init(key: jax.Array, cfg: ModelConfig, spec: LayerSpec) -> dict:
+    k1, k2 = jax.random.split(key)
+    p = {"norm1": norm_init(cfg.d_model, cfg.norm),
+         "mixer": _MIXER_INIT[spec.mixer](k1, cfg)}
+    if spec.ffn != "none":
+        p["norm2"] = norm_init(cfg.d_model, cfg.norm)
+        p["ffn"] = _ffn_init(k2, cfg, spec.ffn)
+    if cfg.quant.enabled:
+        p["alpha_r1"] = jnp.asarray(0.05, jnp.float32)
+        p["alpha_r2"] = jnp.asarray(0.05, jnp.float32)
+    return p
+
+
+def _period_init(key: jax.Array, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, len(cfg.period))
+    return {f"p{i}": _position_init(ks[i], cfg, spec)
+            for i, spec in enumerate(cfg.period)}
+
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> dict:
+    dtype = jnp.dtype(cfg.dtype)
+    k_emb, k_per, k_head, k_front = jax.random.split(key, 4)
+    params = {"embed": embed_init(k_emb, cfg.padded_vocab, cfg.d_model,
+                                  dtype)}
+    period_keys = jax.random.split(k_per, cfg.n_periods)
+    params["periods"] = jax.vmap(partial(_period_init, cfg=cfg))(period_keys)
+    params["final_norm"] = norm_init(cfg.d_model, cfg.norm)
+    params["lm_head"] = dense_init(k_head, cfg.d_model, cfg.padded_vocab,
+                                   cfg.quant, dtype=dtype)
+    if cfg.frontend == "vision_stub":
+        kv1, kv2 = jax.random.split(k_front)
+        params["frontend"] = {
+            "w1": dense_init(kv1, 1024, cfg.d_model, cfg.quant, dtype=dtype),
+            "w2": dense_init(kv2, cfg.d_model, cfg.d_model, cfg.quant,
+                             dtype=dtype)}
+    elif cfg.frontend == "audio_stub":
+        params["frontend"] = {
+            "w1": dense_init(k_front, 512, cfg.d_model, cfg.quant,
+                             dtype=dtype)}
+    return params
+
+
+def param_specs(cfg: ModelConfig, serving: bool = False) -> dict:
+    def pos_spec(spec: LayerSpec) -> dict:
+        s = {"norm1": norm_spec(cfg.norm),
+             "mixer": _MIXER_SPEC[spec.mixer](cfg)}
+        if spec.ffn != "none":
+            s["norm2"] = norm_spec(cfg.norm)
+            s["ffn"] = _ffn_spec(cfg, spec.ffn, serving=serving)
+        if cfg.quant.enabled:
+            s["alpha_r1"] = P()
+            s["alpha_r2"] = P()
+        return s
+
+    periods = {f"p{i}": pos_spec(spec) for i, spec in enumerate(cfg.period)}
+    specs = {
+        "embed": embed_spec(),
+        "periods": add_leading_none(periods),
+        "final_norm": norm_spec(cfg.norm),
+        "lm_head": dense_spec(DATA, MODEL, cfg.quant),
+    }
+    if cfg.frontend == "vision_stub":
+        specs["frontend"] = {"w1": dense_spec(None, None, cfg.quant),
+                             "w2": dense_spec(None, None, cfg.quant)}
+    elif cfg.frontend == "audio_stub":
+        specs["frontend"] = {"w1": dense_spec(None, None, cfg.quant)}
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# shared layer application
+# ---------------------------------------------------------------------------
+
+def _residual_add(x, dx, lp, name, cfg: ModelConfig):
+    # dtype-preserving residual quant: an f32 round-trip here would promote
+    # the whole backward pass (every TP all-reduce) to f32 — §Perf cell C
+    y = x + dx
+    if cfg.quant.enabled and cfg.quant.mode == "sc_qat":
+        y = sc_residual_quant(y, lp[name], cfg.quant)
+    return y
+
+
+def _apply_position(lp: dict, spec: LayerSpec, x, cfg: ModelConfig,
+                    positions, mode: str, cstate: dict | None, pos):
+    """One layer (mixer + ffn). Returns (x, aux, new_cache_entry)."""
+    aux = jnp.zeros((), jnp.float32)
+    centry = {}
+    h = norm_apply(lp["norm1"], x, cfg.norm)
+    if spec.mixer == "attn":
+        if mode == "decode":
+            dx, kc, vc = attention.attn_decode(
+                lp["mixer"], h, cfg, cstate["k"], cstate["v"], pos)
+            centry = {"k": kc, "v": vc}
+        else:
+            dx, (k, v) = attention.attn_train(lp["mixer"], h, cfg, positions)
+            if mode == "prefill":
+                centry = {"k": k, "v": v}
+    elif spec.mixer == "mamba":
+        if mode == "decode":
+            dx, centry = mamba.mamba_decode(lp["mixer"], h, cfg, cstate)
+        else:
+            dx, (hT, conv) = mamba.mamba_train(lp["mixer"], h, cfg)
+            if mode == "prefill":
+                centry = {"h": hT, "conv": conv}
+    elif spec.mixer == "rwkv6":
+        if mode == "decode":
+            dx, centry = rwkv6.rwkv_tmix_decode(lp["mixer"], h, cfg, cstate)
+        else:
+            dx, (sT, xlast) = rwkv6.rwkv_tmix_train(lp["mixer"], h, cfg)
+            if mode == "prefill":
+                centry = {"s": sT, "shift": xlast}
+    else:
+        raise ValueError(spec.mixer)
+    x = _residual_add(x, dx, lp, "alpha_r1", cfg)
+
+    if spec.ffn != "none":
+        h2 = norm_apply(lp["norm2"], x, cfg.norm)
+        if spec.ffn == "dense":
+            dx2 = ffn.ffn_apply(lp["ffn"], h2, cfg)
+        elif spec.ffn == "moe":
+            dx2, aux_l = moe.moe_apply(lp["ffn"], h2, cfg)
+            aux = aux + aux_l
+        elif spec.ffn == "rwkv_cmix":
+            if mode == "decode":
+                dx2, cshift = rwkv6.rwkv_cmix_decode(
+                    lp["ffn"], h2, cfg, cstate["cmix"] if cstate else None)
+                centry = dict(centry, cmix=cshift)
+            else:
+                dx2, xlast2 = rwkv6.rwkv_cmix_train(lp["ffn"], h2, cfg)
+                if mode == "prefill":
+                    centry = dict(centry, cmix={"shift": xlast2})
+        x = _residual_add(x, dx2, lp, "alpha_r2", cfg)
+    return x, aux, centry
+
+
+def _cstate_for(spec: LayerSpec, cperiod, idx):
+    if cperiod is None:
+        return None
+    entry = cperiod[f"p{idx}"]
+    if spec.ffn == "rwkv_cmix" and spec.mixer == "rwkv6":
+        return entry          # holds both tmix keys and "cmix"
+    return entry
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _embed_inputs(params, batch, cfg: ModelConfig):
+    table = params["embed"]["table"]
+    if cfg.frontend == "vision_stub":
+        fe = params["frontend"]
+        ximg = jax.nn.gelu(dense_apply(fe["w1"], batch["patch_embeds"]
+                                       .astype(table.dtype), cfg.quant))
+        ximg = dense_apply(fe["w2"], ximg, cfg.quant)
+        xtxt = jnp.take(table, batch["tokens"], axis=0)
+        x = jnp.concatenate([ximg, xtxt], axis=1)
+    elif cfg.frontend == "audio_stub":
+        x = dense_apply(params["frontend"]["w1"],
+                        batch["frames"].astype(table.dtype), cfg.quant)
+    else:
+        x = jnp.take(table, batch["tokens"], axis=0)
+    B, S = x.shape[0], x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    return x, positions
+
+
+def _vocab_bias(cfg: ModelConfig, dtype):
+    """-inf on padded vocab slots."""
+    iota = jnp.arange(cfg.padded_vocab)
+    return jnp.where(iota < cfg.vocab_size, 0.0, -1e9).astype(dtype)
+
+
+def forward(params: dict, batch: dict, cfg: ModelConfig, mode: str = "train",
+            return_hidden: bool = False):
+    """Returns (logits_or_hidden, aux, cache_periods_or_None)."""
+    assert mode in ("train", "prefill")
+    x, positions = _embed_inputs(params, batch, cfg)
+    x = constrain(x, "batch", None, None)
+
+    def period_body(carry, pp):
+        x, aux = carry
+        centries = {}
+        for idx, spec in enumerate(cfg.period):
+            x, aux_l, ce = _apply_position(pp[f"p{idx}"], spec, x, cfg,
+                                           positions, mode, None, None)
+            aux = aux + aux_l
+            if mode == "prefill":
+                centries[f"p{idx}"] = ce
+        x = constrain(x, "batch", None, None)
+        return (x, aux), centries
+
+    body = period_body
+    if cfg.remat == "full":
+        body = jax.checkpoint(period_body, prevent_cse=False)
+    (x, aux), cache_periods = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), params["periods"])
+
+    x = norm_apply(params["final_norm"], x, cfg.norm)
+    if return_hidden:
+        return x, aux, (cache_periods if mode == "prefill" else None)
+    logits = dense_apply(params["lm_head"], x, cfg.quant)
+    logits = logits + _vocab_bias(cfg, logits.dtype)
+    logits = constrain(logits, "batch", None, "model")
+    return logits, aux, (cache_periods if mode == "prefill" else None)
+
+
+def _nll(logits: jax.Array, targets: jax.Array) -> jax.Array:
+    lf = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(lf, axis=-1)
+    tl = jnp.take_along_axis(lf, targets[..., None], axis=-1)[..., 0]
+    return lse - tl
+
+
+def loss_fn(params: dict, batch: dict, cfg: ModelConfig):
+    targets = batch["targets"]
+    mask = batch.get("loss_mask")
+    if cfg.ce_chunks > 1:
+        # chunked CE: the (B, S, V) logits tensor never materializes —
+        # each sequence chunk projects + reduces under jax.checkpoint, so
+        # backward recomputes the chunk logits instead of saving them
+        # (§Perf: the 256k-vocab archs are dominated by CE traffic).
+        hidden, aux, _ = forward(params, batch, cfg, mode="train",
+                                 return_hidden=True)
+        B, S, _ = hidden.shape
+        nc = cfg.ce_chunks
+        while S % nc:
+            nc -= 1
+        bias = _vocab_bias(cfg, jnp.float32)
+
+        @jax.checkpoint
+        def chunk_nll(xc, tc):
+            lc = dense_apply(params["lm_head"], xc, cfg.quant)
+            return _nll(lc.astype(jnp.float32) + bias, tc)
+
+        def body(_, inp):
+            return None, chunk_nll(*inp)
+
+        xcs = hidden.reshape(B, nc, S // nc, -1).swapaxes(0, 1)
+        tcs = targets.reshape(B, nc, S // nc).swapaxes(0, 1)
+        _, nll_c = jax.lax.scan(body, None, (xcs, tcs))
+        nll = nll_c.swapaxes(0, 1).reshape(B, S)
+    else:
+        logits, aux, _ = forward(params, batch, cfg, mode="train")
+        nll = _nll(logits, targets)
+    if mask is not None:
+        denom = jnp.maximum(mask.sum(), 1.0)
+        ce = (nll * mask).sum() / denom
+    else:
+        ce = nll.mean()
+    loss = ce + 1e-2 * aux
+    metrics = {"loss": loss, "ce": ce, "aux": aux}
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# caches / decode
+# ---------------------------------------------------------------------------
+
+def _cache_entry_shapes(cfg: ModelConfig, spec: LayerSpec, batch: int,
+                        max_len: int) -> dict:
+    dtype = jnp.dtype(cfg.dtype)
+    e = {}
+    if spec.mixer == "attn":
+        dh, hkv = cfg.head_dim, cfg.n_kv_heads
+        e["k"] = jnp.zeros((batch, max_len, hkv, dh), dtype)
+        e["v"] = jnp.zeros((batch, max_len, hkv, dh), dtype)
+    elif spec.mixer == "mamba":
+        e.update(mamba.mamba_state_init(cfg, batch, dtype))
+    elif spec.mixer == "rwkv6":
+        e.update(rwkv6.rwkv_state_init(cfg, batch, dtype))
+    if spec.ffn == "rwkv_cmix":
+        e["cmix"] = {"shift": jnp.zeros((batch, cfg.d_model), dtype)}
+    return e
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    one = {f"p{i}": _cache_entry_shapes(cfg, spec, batch, max_len)
+           for i, spec in enumerate(cfg.period)}
+    periods = jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (cfg.n_periods,) + a.shape).copy(), one)
+    return {"pos": jnp.zeros((), jnp.int32), "periods": periods}
+
+
+def cache_specs(cfg: ModelConfig, seq_shard: bool = False,
+                kv_head_shard: bool = True) -> dict:
+    """Logical-axis tuples per cache leaf (resolved by MeshRules).
+
+    ``seq_shard``: shard KV time over the "seq" (data) axis — long_500k
+    context parallelism.  ``kv_head_shard=False``: KV head count doesn't
+    divide the model axis (e.g. qwen3 kv=4 over TP=16 would pad 4x HBM);
+    shard KV time over "model" instead (flash-decoding split-KV).
+    """
+    if seq_shard:
+        # long-context: batch==1, the "seq"(=data) axis takes the KV time
+        # dim — batch must not also claim it (duplicate-axis spec)
+        kv_b, kv_seq, kv_h = None, "seq", None
+    elif kv_head_shard:
+        kv_b, kv_seq, kv_h = "batch", None, "model"
+    else:
+        kv_b, kv_seq, kv_h = "batch", "model", None
+    def entry(spec: LayerSpec) -> dict:
+        e = {}
+        if spec.mixer == "attn":
+            e["k"] = (None, kv_b, kv_seq, kv_h, None)
+            e["v"] = (None, kv_b, kv_seq, kv_h, None)
+        elif spec.mixer == "mamba":
+            e["h"] = (None, "batch", "model", None)
+            e["conv"] = (None, "batch", None, "model")
+        elif spec.mixer == "rwkv6":
+            e["s"] = (None, "batch", "model", None, None)
+            e["shift"] = (None, "batch", None)
+        if spec.ffn == "rwkv_cmix":
+            e["cmix"] = {"shift": (None, "batch", None)}
+        return e
+
+    periods = {f"p{i}": entry(spec) for i, spec in enumerate(cfg.period)}
+    return {"pos": (), "periods": periods}
+
+
+def decode_step(params: dict, cache: dict, tokens: jax.Array,
+                cfg: ModelConfig):
+    """tokens: (B, 1) int32. Returns (logits (B,1,V), new cache)."""
+    assert not cfg.is_encoder, "encoder archs have no decode step"
+    pos = cache["pos"]
+    x = jnp.take(params["embed"]["table"], tokens, axis=0)
+    x = constrain(x, "batch", None, None)
+
+    def period_body(x, inp):
+        pp, cper = inp
+        new_entries = {}
+        for idx, spec in enumerate(cfg.period):
+            cst = _cstate_for(spec, cper, idx)
+            x, _, ce = _apply_position(pp[f"p{idx}"], spec, x, cfg,
+                                       None, "decode", cst, pos)
+            new_entries[f"p{idx}"] = ce
+        return x, new_entries
+
+    x, new_periods = jax.lax.scan(period_body, x,
+                                  (params["periods"], cache["periods"]))
+    x = norm_apply(params["final_norm"], x, cfg.norm)
+    logits = dense_apply(params["lm_head"], x, cfg.quant)
+    logits = logits + _vocab_bias(cfg, logits.dtype)
+    return logits, {"pos": pos + 1, "periods": new_periods}
+
+
+def prefill(params: dict, batch: dict, cfg: ModelConfig):
+    """Full-context forward that also builds the decode cache."""
+    logits, aux, cache_periods = forward(params, batch, cfg, mode="prefill")
+    seq = logits.shape[1]
+    return logits, {"pos": jnp.asarray(seq, jnp.int32),
+                    "periods": cache_periods}
+
+
+# ---------------------------------------------------------------------------
+# batch construction (shared by data pipeline / dryrun input_specs)
+# ---------------------------------------------------------------------------
+
+def batch_specs(cfg: ModelConfig, kind: str) -> dict:
+    """Logical sharding tuples for each batch field."""
+    if cfg.frontend == "vision_stub":
+        d = {"patch_embeds": ("batch", None, None), "tokens": ("batch", None)}
+    elif cfg.frontend == "audio_stub":
+        d = {"frames": ("batch", None, None)}
+    else:
+        d = {"tokens": ("batch", None)}
+    if kind == "train":
+        d["targets"] = ("batch", None)
+        d["loss_mask"] = ("batch", None)
+    return d
+
+
+def make_dummy_batch(cfg: ModelConfig, batch: int, seq: int, kind: str,
+                     img_tokens: int = 0) -> dict:
+    """Concrete (tiny) batches for smoke tests; dryrun uses ShapeDtypeStructs
+    with the same structure (launch/dryrun.py)."""
+    out = {}
+    if cfg.frontend == "vision_stub":
+        img = img_tokens or max(seq // 4, 1)
+        out["patch_embeds"] = jnp.zeros((batch, img, 1024), jnp.bfloat16)
+        out["tokens"] = jnp.zeros((batch, seq - img), jnp.int32)
+    elif cfg.frontend == "audio_stub":
+        out["frames"] = jnp.zeros((batch, seq, 512), jnp.bfloat16)
+    else:
+        out["tokens"] = jnp.zeros((batch, seq), jnp.int32)
+    if kind == "train":
+        out["targets"] = jnp.zeros((batch, seq), jnp.int32)
+        out["loss_mask"] = jnp.ones((batch, seq), jnp.float32)
+    return out

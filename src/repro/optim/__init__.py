@@ -1,0 +1,9 @@
+"""Optimizers + schedules (sharded states, large-scale posture)."""
+
+from .adamw import adamw_init, adamw_update, opt_state_specs
+from .schedules import constant_lr, warmup_cosine
+from .clip import clip_by_global_norm, global_norm
+
+__all__ = ["adamw_init", "adamw_update", "opt_state_specs",
+           "warmup_cosine", "constant_lr", "clip_by_global_norm",
+           "global_norm"]

@@ -1,0 +1,5 @@
+"""Serving: continuous-batching engine over the zoo's prefill/decode."""
+
+from .engine import Request, ServeEngine
+
+__all__ = ["ServeEngine", "Request"]

@@ -1,0 +1,129 @@
+"""Slot-based continuous batching engine.
+
+vLLM-style structure scaled to this zoo: a fixed pool of ``max_slots``
+sequence slots, each with its own KV/state cache position.  New requests
+are prefillled individually and inserted into free slots; every engine
+step runs ONE batched decode across all slots (per-slot positions via a
+vmapped decode step), so mixed-progress sequences share each forward pass.
+
+The big-mesh serve path (launch/serve.py, dry-run decode cells) uses the
+uniform-position ``decode_step`` directly; this engine is the
+request-level orchestration above it.
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import decode_step, init_cache, prefill
+
+__all__ = ["Request", "ServeEngine"]
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_new_tokens: int = 16
+    eos_id: int | None = None
+    generated: list[int] = field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, params, cfg: ModelConfig, max_slots: int = 4,
+                 max_len: int = 256):
+        assert not cfg.is_encoder, "encoders are served via forward()"
+        self.params, self.cfg = params, cfg
+        self.max_slots, self.max_len = max_slots, max_len
+        self._rid = itertools.count()
+        self.queue: list[Request] = []
+        self.slots: list[Request | None] = [None] * max_slots
+        base = init_cache(cfg, 1, max_len)
+        # stacked slot caches: every leaf gains a leading (max_slots,) axis
+        self.cache = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (max_slots,) + a.shape).copy(),
+            base)
+        self._vdecode = jax.jit(jax.vmap(
+            lambda cache, tok: decode_step(self.params, cache, tok, cfg),
+            in_axes=(0, 0)))
+        self._prefill = jax.jit(
+            lambda batch: prefill(self.params, batch, cfg))
+
+    # ------------------------------------------------------------------
+    def submit(self, prompt: list[int], max_new_tokens: int = 16,
+               eos_id: int | None = None) -> int:
+        r = Request(next(self._rid), list(prompt), max_new_tokens, eos_id)
+        self.queue.append(r)
+        return r.rid
+
+    def _free_slot(self) -> int | None:
+        for i, s in enumerate(self.slots):
+            if s is None:
+                return i
+        return None
+
+    def _insert_cache(self, slot: int, cache_one):
+        """Pad the prefilled cache to max_len and write it into the slot."""
+        def fit(path, stacked, one):
+            names = [getattr(p, "key", None) for p in path]
+            if names and names[-1] in ("k", "v") and one.ndim == 5:
+                # (P, B=1, S, Hkv, Dh): pad prefill length S up to max_len
+                pad = [(0, 0)] * one.ndim
+                pad[2] = (0, self.max_len - one.shape[2])
+                one = jnp.pad(one, pad)
+            return stacked.at[slot].set(one)
+        self.cache = jax.tree_util.tree_map_with_path(
+            lambda p, s, o: fit(p, s, o), self.cache, cache_one)
+
+    def _admit(self):
+        while self.queue:
+            slot = self._free_slot()
+            if slot is None:
+                return
+            req = self.queue.pop(0)
+            toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
+            logits, cache_one = self._prefill({"tokens": toks})
+            nxt = int(jnp.argmax(logits[0, -1, :self.cfg.vocab_size]))
+            req.generated.append(nxt)
+            self._insert_cache(slot, cache_one)
+            self.slots[slot] = req
+
+    # ------------------------------------------------------------------
+    def step(self) -> list[Request]:
+        """Admit + one batched decode step. Returns completed requests."""
+        self._admit()
+        active = [i for i, r in enumerate(self.slots) if r is not None]
+        if not active:
+            return []
+        toks = np.zeros((self.max_slots, 1, 1), np.int32)
+        for i in active:
+            toks[i, 0, 0] = self.slots[i].generated[-1]
+        logits, self.cache = self._vdecode(self.cache, jnp.asarray(toks))
+        nxt = np.asarray(jnp.argmax(
+            logits[:, 0, 0, :self.cfg.vocab_size], axis=-1))
+        done = []
+        for i in active:
+            r = self.slots[i]
+            r.generated.append(int(nxt[i]))
+            hit_eos = r.eos_id is not None and int(nxt[i]) == r.eos_id
+            if hit_eos or len(r.generated) >= r.max_new_tokens \
+                    or int(self.cache["pos"][i]) >= self.max_len - 1:
+                r.done = True
+                done.append(r)
+                self.slots[i] = None
+        return done
+
+    def run_to_completion(self, max_steps: int = 10_000) -> list[Request]:
+        out = []
+        for _ in range(max_steps):
+            out += self.step()
+            if not self.queue and all(s is None for s in self.slots):
+                break
+        return out

@@ -1,0 +1,7 @@
+"""Training substrate: step builder + fault-tolerant loop."""
+
+from .step import TrainState, build_train_step, init_train_state
+from .loop import run_training
+
+__all__ = ["TrainState", "build_train_step", "init_train_state",
+           "run_training"]

@@ -1,0 +1,74 @@
+"""Fault-tolerant training loop.
+
+Large-scale posture (DESIGN.md §5):
+* resume-from-latest on start (checkpoint/restart);
+* periodic async checkpoints + save-on-SIGTERM (preemption safety);
+* per-step heartbeat with wall-time — the launcher-side straggler signal
+  (a rank whose heartbeat lags the fleet median is the restart candidate);
+* stateless data (batch = f(step)) so restart/rescale replays nothing.
+"""
+
+from __future__ import annotations
+
+import signal
+import time
+from typing import Callable
+
+import jax
+
+from repro.checkpoint import (latest_step, restore_checkpoint,
+                              save_checkpoint, wait_for_saves)
+
+__all__ = ["run_training"]
+
+
+def run_training(train_step: Callable, state, batch_fn: Callable,
+                 n_steps: int, ckpt_dir: str | None = None,
+                 ckpt_every: int = 100, log_every: int = 10,
+                 log_fn: Callable = print, shardings=None):
+    """Run ``n_steps`` of training with checkpoint/restart.
+
+    ``batch_fn(step) -> batch`` must be stateless (see module docstring).
+    Returns the final state and the metrics history.
+    """
+    start = 0
+    if ckpt_dir is not None:
+        last = latest_step(ckpt_dir)
+        if last is not None:
+            state = restore_checkpoint(ckpt_dir, last, state, shardings)
+            start = int(last)
+            log_fn(f"[loop] resumed from checkpoint step {start}")
+
+    stop = {"flag": False}
+
+    def _on_term(signum, frame):
+        stop["flag"] = True
+
+    prev = signal.signal(signal.SIGTERM, _on_term)
+    history = []
+    t_last = time.monotonic()
+    try:
+        for step in range(start, n_steps):
+            batch = batch_fn(step)
+            state, metrics = train_step(state, batch)
+            if (step + 1) % log_every == 0 or step == n_steps - 1:
+                m = {k: float(v) for k, v in metrics.items()}
+                now = time.monotonic()
+                m["sec_per_step"] = (now - t_last) / log_every
+                t_last = now
+                history.append({"step": step + 1, **m})
+                log_fn(f"[loop] step {step + 1} " +
+                       " ".join(f"{k}={v:.4g}" for k, v in m.items()))
+            want_ckpt = ckpt_dir is not None and (
+                (step + 1) % ckpt_every == 0 or stop["flag"]
+                or step == n_steps - 1)
+            if want_ckpt:
+                jax.block_until_ready(state.params)
+                save_checkpoint(ckpt_dir, step + 1, state)
+            if stop["flag"]:
+                log_fn(f"[loop] SIGTERM: checkpointed at {step + 1}, exiting")
+                break
+    finally:
+        wait_for_saves()
+        signal.signal(signal.SIGTERM, prev)
+    return state, history

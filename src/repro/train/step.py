@@ -1,0 +1,83 @@
+"""train_step builder: loss -> grads -> clip -> (compress) -> AdamW.
+
+This is the function the dry-run lowers for the ``train_*`` cells.  Grad
+accumulation (microbatching) runs as a ``lax.scan`` over microbatch slices
+so the lowered HLO is identical in structure at any accumulation factor.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.compression import compress_decompress, init_error_state
+from repro.models import loss_fn
+from repro.optim import adamw_init, adamw_update, clip_by_global_norm
+
+__all__ = ["TrainState", "init_train_state", "build_train_step"]
+
+
+class TrainState(NamedTuple):
+    params: dict
+    opt: dict
+    step: jax.Array
+    error: dict | None = None       # grad-compression error feedback
+
+
+def init_train_state(params, cfg: ModelConfig,
+                     grad_compress: bool = False) -> TrainState:
+    opt = adamw_init(params, cfg.opt_state_dtype)
+    err = init_error_state(params) if grad_compress else None
+    return TrainState(params=params, opt=opt,
+                      step=jnp.zeros((), jnp.int32), error=err)
+
+
+def build_train_step(cfg: ModelConfig,
+                     lr_schedule: Callable,
+                     grad_accum: int = 1,
+                     max_grad_norm: float = 1.0,
+                     grad_compress: bool = False):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+
+    def forward_loss(params, batch):
+        return loss_fn(params, batch, cfg)
+
+    def train_step(state: TrainState, batch: dict):
+        params = state.params
+
+        if grad_accum == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                forward_loss, has_aux=True)(params, batch)
+        else:
+            def micro(carry, mb):
+                gacc, lacc = carry
+                (l, _), g = jax.value_and_grad(forward_loss,
+                                               has_aux=True)(params, mb)
+                return (jax.tree.map(jnp.add, gacc, g), lacc + l), None
+
+            mbs = jax.tree.map(
+                lambda x: x.reshape((grad_accum, x.shape[0] // grad_accum)
+                                    + x.shape[1:]), batch)
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 params)
+            (grads, lsum), _ = jax.lax.scan(micro, (zeros, 0.0), mbs)
+            grads = jax.tree.map(lambda g: g / grad_accum, grads)
+            loss = lsum / grad_accum
+            metrics = {"loss": loss}
+
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        error = state.error
+        if grad_compress and error is not None:
+            grads, error = compress_decompress(grads, error)
+
+        lr = lr_schedule(state.step)
+        new_params, new_opt = adamw_update(grads, state.opt, params, lr)
+        metrics = dict(metrics, grad_norm=gnorm, lr=lr,
+                       step=state.step.astype(jnp.float32))
+        return TrainState(new_params, new_opt, state.step + 1, error), metrics
+
+    return train_step

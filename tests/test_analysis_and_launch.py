@@ -1,0 +1,128 @@
+"""Analysis/report + launch-layer unit tests (no 512-device compile)."""
+
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.analysis.report import dryrun_table, fmt_s, roofline_table
+from repro.analysis.roofline import V5E, count_params, model_flops
+from repro.configs import SHAPES, get_arch, list_archs, shape_by_name
+from repro.distributed.sharding import MeshRules, constrain, current_rules
+from repro.launch.dryrun import all_cells, cell_skip_reason
+
+
+# ---------------------------------------------------------------------------
+# skip rules == DESIGN.md §4 cell accounting
+# ---------------------------------------------------------------------------
+
+def test_cell_accounting():
+    cells = all_cells()
+    assert len(cells) == 40                          # 10 archs x 4 shapes
+    skips = [(a, s) for a, s in cells
+             if cell_skip_reason(get_arch(a), shape_by_name(s))]
+    assert len(skips) == 9                           # 7 long_500k + 2 hubert
+    assert ("rwkv6-7b", "long_500k") not in skips
+    assert ("jamba-1.5-large-398b", "long_500k") not in skips
+    assert ("hubert-xlarge", "decode_32k") in skips
+    assert ("hubert-xlarge", "long_500k") in skips
+    assert ("granite-3-2b", "long_500k") in skips
+
+
+def test_param_counts_sane():
+    """Analytic param counts land near the arch names' billions."""
+    expect = {"stablelm-1.6b": (1.2, 2.2), "granite-3-2b": (1.8, 3.0),
+              "nemotron-4-15b": (12, 18), "phi3-medium-14b": (12, 16),
+              "rwkv6-7b": (6, 9), "dbrx-132b": (110, 150),
+              "qwen3-moe-235b-a22b": (200, 260),
+              "jamba-1.5-large-398b": (330, 420),
+              "llava-next-34b": (30, 38), "hubert-xlarge": (0.7, 1.3)}
+    for name, (lo, hi) in expect.items():
+        n = count_params(get_arch(name)) / 1e9
+        assert lo <= n <= hi, (name, n)
+
+
+def test_active_params_moe():
+    cfg = get_arch("qwen3-moe-235b-a22b")
+    active = count_params(cfg, active_only=True) / 1e9
+    assert 15 <= active <= 30, active                # "a22b"
+
+
+def test_model_flops_kinds():
+    cfg = get_arch("granite-3-2b")
+    tr = model_flops(cfg, shape_by_name("train_4k"))
+    pf = model_flops(cfg, shape_by_name("prefill_32k"))
+    dc = model_flops(cfg, shape_by_name("decode_32k"))
+    assert tr == pytest.approx(6 * count_params(cfg, True) * 4096 * 256)
+    assert pf == pytest.approx(2 * count_params(cfg, True) * 32768 * 32)
+    assert dc == pytest.approx(2 * count_params(cfg, True) * 128)
+
+
+# ---------------------------------------------------------------------------
+# sharding rules
+# ---------------------------------------------------------------------------
+
+def test_mesh_rules_resolve_filters_missing_axes():
+    mesh = jax.sharding.Mesh(
+        np.asarray(jax.devices()[:1], object).reshape(1), ("data",))
+    rules = MeshRules(mesh=mesh, mapping={"batch": ("pod", "data"),
+                                          "model": ("model",)})
+    spec = rules.resolve(("batch", None, "model"))
+    assert spec == P("data", None, None)            # pod+model filtered out
+
+
+def test_constrain_is_identity_without_rules():
+    assert current_rules() is None
+    x = jax.numpy.ones((4, 4))
+    y = constrain(x, "batch", "model")
+    np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# report generation from the real sweep records
+# ---------------------------------------------------------------------------
+
+RECORDS = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                       "dryrun")
+
+
+@pytest.mark.skipif(not os.path.isdir(RECORDS), reason="no sweep records")
+def test_report_from_real_records():
+    recs = []
+    for fn in sorted(os.listdir(RECORDS))[:12]:
+        with open(os.path.join(RECORDS, fn)) as f:
+            recs.append(json.load(f))
+    table = dryrun_table(recs)
+    assert table.count("|") > 20
+    rtab = roofline_table(recs)
+    assert "bottleneck" in rtab
+
+
+def test_fmt_s():
+    assert fmt_s(0.5e-6).endswith("us")
+    assert fmt_s(0.005).endswith("ms")
+    assert fmt_s(2.0).endswith("s")
+
+
+# ---------------------------------------------------------------------------
+# property test: SI threshold design is correct for ANY monotone step fn
+# ---------------------------------------------------------------------------
+
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+
+@given(st.lists(st.integers(0, 16), min_size=9, max_size=9))
+@settings(max_examples=30, deadline=None)
+def test_si_thresholds_any_monotone_function(deltas):
+    """Invariant: for any monotone out_count table, apply_si_counts
+    reproduces it exactly at every input count."""
+    import jax.numpy as jnp
+    from repro.core.si import apply_si_counts, si_thresholds_from_counts
+    oc = np.minimum(np.cumsum(np.asarray(deltas) % 4), 16)
+    t = si_thresholds_from_counts(oc, 16)
+    got = np.asarray(apply_si_counts(jnp.arange(len(oc)), jnp.asarray(t)))
+    np.testing.assert_array_equal(got, oc)

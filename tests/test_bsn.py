@@ -1,0 +1,168 @@
+"""Bitonic sorting network adder (paper §II-B, §IV-B)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import bsn, coding
+
+
+# ---------------------------------------------------------------------------
+# the sorter itself
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [2, 4, 8, 16, 64, 33, 100])
+@pytest.mark.parametrize("descending", [True, False])
+def test_bitonic_matches_jnp_sort(n, descending):
+    x = jax.random.randint(jax.random.key(n), (5, n), -100, 100, jnp.int32)
+    got = bsn.bitonic_sort(x, descending=descending)
+    ref = jnp.sort(x, axis=-1)
+    if descending:
+        ref = ref[..., ::-1]
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+def test_bitonic_float():
+    x = jax.random.normal(jax.random.key(0), (3, 17))
+    got = bsn.bitonic_sort(x, descending=True)
+    ref = jnp.sort(x, axis=-1)[..., ::-1]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref))
+
+
+# ---------------------------------------------------------------------------
+# exact BSN accumulation: sorted popcount == sum (paper's central identity)
+# ---------------------------------------------------------------------------
+
+@given(st.integers(0, 6), st.sampled_from([2, 4, 8]), st.integers(2, 16))
+@settings(max_examples=30, deadline=None)
+def test_exact_bsn_bits_equals_counts(seed, bsl, width):
+    key = jax.random.key(seed)
+    half = bsl // 2
+    levels = jax.random.randint(key, (width,), -half, half + 1)
+    bits = coding.encode_thermometer(levels, bsl)
+    sorted_bits = bsn.exact_bsn_bits(bits)
+    # output is a valid thermometer code of the concatenated length
+    assert coding.is_thermometer(np.asarray(sorted_bits)[None])[0]
+    # popcount - N*L/2 == sum of levels
+    total = int(coding.counts_from_bits(sorted_bits)) - width * bsl // 2
+    assert total == int(jnp.sum(levels))
+    # functional path agrees
+    counts = coding.counts_from_bits(bits)
+    assert int(bsn.exact_bsn_counts(counts)) == int(jnp.sum(counts))
+
+
+def test_exact_bsn_batched():
+    key = jax.random.key(1)
+    levels = jax.random.randint(key, (4, 8), -2, 3)
+    bits = coding.encode_thermometer(levels, 4)
+    sorted_bits = bsn.exact_bsn_bits(bits)
+    got = coding.counts_from_bits(sorted_bits) - 8 * 4 // 2
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(jnp.sum(levels, -1)))
+
+
+# ---------------------------------------------------------------------------
+# approximate spatial BSN: bit path == count path, error bounds
+# ---------------------------------------------------------------------------
+
+def _spec(width=8, in_bsl=4, clip=2, stride=2):
+    sorted_len = width * in_bsl
+    return bsn.ApproxBSNSpec(
+        width=width, in_bsl=in_bsl,
+        stages=(bsn.StageSpec(group=width,
+                              sub=bsn.SubSampleSpec(clip=clip, stride=stride)),))
+
+
+@given(st.integers(0, 20))
+@settings(max_examples=20, deadline=None)
+def test_approx_bits_equals_counts_single_stage(seed):
+    spec = _spec()
+    key = jax.random.key(seed)
+    levels = jax.random.randint(key, (3, spec.width), -2, 3)
+    bits = coding.encode_thermometer(levels, spec.in_bsl)
+    got_bits = bsn.approx_bsn_bits(bits, spec)
+    assert np.all(coding.is_thermometer(np.asarray(got_bits)))
+    from_bits = coding.counts_from_bits(got_bits)
+    from_counts = bsn.approx_bsn_counts(coding.counts_from_bits(bits), spec)
+    np.testing.assert_array_equal(np.asarray(from_bits),
+                                  np.asarray(from_counts))
+
+
+@given(st.integers(0, 20))
+@settings(max_examples=20, deadline=None)
+def test_approx_bits_equals_counts_two_stage(seed):
+    spec = bsn.ApproxBSNSpec(
+        width=16, in_bsl=4,
+        stages=(bsn.StageSpec(4, bsn.SubSampleSpec(clip=4, stride=1)),
+                bsn.StageSpec(4, bsn.SubSampleSpec(clip=8, stride=2))))
+    key = jax.random.key(seed)
+    levels = jax.random.randint(key, (spec.width,), -2, 3)
+    bits = coding.encode_thermometer(levels, spec.in_bsl)
+    got_bits = bsn.approx_bsn_bits(bits, spec)
+    from_bits = int(coding.counts_from_bits(got_bits))
+    from_counts = int(bsn.approx_bsn_counts(coding.counts_from_bits(bits),
+                                            spec))
+    assert from_bits == from_counts
+
+
+def test_no_clip_no_stride_is_exact():
+    spec = bsn.ApproxBSNSpec(
+        width=8, in_bsl=4,
+        stages=(bsn.StageSpec(8, bsn.SubSampleSpec(0, 1)),))
+    levels = jnp.asarray([2, -2, 1, 0, -1, 2, 2, -2])
+    counts = coding.encode_thermometer(levels, 4).sum(-1)
+    out = int(bsn.approx_bsn_counts(counts, spec))
+    # exact: out count == total count, value == sum
+    assert out - 8 * 4 // 2 == int(levels.sum())
+
+
+def test_clipping_saturates_extremes():
+    spec = _spec(width=4, in_bsl=4, clip=6, stride=1)
+    # all +2 -> sum 8, count 16; clipped to 16-12=4 wide window
+    counts = jnp.full((4,), 4)
+    out = int(bsn.approx_bsn_counts(counts, spec))
+    assert out == 4            # saturated at the top of the window
+
+
+@given(st.integers(0, 30))
+@settings(max_examples=30, deadline=None)
+def test_stride_error_bound(seed):
+    """Sub-sampling by s quantizes: |value_error| <= s/2 when not clipped."""
+    spec = _spec(width=8, in_bsl=8, clip=0, stride=4)
+    key = jax.random.key(seed)
+    levels = jax.random.randint(key, (8,), -4, 5)
+    counts = levels + 4
+    out = int(bsn.approx_bsn_counts(counts, spec))
+    value = spec.scale * (out - spec.out_bsl // 2)
+    assert abs(value - int(levels.sum())) <= spec.scale // 2
+
+
+# ---------------------------------------------------------------------------
+# spatial-temporal folding (Fig 12)
+# ---------------------------------------------------------------------------
+
+def test_spatial_temporal_matches_per_chunk():
+    spec = _spec(width=8, in_bsl=4, clip=0, stride=2)
+    key = jax.random.key(3)
+    levels = jax.random.randint(key, (5, 72), -2, 3)   # 9 cycles of 8
+    counts = levels + 2
+    got = bsn.spatial_temporal_counts(counts, spec, cycles=9)
+    chunks = counts.reshape(5, 9, 8)
+    expect = bsn.approx_bsn_counts(chunks, spec).sum(-1)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(expect))
+    # value semantics: scale*(out - cycles*out_bsl/2) approximates the sum
+    value = spec.scale * (np.asarray(got) - 9 * spec.out_bsl // 2)
+    exact = np.asarray(levels.sum(-1))
+    assert np.max(np.abs(value - exact)) <= 9 * spec.scale  # rounding per cycle
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError):
+        bsn.ApproxBSNSpec(width=8, in_bsl=4,
+                          stages=(bsn.StageSpec(4, bsn.SubSampleSpec(0, 1)),))
+    with pytest.raises(ValueError):                     # stride doesn't divide
+        bsn.ApproxBSNSpec(width=4, in_bsl=4,
+                          stages=(bsn.StageSpec(4, bsn.SubSampleSpec(1, 4)),))

@@ -1,0 +1,74 @@
+"""Thermometer coding (paper Table II) — exact semantics."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import coding
+
+
+def bits_to_str(bits):
+    return "".join(str(int(b)) for b in np.asarray(bits))
+
+
+@pytest.mark.parametrize("bsl", [2, 4])
+def test_table_ii_exact(bsl):
+    """The coding table printed in the paper, asserted verbatim."""
+    for level, expect in coding.THERMOMETER_TABLE[bsl].items():
+        got = coding.encode_thermometer(jnp.asarray(level), bsl)
+        assert bits_to_str(got) == expect, (bsl, level)
+
+
+@pytest.mark.parametrize("bsl", [2, 4, 8, 16, 64])
+def test_roundtrip_all_levels(bsl):
+    half = bsl // 2
+    levels = jnp.arange(-half, half + 1)
+    bits = coding.encode_thermometer(levels, bsl)
+    assert bits.shape == (bsl + 1, bsl)
+    assert np.all(coding.is_thermometer(bits))
+    back = coding.decode_thermometer(bits)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(levels))
+
+
+def test_out_of_range_saturates():
+    bits = coding.encode_thermometer(jnp.asarray([-99, 99]), 8)
+    np.testing.assert_array_equal(
+        np.asarray(coding.decode_thermometer(bits)), [-4, 4])
+
+
+@given(st.integers(-8, 8))
+@settings(max_examples=25, deadline=None)
+def test_negate_is_value_negation(level):
+    bits = coding.encode_thermometer(jnp.asarray(level), 16)
+    neg = coding.negate_bits(bits)
+    assert coding.is_thermometer(np.asarray(neg)[None])[0]
+    assert int(coding.decode_thermometer(neg)) == -level
+
+
+def test_zero_code():
+    z = coding.zero_code(8)
+    assert bits_to_str(z) == "11110000"
+    assert int(coding.decode_thermometer(z)) == 0
+
+
+@given(st.floats(-3, 3, allow_nan=False), st.sampled_from([2, 4, 8, 16]))
+@settings(max_examples=50, deadline=None)
+def test_quantize_dequantize_error_bound(x, bsl):
+    alpha = 0.25
+    q = coding.quantize_levels(jnp.asarray(x), alpha, bsl)
+    half = bsl // 2
+    assert -half <= int(q) <= half
+    deq = float(coding.dequantize_levels(q, alpha))
+    if abs(x) <= alpha * half:            # in range: half-step error bound
+        assert abs(deq - x) <= alpha / 2 + 1e-6
+    else:                                  # saturated
+        assert abs(deq) == alpha * half
+
+
+def test_odd_bsl_rejected():
+    with pytest.raises(ValueError):
+        coding.check_bsl(3)
+    with pytest.raises(ValueError):
+        coding.check_bsl(0)

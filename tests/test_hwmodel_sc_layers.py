@@ -1,0 +1,148 @@
+"""Hardware cost model calibration (Table V) + SC layer path equivalence."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bsn, hwmodel, sc_layers, si
+from repro.core.sc_layers import SCQuantConfig
+
+
+# ---------------------------------------------------------------------------
+# hwmodel: calibration + ratio predictions
+# ---------------------------------------------------------------------------
+
+def test_baseline_bsn_matches_table_v():
+    """3x3x512 conv: 9216 bits. Calibrated to area 2.95e5, delay 4.33."""
+    cost = hwmodel.bsn_cost(9216)
+    np.testing.assert_allclose(cost.area_um2, 2.95e5, rtol=1e-6)
+    np.testing.assert_allclose(cost.delay_ns, 4.33, rtol=1e-6)
+    np.testing.assert_allclose(cost.adp, 1.26e6, rtol=0.02)   # paper: 1.26e6
+
+
+def test_superlinear_growth_fig9a():
+    """Fig 9a: BSN cost grows superlinearly with accumulation width."""
+    a1 = hwmodel.bsn_cost(256).area_um2
+    a2 = hwmodel.bsn_cost(512).area_um2
+    assert a2 > 2.0 * a1
+
+
+def test_small_width_overhead_fig9b():
+    """Fig 9b: using the 9216-bit BSN for a 256-bit accumulation wastes
+    >10x ADP vs a right-sized BSN."""
+    big = hwmodel.bsn_cost(9216).adp
+    small = hwmodel.bsn_cost(256).adp
+    assert big / small > 10
+
+
+def test_spatial_approx_reduces_adp():
+    """§IV-C: a progressive-sorting spec for the 4608-product conv cuts ADP
+    by >= 2x vs the baseline BSN (paper: 2.8x)."""
+    base = hwmodel.bsn_cost(9216)
+    spec = bsn.ApproxBSNSpec(
+        width=4608, in_bsl=2,
+        stages=(bsn.StageSpec(64, bsn.SubSampleSpec(clip=48, stride=1)),
+                bsn.StageSpec(72, bsn.SubSampleSpec(clip=1136, stride=8)),))
+    appr = hwmodel.approx_bsn_cost(spec)
+    assert appr.adp < base.adp / 2, (appr.adp, base.adp)
+
+
+def test_temporal_fold_reduces_area():
+    spec = bsn.ApproxBSNSpec(
+        width=512, in_bsl=2,
+        stages=(bsn.StageSpec(512, bsn.SubSampleSpec(clip=448, stride=2)),))
+    st_cost = hwmodel.spatial_temporal_cost(spec, cycles=9)
+    base = hwmodel.bsn_cost(9216)
+    assert st_cost.area_um2 < base.area_um2 / 10
+
+
+def test_tops_per_watt_calibration():
+    np.testing.assert_allclose(hwmodel.tops_per_watt(2, 0.65), 198.9,
+                               rtol=1e-6)
+    # Fig 2/Table IV direction: higher BSL -> lower efficiency
+    assert hwmodel.tops_per_watt(8) < hwmodel.tops_per_watt(2) / 2
+    # voltage scaling direction (Fig 4)
+    assert hwmodel.tops_per_watt(2, 0.9) < hwmodel.tops_per_watt(2, 0.65)
+
+
+# ---------------------------------------------------------------------------
+# sc_layers: QAT == integer == bit-exact equivalence
+# ---------------------------------------------------------------------------
+
+CFG = SCQuantConfig(mode="sc_qat", act_bsl=8, per_channel=False)
+
+
+def _params(key, din=32, dout=16):
+    return sc_layers.init_sc_linear(key, din, dout, CFG)
+
+
+def test_qat_equals_int_path():
+    """fake-quant matmul == alpha_a*alpha_w * integer matmul."""
+    key = jax.random.key(0)
+    p = _params(key)
+    x = jax.random.normal(jax.random.key(1), (4, 32))
+    y_qat = sc_layers.sc_linear_qat(p, x, CFG)
+    exported = sc_layers.export_sc_linear(p, CFG)
+    from repro.core.coding import quantize_levels
+    x_q = quantize_levels(x, float(p["alpha_a"]), CFG.act_bsl)
+    y_int = sc_layers.sc_linear_int(exported, x_q)
+    scale = float(p["alpha_a"]) * float(p["alpha_w"])
+    np.testing.assert_allclose(np.asarray(y_qat),
+                               np.asarray(y_int) * scale, rtol=1e-5, atol=1e-5)
+
+
+def test_int_path_equals_bitstream_path():
+    """int matmul accumulate == multiplier + BSN popcount, bit-for-bit."""
+    from repro.core import coding, multiplier
+    rng = np.random.default_rng(0)
+    din = 8
+    x_q = jnp.asarray(rng.integers(-4, 5, (din,)))
+    w_int = jnp.asarray(rng.integers(-1, 2, (din, 3)), jnp.int8)
+    # integer path
+    y_int = np.asarray(x_q @ w_int.astype(jnp.int32))
+    # bit path, per output neuron
+    bits = coding.encode_thermometer(x_q, 8)
+    for j in range(3):
+        prods = multiplier.ternary_scale_bits(w_int[:, j], bits)
+        sorted_bits = bsn.exact_bsn_bits(prods)
+        val = int(coding.counts_from_bits(sorted_bits)) - din * 8 // 2
+        assert val == y_int[j]
+
+
+def test_int_path_with_si_epilogue():
+    key = jax.random.key(2)
+    p = _params(key, din=16, dout=4)
+    x = jax.random.normal(jax.random.key(3), (5, 16)) * 0.5
+    exported = sc_layers.export_sc_linear(
+        p, CFG, act_fn=si.relu_fn, out_bsl=16,
+        alpha_out=float(p["alpha_a"]))
+    from repro.core.coding import quantize_levels
+    x_q = quantize_levels(x, float(p["alpha_a"]), CFG.act_bsl)
+    y = sc_layers.sc_linear_int(exported, x_q)
+    # reference: relu of the dequantized sum, requantized at alpha_out
+    sum_q = np.asarray(x_q @ jnp.asarray(exported["w_int"], jnp.int32))
+    scale = float(p["alpha_a"]) * float(np.atleast_1d(exported["alpha_w"])[0])
+    ref = np.maximum(sum_q * scale, 0.0)
+    ref_q = np.clip(np.round(ref / float(p["alpha_a"])), -8, 8)
+    np.testing.assert_array_equal(np.asarray(y), ref_q)
+
+
+def test_per_channel_export():
+    cfg = SCQuantConfig(mode="sc_qat", act_bsl=8, per_channel=True)
+    p = sc_layers.init_sc_linear(jax.random.key(0), 16, 4, cfg)
+    exported = sc_layers.export_sc_linear(
+        p, cfg, act_fn=si.relu_fn, out_bsl=16, alpha_out=0.25)
+    assert exported["thresholds"].shape == (4, 16)
+    x_q = jnp.asarray(np.random.default_rng(0).integers(-4, 5, (2, 16)))
+    y = sc_layers.sc_linear_int(exported, x_q)
+    assert y.shape == (2, 4)
+    assert np.all(np.asarray(y) >= -8) and np.all(np.asarray(y) <= 8)
+
+
+def test_mode_none_passthrough():
+    p = sc_layers.init_sc_linear(jax.random.key(0), 8, 8, sc_layers.SC_OFF)
+    assert "alpha_w" not in p
+    x = jax.random.normal(jax.random.key(1), (2, 8))
+    y = sc_layers.sc_linear_qat(p, x, sc_layers.SC_OFF)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x @ p["w"]))

@@ -1,0 +1,215 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode on CPU).
+
+Per instructions: sweep shapes/dtypes and assert_allclose (here: exact
+integer equality, these are integer datapaths) against ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import si as si_mod
+from repro.kernels import ops, ref
+from repro.kernels.bsn_sort import bsn_sort_pallas
+from repro.kernels.ternary_matmul import ternary_matmul_pallas
+
+
+def _rand_case(seed, m, k, n, act_half=4):
+    rng = np.random.default_rng(seed)
+    x = rng.integers(-act_half, act_half + 1, (m, k)).astype(np.int8)
+    w = rng.integers(-1, 2, (k, n)).astype(np.int8)
+    return jnp.asarray(x), jnp.asarray(w)
+
+
+# ---------------------------------------------------------------------------
+# ternary matmul
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,k,n,bm,bn,bk", [
+    (8, 16, 8, 8, 8, 16),
+    (16, 32, 16, 8, 16, 16),
+    (32, 64, 24, 16, 8, 32),     # n not multiple of bn -> exercised via ops
+])
+def test_matmul_kernel_exact_blocks(m, k, n, bm, bn, bk):
+    if n % bn:
+        pytest.skip("raw kernel requires padded shapes; ops test covers it")
+    x, w = _rand_case(0, m, k, n)
+    out = ternary_matmul_pallas(x, w, block_m=bm, block_n=bn, block_k=bk,
+                                interpret=True)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(ref.ternary_matmul_ref(x, w)))
+
+
+@given(st.integers(0, 10 ** 6),
+       st.integers(1, 40),        # m
+       st.integers(1, 70),        # k
+       st.integers(1, 40))        # n
+@settings(max_examples=12, deadline=None)
+def test_matmul_ops_shape_sweep(seed, m, k, n):
+    """ops wrapper handles ragged shapes via padding; forced kernel path."""
+    x, w = _rand_case(seed, m, k, n)
+    out = ops.ternary_matmul(x, w, min_flops_for_kernel=0,
+                             block_m=8, block_n=8, block_k=8)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(ref.ternary_matmul_ref(x, w)))
+
+
+def test_matmul_batched_input():
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.integers(-4, 5, (2, 3, 32)).astype(np.int8))
+    w = jnp.asarray(rng.integers(-1, 2, (32, 16)).astype(np.int8))
+    out = ops.ternary_matmul(x, w, min_flops_for_kernel=0,
+                             block_m=8, block_n=8, block_k=8)
+    assert out.shape == (2, 3, 16)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(ref.ternary_matmul_ref(x, w)))
+
+
+@given(st.integers(0, 10 ** 6))
+@settings(max_examples=8, deadline=None)
+def test_matmul_fused_si_epilogue(seed):
+    """Fused SI in the kernel == reference epilogue == core.si design."""
+    m, k, n, out_bsl = 16, 48, 8, 16
+    x, w = _rand_case(seed, m, k, n)
+    # per-channel monotone threshold tables in the sum_q domain
+    sum_max = k * 4
+    t_count = np.stack([
+        si_mod.si_thresholds(si_mod.relu_fn, 2 * sum_max, out_bsl,
+                             alpha_in=0.05 * (c + 1), alpha_out=0.1)
+        for c in range(n)])
+    t_q = jnp.asarray(t_count.astype(np.int64) - sum_max, jnp.int32)
+    got = ops.ternary_matmul(x, w, t_q, min_flops_for_kernel=0,
+                             block_m=8, block_n=8, block_k=16)
+    expect = ref.ternary_matmul_ref(x, w, t_q)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(expect))
+    # and the epilogue really is the SI: counts via core path
+    sums = np.asarray(ref.ternary_matmul_ref(x, w))
+    manual = np.stack([
+        np.asarray(si_mod.apply_si_counts(jnp.asarray(sums[:, c] + sum_max),
+                                          jnp.asarray(t_count[c])))
+        for c in range(n)], axis=1) - out_bsl // 2
+    np.testing.assert_array_equal(np.asarray(got), manual)
+
+
+def test_matmul_int_dtype_int32_accumulate_no_overflow():
+    """Large K accumulation stays exact (int32 path, not int8)."""
+    k = 4096
+    x = jnp.full((8, k), 4, jnp.int8)
+    w = jnp.full((k, 8), 1, jnp.int8)
+    out = ops.ternary_matmul(x, w, min_flops_for_kernel=0,
+                             block_m=8, block_n=8, block_k=256)
+    assert int(out[0, 0]) == 4 * k        # 16384 > int8/int16 range
+
+
+# ---------------------------------------------------------------------------
+# bsn sort
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("r,length,br", [(8, 16, 8), (16, 64, 8),
+                                         (32, 128, 16), (8, 1024, 8)])
+def test_sort_kernel_exact(r, length, br):
+    rng = np.random.default_rng(r * length)
+    x = jnp.asarray(rng.integers(0, 2, (r, length)).astype(np.int8))
+    out = bsn_sort_pallas(x, block_r=br, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(ref.bsn_sort_ref(x)))
+
+
+@pytest.mark.parametrize("dtype", [jnp.int8, jnp.int32, jnp.float32])
+def test_sort_kernel_dtypes(dtype):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.integers(-50, 50, (8, 64))).astype(dtype)
+    out = bsn_sort_pallas(x, block_r=8, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(ref.bsn_sort_ref(x)))
+
+
+@given(st.integers(0, 10 ** 6), st.integers(1, 30), st.integers(2, 100))
+@settings(max_examples=10, deadline=None)
+def test_sort_ops_shape_sweep(seed, r, length):
+    """ops wrapper: non-pow2 lengths, ragged rows, bit inputs."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.integers(0, 2, (r, length)).astype(np.int8))
+    out = ops.bsn_sort(x, block_r=8, min_rows_for_kernel=0)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(ref.bsn_sort_ref(x)))
+
+
+def test_sort_matches_core_bsn():
+    """Kernel == core.bsn.bitonic_sort (same network, two implementations)."""
+    from repro.core import bsn as core_bsn
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.integers(0, 2, (16, 256)).astype(np.int8))
+    a = bsn_sort_pallas(x, block_r=16, interpret=True)
+    b = core_bsn.bitonic_sort(x, descending=True)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_sort_preserves_popcount():
+    rng = np.random.default_rng(9)
+    x = jnp.asarray(rng.integers(0, 2, (64, 100)).astype(np.int8))
+    out = ops.bsn_sort(x, min_rows_for_kernel=0, block_r=8)
+    np.testing.assert_array_equal(np.asarray(out.sum(-1)),
+                                  np.asarray(x.sum(-1)))
+
+
+# ---------------------------------------------------------------------------
+# flash attention kernel (forward / serving path)
+# ---------------------------------------------------------------------------
+
+from repro.kernels.flash_attention import flash_attention_pallas
+
+
+@pytest.mark.parametrize("B,S,Hq,Hkv,D,bq,bk,causal", [
+    (1, 64, 4, 2, 16, 16, 16, True),
+    (2, 128, 8, 2, 32, 32, 16, True),
+    (1, 64, 4, 4, 16, 32, 32, False),
+    (2, 64, 6, 3, 8, 16, 16, True),      # GQA group 2, non-pow2 heads
+])
+def test_flash_pallas_vs_ref(B, S, Hq, Hkv, D, bq, bk, causal):
+    key = jax.random.key(B * S + Hq)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (B, S, Hq, D), jnp.float32)
+    k = jax.random.normal(kk, (B, S, Hkv, D), jnp.float32)
+    v = jax.random.normal(kv, (B, S, Hkv, D), jnp.float32)
+    got = flash_attention_pallas(q, k, v, causal=causal, block_q=bq,
+                                 block_k=bk, interpret=True)
+    expect = ref.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(expect),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_flash_pallas_matches_model_flash():
+    """Kernel == the XLA flash scan used by the model zoo."""
+    from repro.models.attention import flash_attention as xla_flash
+    key = jax.random.key(0)
+    kq, kk, kv = jax.random.split(key, 3)
+    B, S, Hkv, G, D = 2, 128, 2, 2, 16
+    q = jax.random.normal(kq, (B, S, Hkv, G, D), jnp.float32)
+    k = jax.random.normal(kk, (B, S, Hkv, D), jnp.float32)
+    v = jax.random.normal(kv, (B, S, Hkv, D), jnp.float32)
+    a = xla_flash(q, k, v, causal=True, chunk=32)
+    qf = q.reshape(B, S, Hkv * G, D)  # note: head-major grouping differs
+    # reorder: model groups (Hkv, G); kernel expects q heads h where
+    # kv = h // G -> q head index = hkv * G + g  == same ordering
+    b = flash_attention_pallas(qf, k, v, causal=True, block_q=32,
+                               block_k=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(a.reshape(B, S, Hkv * G, D)),
+                               np.asarray(b), rtol=2e-4, atol=2e-5)
+
+
+def test_flash_pallas_bf16():
+    key = jax.random.key(3)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (1, 64, 4, 32), jnp.bfloat16)
+    k = jax.random.normal(kk, (1, 64, 4, 32), jnp.bfloat16)
+    v = jax.random.normal(kv, (1, 64, 4, 32), jnp.bfloat16)
+    got = flash_attention_pallas(q, k, v, causal=True, block_q=32,
+                                 block_k=32, interpret=True)
+    expect = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(expect, np.float32),
+                               rtol=2e-2, atol=2e-2)

@@ -1,0 +1,131 @@
+"""QAT quantizers (§III-B), residual re-scaling (§III-C), fault injection (Fig 5)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import coding, fault, quant, residual
+
+
+# ---------------------------------------------------------------------------
+# LSQ fake quant
+# ---------------------------------------------------------------------------
+
+def test_fake_quant_forward_values():
+    x = jnp.asarray([-3.0, -0.6, -0.2, 0.0, 0.3, 0.6, 3.0])
+    out = quant.lsq_fake_quant(x, jnp.asarray(0.5), -1, 1)
+    np.testing.assert_allclose(np.asarray(out),
+                               [-0.5, -0.5, 0.0, 0.0, 0.5, 0.5, 0.5])
+
+
+def test_ste_gradient_masks_clip():
+    x = jnp.asarray([-3.0, 0.2, 3.0])
+    g = jax.grad(lambda x: quant.lsq_fake_quant(x, jnp.asarray(0.5), -1, 1).sum())(x)
+    np.testing.assert_allclose(np.asarray(g), [0.0, 1.0, 0.0])
+
+
+def test_alpha_gradient_lsq_formula():
+    x = jnp.asarray([0.3])                     # x/a = 0.6 -> q=1
+    a = jnp.asarray(0.5)
+    g = jax.grad(lambda a: quant.lsq_fake_quant(x, a, -1, 1).sum())(a)
+    # d/da = q - x/a = 1 - 0.6 = 0.4, times grad scale 1/sqrt(1*1)
+    np.testing.assert_allclose(float(g), 0.4, rtol=1e-6)
+    # saturated sample contributes the rail value
+    g2 = jax.grad(lambda a: quant.lsq_fake_quant(
+        jnp.asarray([3.0]), a, -1, 1).sum())(a)
+    np.testing.assert_allclose(float(g2), 1.0, rtol=1e-6)
+
+
+def test_per_channel_alpha_broadcast_and_grad_shape():
+    x = jax.random.normal(jax.random.key(0), (5, 3))
+    a = jnp.asarray([0.3, 0.5, 1.0])
+    out = quant.lsq_fake_quant(x, a, -4, 4)
+    assert out.shape == x.shape
+    ga = jax.grad(lambda a: quant.lsq_fake_quant(x, a, -4, 4).sum())(a)
+    assert ga.shape == a.shape
+
+
+@given(st.integers(0, 10), st.sampled_from([2, 4, 8, 16]))
+@settings(max_examples=20, deadline=None)
+def test_act_quant_matches_inference_quantizer(seed, bsl):
+    """QAT rounding == coding.quantize_levels (training/inference parity)."""
+    x = jax.random.normal(jax.random.key(seed), (32,))
+    alpha = 0.3
+    fq = quant.thermometer_act_quant(x, jnp.asarray(alpha), bsl)
+    q = coding.quantize_levels(x, alpha, bsl)
+    np.testing.assert_allclose(np.asarray(fq),
+                               np.asarray(q, np.float32) * alpha, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# residual re-scaling block
+# ---------------------------------------------------------------------------
+
+def test_rescale_multiply_exact():
+    v = jnp.arange(-8, 9)
+    np.testing.assert_array_equal(np.asarray(residual.rescale_q(v, 3)),
+                                  np.asarray(v) * 8)
+
+
+@given(st.integers(-8, 8), st.integers(1, 3))
+@settings(max_examples=40, deadline=None)
+def test_rescale_divide_matches_bit_level(v, n):
+    """q-domain divide == the paper's bit-level 1-of-2 subsample + pad."""
+    bits = coding.encode_thermometer(jnp.asarray(v), 16)
+    for _ in range(n):
+        bits = residual.rescale_bits_div2(bits)
+        assert bits.shape[-1] == 16                       # constant BSL
+        # output is a concatenation of thermometer codes (BSN-input valid);
+        # its VALUE is still popcount - L/2:
+    got = int(coding.decode_thermometer(bits))
+    expect = int(residual.rescale_q(jnp.asarray(v), -n))
+    assert got == expect
+    # error vs exact division bounded by 1 level per cycle
+    assert abs(got - v / 2 ** n) <= 1.0
+
+
+def test_pow2_exponent():
+    assert residual.pow2_exponent(0.25, 1.0) == 2
+    assert residual.pow2_exponent(1.0, 0.25) == -2
+    assert residual.pow2_exponent(0.3, 1.0) == 2          # nearest pow2
+
+
+def test_residual_add():
+    conv = jnp.asarray([10, -5])
+    resid = jnp.asarray([3, 3])
+    np.testing.assert_array_equal(
+        np.asarray(residual.residual_add_q(conv, resid, 2)), [22, 7])
+
+
+# ---------------------------------------------------------------------------
+# fault injection: thermometer degrades gracefully, binary doesn't
+# ---------------------------------------------------------------------------
+
+def test_zero_ber_identity():
+    xq = jnp.arange(-8, 9)
+    out = fault.thermometer_under_ber(xq, 16, 0.0, jax.random.key(0))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(xq))
+    outb = fault.binary_under_ber(xq, 5, 0.0, jax.random.key(0))
+    np.testing.assert_array_equal(np.asarray(outb), np.asarray(xq))
+
+
+def test_thermometer_vs_binary_mse_at_equal_ber():
+    """Fig 5 mechanism: at the same BER, thermometer MSE << binary MSE
+    (binary flips hit exponentially-weighted positions)."""
+    key = jax.random.key(42)
+    xq = jax.random.randint(key, (20000,), -8, 9)
+    ber = 0.05
+    th = fault.thermometer_under_ber(xq, 16, ber, jax.random.key(1))
+    bi = fault.binary_under_ber(xq, 16, ber, jax.random.key(2))
+    mse_th = float(jnp.mean((th - xq) ** 2))
+    mse_bi = float(jnp.mean((bi - xq) ** 2))
+    assert mse_th < mse_bi / 10, (mse_th, mse_bi)
+
+
+def test_binary_roundtrip_no_noise_negative():
+    xq = jnp.asarray([-8, -1, 0, 7])
+    out = fault.binary_under_ber(xq, 4, 0.0, jax.random.key(0))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(xq))

@@ -1,0 +1,108 @@
+"""Selective interconnect (paper Fig 3b, Fig 7, Eq 1)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import bsn, coding, si
+
+
+def brute_force_out_count(fn, c, in_max, out_bsl, alpha_in, alpha_out):
+    v = alpha_in * (c - in_max / 2)
+    y = fn(np.asarray([v]))[0]
+    return int(np.clip(np.round(y / alpha_out + out_bsl / 2), 0, out_bsl))
+
+
+@pytest.mark.parametrize("fn,alpha_in,alpha_out", [
+    (si.relu_fn, 0.5, 0.5),
+    (si.relu_fn, 0.25, 1.0),
+    (si.identity_fn, 0.5, 0.5),
+    (si.tanh_fn(2.0), 0.25, 0.125),
+    (si.relu2_fn, 0.5, 1.0),
+    (si.gelu_mono_fn, 0.25, 0.25),
+    (si.silu_mono_fn, 0.25, 0.25),
+])
+def test_thresholds_realize_function_exactly(fn, alpha_in, alpha_out):
+    """SI(c) == quantized target for EVERY input count (exactness claim)."""
+    in_max, out_bsl = 64, 16
+    t = si.si_thresholds(fn, in_max, out_bsl, alpha_in, alpha_out)
+    cs = jnp.arange(in_max + 1)
+    got = np.asarray(si.apply_si_counts(cs, jnp.asarray(t)))
+    expect = np.array([brute_force_out_count(fn, int(c), in_max, out_bsl,
+                                             alpha_in, alpha_out)
+                       for c in range(in_max + 1)])
+    np.testing.assert_array_equal(got, expect)
+
+
+def test_bn_fused_relu():
+    """Paper Eq 1 / Fig 7: BN parameters shift & space the thresholds."""
+    gamma, beta = 1.5, 0.75
+    fn = si.bn_relu_fn(gamma, beta)
+    in_max, out_bsl = 128, 16
+    t = si.si_thresholds(fn, in_max, out_bsl, alpha_in=0.125, alpha_out=0.25)
+    cs = np.arange(in_max + 1)
+    got = np.asarray(si.apply_si_counts(jnp.asarray(cs), jnp.asarray(t)))
+    v = 0.125 * (cs - in_max / 2)
+    y = np.where(v >= beta, gamma * (v - beta), 0.0)
+    expect = np.clip(np.round(y / 0.25 + 8), 0, 16)
+    np.testing.assert_array_equal(got, expect)
+    # output is flat (== zero level) until the beta crossing
+    zero_out = got[v < beta]
+    assert np.all(zero_out == 8)        # 8 == zero point of 16-bit BSL
+
+
+def test_bn_negative_gamma_rejected():
+    with pytest.raises(ValueError):
+        si.bn_relu_fn(-1.0, 0.0)
+
+
+@given(st.integers(0, 40))
+@settings(max_examples=20, deadline=None)
+def test_bit_path_equals_count_path(seed):
+    """Tapping sorted wires == counting thresholds (hardware == functional)."""
+    rng = np.random.default_rng(seed)
+    in_max, out_bsl = 32, 8
+    t = si.si_thresholds(si.relu_fn, in_max, out_bsl, 0.5, 0.5)
+    c = int(rng.integers(0, in_max + 1))
+    sorted_bits = jnp.asarray([1] * c + [0] * (in_max - c), jnp.int8)
+    got_bits = si.apply_si_bits(sorted_bits, jnp.asarray(t))
+    assert coding.is_thermometer(np.asarray(got_bits)[None])[0]
+    got_count = int(got_bits.sum())
+    expect = int(si.apply_si_counts(jnp.asarray(c), jnp.asarray(t)))
+    assert got_count == expect
+
+
+def test_full_pipeline_bits():
+    """multiplier -> BSN -> SI, fully bit-exact, equals float reference."""
+    from repro.core import multiplier
+    rng = np.random.default_rng(0)
+    width, bsl = 16, 4
+    alpha = 0.5
+    a_q = rng.integers(-2, 3, width)
+    w_q = rng.integers(-1, 2, width)
+    a_bits = coding.encode_thermometer(jnp.asarray(a_q), bsl)
+    prods = multiplier.ternary_scale_bits(jnp.asarray(w_q), a_bits)
+    sorted_bits = bsn.exact_bsn_bits(prods)
+    in_max = width * bsl
+    out_bsl = 16
+    t = si.si_thresholds(si.relu_fn, in_max, out_bsl,
+                         alpha_in=alpha, alpha_out=alpha)
+    out_bits = si.apply_si_bits(sorted_bits, jnp.asarray(t))
+    got_val = alpha * (int(out_bits.sum()) - out_bsl / 2)
+    exact = alpha * max(0.0, float((a_q * w_q).sum()))
+    assert abs(got_val - exact) <= alpha / 2 + 1e-9
+
+
+def test_monotonicity_enforced():
+    with pytest.raises(ValueError):
+        si.si_thresholds_from_counts(np.asarray([0, 2, 1, 3]), 4)
+
+
+def test_constant_rails():
+    """t_j = 0 -> constant 1; t_j = in_max+1 -> constant 0."""
+    t = jnp.asarray([0, 2, 9])             # in_max = 8
+    bits = jnp.asarray([1, 1, 0, 0, 0, 0, 0, 0], jnp.int8)
+    out = np.asarray(si.apply_si_bits(bits, t))
+    np.testing.assert_array_equal(out, [1, 1, 0])

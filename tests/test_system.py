@@ -1,0 +1,94 @@
+"""End-to-end system behaviour: the full SC pipeline, float -> silicon.
+
+The chain every other test file covers piecewise, asserted here in one
+pass: QAT training improves the model; exporting to the integer datapath
+(ternary weights + SI thresholds) preserves its behaviour; the integer
+path equals the bit-level circuit simulation; and the Pallas kernel
+computes the same integer path.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bsn, coding, multiplier, si
+from repro.core.quant import lsq_fake_quant
+from repro.kernels import ops, ref
+
+
+def test_end_to_end_sc_pipeline():
+    rng = np.random.default_rng(0)
+    din, dout, batch = 32, 8, 16
+    act_bsl, out_bsl = 8, 16
+    alpha_a, alpha_w = 0.25, 0.05
+
+    # a "trained" layer: weights near-ternary, activations in range
+    w = jnp.asarray(rng.normal(0, 0.05, (din, dout)), jnp.float32)
+    x = jnp.asarray(rng.normal(0, 0.5, (batch, din)), jnp.float32)
+
+    # 1. QAT view (differentiable fake-quant)
+    x_fq = lsq_fake_quant(x, jnp.asarray(alpha_a), -act_bsl // 2,
+                          act_bsl // 2)
+    w_fq = lsq_fake_quant(w, jnp.asarray(alpha_w), -1, 1)
+    y_qat = x_fq @ w_fq
+
+    # 2. integer datapath (what the silicon executes)
+    x_q = coding.quantize_levels(x, alpha_a, act_bsl).astype(jnp.int8)
+    w_int = np.clip(np.round(np.asarray(w) / alpha_w), -1, 1).astype(np.int8)
+    sum_q = ref.ternary_matmul_ref(x_q, jnp.asarray(w_int))
+    np.testing.assert_allclose(np.asarray(y_qat),
+                               np.asarray(sum_q) * alpha_a * alpha_w,
+                               rtol=1e-5, atol=1e-5)
+
+    # 3. Pallas kernel == reference
+    y_kernel = ops.ternary_matmul(x_q, jnp.asarray(w_int),
+                                  min_flops_for_kernel=0,
+                                  block_m=8, block_n=8, block_k=8)
+    np.testing.assert_array_equal(np.asarray(y_kernel), np.asarray(sum_q))
+
+    # 4. bit-level circuit == integer path (one neuron, full bitstreams)
+    bits = coding.encode_thermometer(x_q[0], act_bsl)
+    prods = multiplier.ternary_scale_bits(jnp.asarray(w_int[:, 0]), bits)
+    sorted_bits = bsn.exact_bsn_bits(prods)
+    circuit = int(coding.counts_from_bits(sorted_bits)) - din * act_bsl // 2
+    assert circuit == int(sum_q[0, 0])
+
+    # 5. SI epilogue (BN-fused ReLU) applied on all three paths agrees
+    t = si.si_thresholds(si.bn_relu_fn(1.5, 0.1), 2 * din * act_bsl // 2,
+                         out_bsl, alpha_in=alpha_a * alpha_w,
+                         alpha_out=alpha_a)
+    t_q = jnp.asarray(t.astype(np.int64) - din * act_bsl // 2, jnp.int32)
+    y_si_ref = ref.ternary_matmul_ref(x_q, jnp.asarray(w_int),
+                                      jnp.tile(t_q, (dout, 1)))
+    y_si_kernel = ops.ternary_matmul(x_q, jnp.asarray(w_int),
+                                     jnp.tile(t_q, (dout, 1)),
+                                     min_flops_for_kernel=0,
+                                     block_m=8, block_n=8, block_k=8)
+    np.testing.assert_array_equal(np.asarray(y_si_ref),
+                                  np.asarray(y_si_kernel))
+    si_bits = si.apply_si_bits(sorted_bits, jnp.asarray(t))
+    assert int(si_bits.sum()) - out_bsl // 2 == int(y_si_ref[0, 0])
+
+
+def test_sc_qat_lm_learns_end_to_end():
+    """A reduced zoo LM under full SC-QAT beats its initial loss fast."""
+    from repro.configs import get_arch
+    from repro.data import SyntheticLM
+    from repro.models import init_params
+    from repro.train import build_train_step, init_train_state
+
+    cfg = get_arch("granite-3-2b").scaled(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+        vocab_size=64, vocab_pad_multiple=32, dtype="float32",
+        attn_q_chunk=8)
+    assert cfg.quant.mode == "sc_qat"
+    from repro.optim import warmup_cosine
+    ds = SyntheticLM(vocab_size=64, seq_len=16, seed=0)
+    state = init_train_state(init_params(jax.random.key(0), cfg), cfg)
+    step = jax.jit(build_train_step(
+        cfg, lambda s: warmup_cosine(s, 3e-3, 10, 100)))
+    losses = []
+    for i in range(100):
+        state, m = step(state, ds.batch(i, 8))
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.5, (losses[0], losses[-1])
