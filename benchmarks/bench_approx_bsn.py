@@ -5,16 +5,29 @@ SI input-output precision gap).  Fig 10b + Fig 13: a design-space sweep
 over (clip, stride, temporal fold) per ResNet18 conv size; the
 spatial-temporal BSN right-sizes each layer — paper reports 8.2x..23.3x
 ADP reduction vs the max-width baseline BSN with negligible MSE.
+
+``kernel_sweep`` additionally times the execution paths of the adder
+itself across BSL/width/stage points: exact bit-level sort kernel
+(bsn_sort over the concatenated thermometer codes) vs the fused
+approximate-BSN kernel vs the jitted count reference.  On this CPU
+container the Pallas numbers are interpret-mode (correctness-path)
+timings, not TPU performance — the point is the relative shape: the
+approximate kernel touches ``width`` counts instead of sorting
+``width * BSL`` bits.
 """
 
 from __future__ import annotations
 
 import time
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import hwmodel, si
-from repro.core.bsn import ApproxBSNSpec, StageSpec, SubSampleSpec
+from repro.core.bsn import (ApproxBSNSpec, StageSpec, SubSampleSpec,
+                            default_approx_spec)
+from repro.kernels import dispatch, ops
 
 from .bench_bsn_cost import measured_mse
 
@@ -93,7 +106,64 @@ def run() -> list[tuple]:
                  f"avg_adp_reduction={avg_red:.1f}x "
                  "(paper: 8.2x..23.3x, avg 8.5x)"))
     us = (time.time() - t0) * 1e6 / len(rows)
-    return [(n, us, d) for n, _, d in rows]
+    return [(n, us, d) for n, _, d in rows] + kernel_sweep()
+
+
+# ---------------------------------------------------------------------------
+# execution-path sweep: exact-sort kernel vs fused approx kernel vs reference
+# ---------------------------------------------------------------------------
+
+def _time_us(fn, *args, reps: int = 3) -> float:
+    jax.block_until_ready(fn(*args))          # compile + warm
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / reps * 1e6
+
+
+# (width, in_bsl, cycles): BSL sweep at fixed width, width sweep at fixed
+# BSL, and one temporal fold — at least 3 spec points per the harness.
+KERNEL_SWEEP_POINTS = ((128, 2, 1), (128, 4, 1), (512, 2, 1), (128, 2, 4))
+
+
+def kernel_sweep(rows_batch: int = 256) -> list[tuple]:
+    rng = np.random.default_rng(0)
+    out = []
+    for width, in_bsl, cycles in KERNEL_SWEEP_POINTS:
+        spec = default_approx_spec(width, in_bsl)
+        total = cycles * width
+        counts = jnp.asarray(
+            rng.integers(0, in_bsl + 1, (rows_batch, total)), jnp.int32)
+
+        us_ref = _time_us(jax.jit(
+            lambda c, s=spec, t=cycles: dispatch.approx_bsn(
+                c, s, cycles=t, backend="reference")), counts)
+        us_kernel = _time_us(
+            lambda c, s=spec, t=cycles: dispatch.approx_bsn(
+                c, s, cycles=t, backend="pallas-interpret", block_r=128),
+            counts)
+
+        # the exact adder sorts all width*BSL bits of the concatenation
+        levels = np.asarray(counts) - in_bsl // 2
+        bits = (levels[..., None] + in_bsl // 2
+                > np.arange(in_bsl)).astype(np.int8)
+        flat = jnp.asarray(bits.reshape(rows_batch, total * in_bsl))
+        us_exact = _time_us(
+            lambda b: ops.bsn_sort(b, min_rows_for_kernel=0, block_r=128),
+            flat)
+
+        ok = bool(jnp.array_equal(
+            dispatch.approx_bsn(counts, spec, cycles=cycles,
+                                backend="pallas-interpret", block_r=128),
+            dispatch.approx_bsn(counts, spec, cycles=cycles,
+                                backend="reference")))
+        out.append((f"kernel_w{width}L{in_bsl}T{cycles}", us_kernel,
+                    f"exact={ok} ref_us={us_ref:.0f} "
+                    f"exact_sort_us={us_exact:.0f} "
+                    f"fused_vs_exact_sort={us_exact / us_kernel:.1f}x "
+                    f"out_bsl={spec.out_bsl} scale={spec.scale}"))
+    return out
 
 
 if __name__ == "__main__":

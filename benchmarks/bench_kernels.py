@@ -73,6 +73,27 @@ def run() -> list[tuple]:
         levels = int(np.log2(length)) * (int(np.log2(length)) + 1) // 2
         rows.append((f"bsn_sort_{r}x{length}", us,
                      f"exact={ok} compare_exchange_levels={levels}"))
+
+    # fused approximate BSN (spatial + temporal-reuse) vs count oracle
+    from repro.core.bsn import (approx_bsn_counts, default_approx_spec,
+                                spatial_temporal_counts)
+    from repro.kernels import dispatch
+    for (r, width, in_bsl, cycles) in ((256, 128, 2, 1), (256, 512, 2, 1),
+                                       (256, 128, 2, 4)):
+        spec = default_approx_spec(width, in_bsl)
+        c = jnp.asarray(rng.integers(0, in_bsl + 1,
+                                     (r, cycles * width)), np.int32)
+        us = _time(lambda x: dispatch.approx_bsn(
+            x, spec, cycles=cycles, backend="pallas-interpret",
+            block_r=128), c)
+        oracle = (approx_bsn_counts(c, spec) if cycles == 1
+                  else spatial_temporal_counts(c, spec, cycles))
+        got = dispatch.approx_bsn(c, spec, cycles=cycles,
+                                  backend="pallas-interpret", block_r=128)
+        ok = bool(jnp.array_equal(got, oracle))
+        rows.append((f"approx_bsn_{r}x{width}L{in_bsl}T{cycles}", us,
+                     f"exact={ok} out_bsl={spec.out_bsl} "
+                     f"scale={spec.scale}"))
     return rows
 
 

@@ -17,13 +17,25 @@ Temporal path (Fig 12): a physically small BSN is reused over ``T`` cycles
 to cover a ``T``-times-wider accumulation; functionally a chunked reduce
 with the spatial pipeline applied per cycle.
 
-Everything exists twice:
+Everything exists three times, in decreasing order of fidelity and
+increasing order of speed:
 
 * ``*_bits``   — bit-exact circuit simulation (compare-exchange network on
   the actual bit vectors).  Used by fault-injection and MSE experiments.
 * ``*_counts`` — the TPU-native functional equivalent on popcounts.  The
-  two are proven equivalent in tests (the count path is the oracle for the
-  Pallas kernel as well).
+  bit/count equivalence is proven in tests/test_bsn.py; the count path is
+  the ORACLE for the kernels.
+* the fused Pallas kernels (kernels/approx_bsn.py) — the deployable hot
+  path: the whole progressive pipeline in one VMEM-resident pass, plus
+  the chunked temporal-reuse variant.  Proven equal to ``*_counts`` (and
+  transitively to the circuit) in tests/test_approx_bsn_kernel.py.
+
+:func:`approx_bsn` below is the front door: it routes through the kernel
+dispatch layer (kernels/dispatch.py) which picks compiled pallas on TPU,
+the interpreter elsewhere, and the count reference for tiny shapes — so
+SC layers and the serving path hit the kernel by default without naming
+it.  :func:`default_approx_spec` designs a sensible spec for a given
+accumulation width when the caller doesn't carry one.
 """
 
 from __future__ import annotations
@@ -46,6 +58,8 @@ __all__ = [
     "approx_bsn_output_bsl",
     "approx_bsn_scale",
     "spatial_temporal_counts",
+    "approx_bsn",
+    "default_approx_spec",
 ]
 
 
@@ -260,3 +274,53 @@ def spatial_temporal_counts(counts: jax.Array, spec: ApproxBSNSpec,
     c = counts.reshape(counts.shape[:-1] + (cycles, w))
     partial = approx_bsn_counts(c, spec)              # (..., cycles)
     return jnp.sum(partial, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# kernel front door
+# ---------------------------------------------------------------------------
+
+def approx_bsn(counts: jax.Array, spec: ApproxBSNSpec, *, cycles: int = 1,
+               backend: str | None = None, **kw) -> jax.Array:
+    """Run the approximate adder through the kernel dispatch layer.
+
+    Semantics of :func:`approx_bsn_counts` (``cycles == 1``) or
+    :func:`spatial_temporal_counts` (``cycles > 1``), executed by the
+    fused Pallas kernel whenever the backend/shape warrants it — see
+    kernels/dispatch.py for the selection policy and ``backend=`` /
+    ``kernels.dispatch.backend_scope`` for overrides.
+    """
+    from repro.kernels import dispatch                # lazy: core <- kernels
+    return dispatch.approx_bsn(counts, spec, cycles=cycles, backend=backend,
+                               **kw)
+
+
+def default_approx_spec(width: int, in_bsl: int, *,
+                        target_out_bsl: int = 32) -> ApproxBSNSpec:
+    """Design a single-stage spec for a ``width``-wide accumulation.
+
+    Picks a power-of-two stride (re-alignable by the §III-C residual
+    re-scaler) so the output BSL lands near ``target_out_bsl``, then a
+    symmetric clip window absorbing the rest of the sorted length.  The
+    3-sigma check of Fig 11 is the caller's job — this is the shape
+    recipe, tightened per layer by the bench_approx_bsn sweep.
+    """
+    sorted_len = width * in_bsl
+    if sorted_len <= target_out_bsl:
+        return ApproxBSNSpec(width=width, in_bsl=in_bsl,
+                             stages=(StageSpec(width, SubSampleSpec(0, 1)),))
+    stride = 1
+    while stride * 2 * target_out_bsl <= sorted_len:
+        stride *= 2
+    # symmetric clipping needs kept == sorted_len (mod 2); an even stride
+    # makes kept even, so an odd sorted length forces stride 1
+    if sorted_len % 2 and stride > 1:
+        stride = 1
+    out_bsl = min(target_out_bsl, sorted_len // stride)
+    if (sorted_len - out_bsl * stride) % 2:     # only possible at stride 1
+        out_bsl += 1 if out_bsl + 1 <= sorted_len else -1
+    kept = out_bsl * stride
+    return ApproxBSNSpec(
+        width=width, in_bsl=in_bsl,
+        stages=(StageSpec(width, SubSampleSpec((sorted_len - kept) // 2,
+                                               stride)),))

@@ -36,6 +36,7 @@ __all__ = [
     "sc_linear_qat",
     "export_sc_linear",
     "sc_linear_int",
+    "sc_linear_int_approx",
     "sc_residual_quant",
 ]
 
@@ -156,22 +157,8 @@ def export_sc_linear(params: dict, cfg: SCQuantConfig,
     return out
 
 
-def sc_linear_int(int_params: dict, x_q: jax.Array,
-                  matmul_fn: Callable | None = None) -> jax.Array:
-    """Integer datapath: x_q int8 levels @ ternary int8 weights -> int32 sum
-    (== the BSN's popcount, proven in tests), then optional SI epilogue.
-
-    ``matmul_fn(x_q, w_int)`` may be supplied to route through the Pallas
-    kernel; default is the jnp reference (int32 accumulate).
-    """
-    w_int = jnp.asarray(int_params["w_int"])
-    if matmul_fn is None:
-        sum_q = jax.lax.dot_general(
-            x_q.astype(jnp.int32), w_int.astype(jnp.int32),
-            (((x_q.ndim - 1,), (0,)), ((), ())),
-            preferred_element_type=jnp.int32)
-    else:
-        sum_q = matmul_fn(x_q, w_int)
+def _si_epilogue(int_params: dict, sum_q: jax.Array) -> jax.Array:
+    """Optional SI threshold activation on accumulated q-domain sums."""
     thresholds = int_params.get("thresholds")
     if thresholds is None:
         return sum_q
@@ -182,3 +169,65 @@ def sc_linear_int(int_params: dict, x_q: jax.Array,
     out_counts = jnp.sum(counts[..., None] >= t, axis=-1, dtype=jnp.int32)
     out_bsl = t.shape[-1]
     return out_counts - out_bsl // 2               # back to q domain
+
+
+def sc_linear_int(int_params: dict, x_q: jax.Array,
+                  matmul_fn: Callable | None = None) -> jax.Array:
+    """Integer datapath: x_q int8 levels @ ternary int8 weights -> int32 sum
+    (== the exact BSN's popcount, proven in tests), then optional SI
+    epilogue.
+
+    ``matmul_fn(x_q, w_int)`` may be supplied to route through the Pallas
+    kernel; default is the jnp reference (int32 accumulate).  For the
+    paper's proposed approximate adder use :func:`sc_linear_int_approx`.
+    """
+    w_int = jnp.asarray(int_params["w_int"])
+    if matmul_fn is None:
+        sum_q = jax.lax.dot_general(
+            x_q.astype(jnp.int32), w_int.astype(jnp.int32),
+            (((x_q.ndim - 1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32)
+    else:
+        sum_q = matmul_fn(x_q, w_int)
+    return _si_epilogue(int_params, sum_q)
+
+
+def sc_linear_int_approx(int_params: dict, x_q: jax.Array,
+                         act_bsl: int,
+                         spec: "ApproxBSNSpec | None" = None,
+                         *, cycles: int = 1,
+                         backend: str | None = None) -> jax.Array:
+    """Integer datapath with the *approximate* progressive-sorting adder.
+
+    Replaces the exact accumulation of :func:`sc_linear_int` with the
+    paper's Fig 10b/12 BSN, executed by the fused Pallas kernel through
+    the dispatch layer (kernels/dispatch.py) — this is the silicon the
+    efficiency results are about.  Per output channel the ``K`` partial
+    products (levels in ``[-act_bsl/2, act_bsl/2]``, i.e. thermometer
+    codes of BSL ``act_bsl``) enter the adder in the count domain; the
+    compressed output code is re-scaled by ``spec.scale`` (a power of
+    two, the §III-C residual re-scaler) back to the q domain, then the
+    usual SI epilogue applies.
+
+    ``spec`` defaults to :func:`default_approx_spec` of the accumulation
+    width; with ``cycles > 1`` the temporal-reuse kernel folds
+    ``cycles * spec.width == K`` inputs onto the small spatial pipeline.
+    Exactness: with a degenerate spec (no clip, stride 1) the result
+    equals :func:`sc_linear_int` bit-for-bit (asserted in tests).
+    """
+    from repro.core.bsn import approx_bsn, default_approx_spec
+    w_int = jnp.asarray(int_params["w_int"])       # (K, N)
+    k, _ = w_int.shape
+    if spec is None:
+        spec = default_approx_spec(k // cycles, act_bsl)
+    if cycles * spec.width != k:
+        raise ValueError(f"cycles*width={cycles * spec.width} != K={k}")
+    if spec.in_bsl != act_bsl:
+        raise ValueError(f"spec.in_bsl={spec.in_bsl} != act_bsl={act_bsl}")
+    half = act_bsl // 2
+    # partial products, one thermometer code per (input, channel) pair
+    prod_q = x_q[..., :, None].astype(jnp.int32) * w_int.astype(jnp.int32)
+    counts = jnp.swapaxes(prod_q, -1, -2) + half   # (..., N, K) in [0, bsl]
+    out = approx_bsn(counts, spec, cycles=cycles, backend=backend)
+    sum_q = spec.scale * (out - cycles * spec.out_bsl // 2)
+    return _si_epilogue(int_params, sum_q)

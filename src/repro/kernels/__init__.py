@@ -3,14 +3,26 @@
 ternary_matmul  — int8 ternary matmul + fused SI epilogue (the SC
                   accelerator datapath, DESIGN.md §2); bit-exact vs
                   ref.ternary_matmul_ref and the circuit simulation.
-bsn_sort        — bitonic sorting network as VPU compare-exchange levels.
+bsn_sort        — exact bitonic sorting network as VPU compare-exchange
+                  levels (the paper's baseline adder).
+approx_bsn      — fused approximate progressive-sorting BSN (Fig 10b)
+                  plus the chunked temporal-reuse variant (Fig 12); the
+                  paper's proposed hot path.
+dispatch        — backend selection (pallas / pallas-interpret /
+                  reference) for the approximate adder; see README.md.
 flash_attention — fused online-softmax attention (serving path),
                   motivated by the §Perf memory-term attribution.
 """
 
-from . import ops, ref
+# NOTE: dispatch.approx_bsn is deliberately NOT re-exported at package
+# level — the name would shadow the kernels.approx_bsn submodule.  Call
+# dispatch.approx_bsn or the core.bsn.approx_bsn front door instead.
+from . import dispatch, ops, ref
+from .approx_bsn import approx_bsn_pallas, approx_bsn_temporal_pallas
+from .dispatch import backend_scope
 from .flash_attention import flash_attention_pallas
 from .ops import bsn_sort, ternary_matmul
 
-__all__ = ["ops", "ref", "bsn_sort", "ternary_matmul",
-           "flash_attention_pallas"]
+__all__ = ["dispatch", "ops", "ref", "bsn_sort", "ternary_matmul",
+           "approx_bsn_pallas", "approx_bsn_temporal_pallas",
+           "backend_scope", "flash_attention_pallas"]

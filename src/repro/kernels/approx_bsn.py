@@ -1,0 +1,180 @@
+"""Pallas TPU kernel: fused approximate progressive-sorting BSN.
+
+The paper's efficient adder (§IV-B, Fig 10b) is a pipeline of sub-BSN
+stages: group ``g_i`` partial thermometer codes, sort them, clip ``c_i``
+bits off each tail (near-Gaussian inputs carry almost no tail mass,
+Fig 11), then keep one of every ``s_i`` wires.  In the count domain —
+proven equivalent to the bit-level circuit in core/bsn.py and re-proven
+against this kernel in tests/test_approx_bsn_kernel.py — each stage is a
+grouped integer sum followed by saturate + floor-divide, so the whole
+pipeline fuses into one VMEM-resident pass over a (block_r, width) tile
+of popcounts:
+
+    per stage (group g, clip c, stride s), entering BSL L:
+        x <- sum over groups of g            # sorted popcount
+        x <- clamp(x - c, 0, g*L - 2c)       # tail clip (saturation)
+        x <- (x + s//2) >> log2(s)           # sub-sample (pow2 strides)
+
+Strides are powers of two in every paper design point (the output scale
+``prod(s_i)`` must be re-alignable by the §III-C residual re-scaler), so
+the divide lowers to a shift; non-pow2 strides fall back to integer
+division (fine in interpret mode, compiler-expanded on TPU).
+
+Two entry points:
+
+``approx_bsn_pallas``           — spatial pipeline, one pass per row tile.
+``approx_bsn_temporal_pallas``  — the Fig 12 temporal-reuse variant: a
+    physically small BSN reused over ``cycles`` chunks.  The grid gains an
+    ``arbitrary`` cycle dimension; each step runs the spatial pipeline on
+    its (block_r, width) chunk and accumulates the short partial code into
+    the revisited output block, exactly like the silicon's accumulator.
+
+Both are parameterized by primitive static tuples ``stages = ((group,
+clip, stride), ...)`` so this module stays free of core imports; the
+dispatch layer (kernels/dispatch.py) converts ``core.bsn.ApproxBSNSpec``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["approx_bsn_pallas", "approx_bsn_temporal_pallas",
+           "validate_stages"]
+
+Stages = tuple[tuple[int, int, int], ...]
+
+
+def validate_stages(width: int, in_bsl: int, stages: Stages) -> int:
+    """Static shape-check of a primitive stage tuple; returns out_bsl."""
+    n, bsl = width, in_bsl
+    prod_g = 1
+    for group, clip, stride in stages:
+        prod_g *= group
+        if n % group:
+            raise ValueError(f"group {group} does not divide width {n}")
+        n //= group
+        sorted_len = bsl * group
+        kept = sorted_len - 2 * clip
+        if kept <= 0 or kept % stride:
+            raise ValueError(f"clip={clip}, stride={stride} invalid for "
+                             f"sorted length {sorted_len}")
+        bsl = kept // stride
+    if prod_g != width:
+        raise ValueError(f"prod(groups)={prod_g} != width={width}")
+    return bsl
+
+
+def _pipeline(x: jax.Array, in_bsl: int, stages: Stages) -> jax.Array:
+    """Count-domain progressive pipeline on the trailing axis.
+
+    ``x``: (..., width) int32 popcounts -> (..., 1) output popcounts.
+    Static Python loop: the stage structure unrolls at trace time, like
+    the compare-exchange levels of bsn_sort.py.
+    """
+    bsl = in_bsl
+    for group, clip, stride in stages:
+        m = x.shape[-1] // group
+        x = jnp.sum(x.reshape(x.shape[:-1] + (m, group)), axis=-1)
+        sorted_len = bsl * group
+        kept = sorted_len - 2 * clip
+        # clamp unconditionally: the oracle (SubSampleSpec.apply_counts)
+        # saturates even with clip=0, and out-of-range inputs must not
+        # diverge between backends
+        x = jnp.clip(x - clip, 0, kept)
+        if stride > 1:
+            phase = stride // 2
+            if stride & (stride - 1) == 0:          # pow2: lower to a shift
+                sh = stride.bit_length() - 1
+                x = jax.lax.shift_right_logical(x + phase, sh)
+            else:
+                x = (x + phase) // stride
+        bsl = kept // stride
+    return x                                         # (..., 1)
+
+
+def _spatial_kernel(c_ref, o_ref, *, in_bsl: int, stages: Stages):
+    x = c_ref[...].astype(jnp.int32)                 # (block_r, width)
+    o_ref[...] = _pipeline(x, in_bsl, stages)        # (block_r, 1)
+
+
+def _temporal_kernel(c_ref, o_ref, *, in_bsl: int, stages: Stages):
+    t = pl.program_id(1)
+    part = _pipeline(c_ref[...].astype(jnp.int32), in_bsl, stages)
+
+    @pl.when(t == 0)
+    def _init():
+        o_ref[...] = part
+
+    @pl.when(t != 0)
+    def _accum():
+        o_ref[...] = o_ref[...] + part
+
+
+def _compiler_params(semantics: tuple[str, ...]):
+    try:
+        return pltpu.CompilerParams(dimension_semantics=semantics)
+    except AttributeError:                           # older jax naming
+        return pltpu.TPUCompilerParams(dimension_semantics=semantics)
+
+
+@functools.partial(jax.jit, static_argnames=("in_bsl", "stages", "block_r",
+                                             "interpret"))
+def approx_bsn_pallas(counts: jax.Array, *, in_bsl: int, stages: Stages,
+                      block_r: int = 256,
+                      interpret: bool = False) -> jax.Array:
+    """Fused spatial approximate BSN on (R, width) int popcounts -> (R,).
+
+    R must be a multiple of block_r (dispatch.py pads).  The entire
+    pipeline runs in one pallas_call; nothing leaves VMEM between stages.
+    """
+    r, width = counts.shape
+    out_bsl = validate_stages(width, in_bsl, stages)
+    del out_bsl
+    assert r % block_r == 0, (r, block_r)
+    kernel = functools.partial(_spatial_kernel, in_bsl=in_bsl, stages=stages)
+    out = pl.pallas_call(
+        kernel,
+        grid=(r // block_r,),
+        in_specs=[pl.BlockSpec((block_r, width), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_r, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, 1), jnp.int32),
+        compiler_params=_compiler_params(("parallel",)),
+        interpret=interpret,
+    )(counts)
+    return out[:, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("in_bsl", "stages", "cycles",
+                                             "block_r", "interpret"))
+def approx_bsn_temporal_pallas(counts: jax.Array, *, in_bsl: int,
+                               stages: Stages, cycles: int,
+                               block_r: int = 256,
+                               interpret: bool = False) -> jax.Array:
+    """Temporal-reuse (Fig 12) variant on (R, cycles*width) -> (R,).
+
+    Grid (rows, cycles): the cycle dimension revisits the same output
+    block and accumulates, so VMEM only ever holds one (block_r, width)
+    chunk — the kernel-level analogue of folding a wide accumulation onto
+    a physically small BSN.
+    """
+    r, total = counts.shape
+    assert total % cycles == 0, (total, cycles)
+    width = total // cycles
+    validate_stages(width, in_bsl, stages)
+    assert r % block_r == 0, (r, block_r)
+    kernel = functools.partial(_temporal_kernel, in_bsl=in_bsl, stages=stages)
+    out = pl.pallas_call(
+        kernel,
+        grid=(r // block_r, cycles),
+        in_specs=[pl.BlockSpec((block_r, width), lambda i, t: (i, t))],
+        out_specs=pl.BlockSpec((block_r, 1), lambda i, t: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, 1), jnp.int32),
+        compiler_params=_compiler_params(("parallel", "arbitrary")),
+        interpret=interpret,
+    )(counts)
+    return out[:, 0]

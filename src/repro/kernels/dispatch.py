@@ -1,0 +1,132 @@
+"""Kernel dispatch: pick pallas / pallas-interpret / reference per call.
+
+Single policy point for how the approximate-BSN adder executes:
+
+* ``"pallas"``            — compiled Mosaic kernel (real TPU).
+* ``"pallas-interpret"``  — same kernel through the Pallas interpreter;
+  bit-for-bit the compiled semantics, runs anywhere.  This is what the
+  differential tests and this CPU container use.
+* ``"reference"``         — the pure-JAX count oracle in core/bsn.py
+  (also the right answer for tiny shapes where a pallas_call is all
+  overhead).
+
+Resolution order for every call: explicit ``backend=`` argument, then an
+active :func:`backend_scope` / :func:`set_default_backend` override, then
+auto (TPU -> ``pallas``; kernel-worthy row count elsewhere ->
+``pallas-interpret``; otherwise ``reference``).  The decision happens at
+Python trace time, so a scope must wrap the *first* (tracing) call of a
+jitted function — ServeEngine does exactly that.
+
+``core.bsn.approx_bsn`` forwards here lazily, so library users reach the
+kernel without importing repro.kernels themselves.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bsn import (ApproxBSNSpec, approx_bsn_counts,
+                            spatial_temporal_counts)
+
+from .approx_bsn import approx_bsn_pallas, approx_bsn_temporal_pallas
+
+__all__ = ["BACKENDS", "select_backend", "set_default_backend",
+           "get_default_backend", "backend_scope", "approx_bsn",
+           "spec_stages"]
+
+BACKENDS = ("pallas", "pallas-interpret", "reference")
+
+_default_backend: str | None = None
+
+
+def set_default_backend(backend: str | None) -> None:
+    """Process-wide override; ``None`` restores auto selection."""
+    global _default_backend
+    if backend is not None and backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}, want one of "
+                         f"{BACKENDS} or None")
+    _default_backend = backend
+
+
+def get_default_backend() -> str | None:
+    return _default_backend
+
+
+@contextlib.contextmanager
+def backend_scope(backend: str | None) -> Iterator[None]:
+    """Temporarily pin the dispatch backend (``None`` scopes are no-ops
+    rather than resets, so nested engines compose)."""
+    if backend is None:
+        yield
+        return
+    prev = _default_backend
+    set_default_backend(backend)
+    try:
+        yield
+    finally:
+        set_default_backend(prev)
+
+
+def select_backend(rows: int, *, backend: str | None = None,
+                   min_rows_for_kernel: int = 8) -> str:
+    """Resolve the backend for a call over ``rows`` independent codes."""
+    if backend is None:
+        backend = _default_backend
+    if backend is not None:
+        if backend not in BACKENDS:
+            raise ValueError(f"unknown backend {backend!r}")
+        return backend
+    if jax.default_backend() == "tpu":
+        return "pallas"
+    if rows >= min_rows_for_kernel:
+        return "pallas-interpret"
+    return "reference"
+
+
+def spec_stages(spec: ApproxBSNSpec) -> tuple[tuple[int, int, int], ...]:
+    """ApproxBSNSpec -> the primitive static tuples the kernel takes."""
+    return tuple((s.group, s.sub.clip, s.sub.stride) for s in spec.stages)
+
+
+def approx_bsn(counts: jax.Array, spec: ApproxBSNSpec, *, cycles: int = 1,
+               backend: str | None = None, block_r: int = 256,
+               min_rows_for_kernel: int = 8) -> jax.Array:
+    """Approximate-BSN accumulation of ``(..., cycles*width)`` popcounts.
+
+    Returns the output-code popcounts ``(...,)``; represented value is
+    ``spec.scale * (out - cycles * spec.out_bsl // 2)``.  Any leading
+    batch shape; rows are flattened, padded to ``block_r`` and cropped.
+    """
+    total = cycles * spec.width
+    if counts.shape[-1] != total:
+        raise ValueError(f"expected trailing dim {total} "
+                         f"(cycles={cycles} x width={spec.width}), "
+                         f"got {counts.shape}")
+    batch = counts.shape[:-1]
+    rows = int(np.prod(batch)) if batch else 1
+    chosen = select_backend(rows, backend=backend,
+                            min_rows_for_kernel=min_rows_for_kernel)
+
+    if chosen == "reference":
+        if cycles == 1:
+            return approx_bsn_counts(counts, spec)
+        return spatial_temporal_counts(counts, spec, cycles)
+
+    interpret = chosen == "pallas-interpret"
+    block_r = min(block_r, max(8, 1 << (rows - 1).bit_length()))
+    rp = (rows + block_r - 1) // block_r * block_r
+    x2 = counts.reshape(rows, total).astype(jnp.int32)
+    x2 = jnp.pad(x2, ((0, rp - rows), (0, 0)))
+    kw = dict(in_bsl=spec.in_bsl, stages=spec_stages(spec),
+              block_r=block_r, interpret=interpret)
+    if cycles == 1:
+        out = approx_bsn_pallas(x2, **kw)
+    else:
+        out = approx_bsn_temporal_pallas(x2, cycles=cycles, **kw)
+    out = out[:rows]
+    return out.reshape(batch) if batch else out[0]

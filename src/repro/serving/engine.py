@@ -9,6 +9,15 @@ vmapped decode step), so mixed-progress sequences share each forward pass.
 The big-mesh serve path (launch/serve.py, dry-run decode cells) uses the
 uniform-position ``decode_step`` directly; this engine is the
 request-level orchestration above it.
+
+Kernel routing: the engine owns the dispatch policy for the SC
+approximate adder (kernels/dispatch.py).  Every traced entry point
+(prefill, the vmapped decode) runs inside ``backend_scope(bsn_backend)``,
+so any ``core.bsn.approx_bsn`` / ``sc_linear_int_approx`` call in the
+served model resolves to the fused Pallas kernel on TPU (interpret mode
+elsewhere) by default, without the model naming a backend.  Pass
+``bsn_backend="reference"`` to pin the pure-JAX oracle, e.g. when
+A/B-ing kernel output in production.
 """
 
 from __future__ import annotations
@@ -21,6 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.kernels import dispatch as kernel_dispatch
 from repro.models import decode_step, init_cache, prefill
 
 __all__ = ["Request", "ServeEngine"]
@@ -38,8 +48,14 @@ class Request:
 
 class ServeEngine:
     def __init__(self, params, cfg: ModelConfig, max_slots: int = 4,
-                 max_len: int = 256):
+                 max_len: int = 256, bsn_backend: str | None = None):
         assert not cfg.is_encoder, "encoders are served via forward()"
+        if bsn_backend is not None \
+                and bsn_backend not in kernel_dispatch.BACKENDS:
+            raise ValueError(f"bsn_backend must be one of "
+                             f"{kernel_dispatch.BACKENDS} or None (auto), "
+                             f"got {bsn_backend!r}")
+        self.bsn_backend = bsn_backend
         self.params, self.cfg = params, cfg
         self.max_slots, self.max_len = max_slots, max_len
         self._rid = itertools.count()
@@ -89,7 +105,10 @@ class ServeEngine:
                 return
             req = self.queue.pop(0)
             toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
-            logits, cache_one = self._prefill({"tokens": toks})
+            # scope must surround the tracing call: dispatch decisions are
+            # made at trace time and baked into the jitted computation
+            with kernel_dispatch.backend_scope(self.bsn_backend):
+                logits, cache_one = self._prefill({"tokens": toks})
             nxt = int(jnp.argmax(logits[0, -1, :self.cfg.vocab_size]))
             req.generated.append(nxt)
             self._insert_cache(slot, cache_one)
@@ -105,7 +124,8 @@ class ServeEngine:
         toks = np.zeros((self.max_slots, 1, 1), np.int32)
         for i in active:
             toks[i, 0, 0] = self.slots[i].generated[-1]
-        logits, self.cache = self._vdecode(self.cache, jnp.asarray(toks))
+        with kernel_dispatch.backend_scope(self.bsn_backend):
+            logits, self.cache = self._vdecode(self.cache, jnp.asarray(toks))
         nxt = np.asarray(jnp.argmax(
             logits[:, 0, 0, :self.cfg.vocab_size], axis=-1))
         done = []

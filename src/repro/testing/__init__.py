@@ -1,0 +1,12 @@
+"""Test-support utilities shipped with the library.
+
+``property_fallback`` is a miniature, deterministic stand-in for the
+`hypothesis` API surface this repo uses.  The real dependency is declared
+in ``requirements-test.txt``; in hermetic containers without it the test
+suite degrades to the fallback (fixed pseudo-random example sweeps)
+instead of erroring at collection.  See tests/conftest.py for the hook.
+"""
+
+from . import property_fallback
+
+__all__ = ["property_fallback"]

@@ -1,0 +1,159 @@
+"""Minimal deterministic fallback for the ``hypothesis`` API.
+
+Implements exactly the surface the test suite uses — ``given``,
+``settings``, and the strategies ``integers``, ``floats``, ``booleans``,
+``just``, ``sampled_from``, ``lists``, ``tuples`` — by running each
+property over a fixed number of pseudo-random examples.  Seeds derive
+from the test's qualified name, so runs are reproducible and failures
+name the falsifying example.  No shrinking, no database, no phases:
+this is a degraded mode for containers without the real package, not a
+replacement (``requirements-test.txt`` declares the real thing).
+
+``install_as_hypothesis()`` registers synthetic ``hypothesis`` /
+``hypothesis.strategies`` modules in ``sys.modules`` so unmodified
+``from hypothesis import given`` imports keep working.
+"""
+
+from __future__ import annotations
+
+import sys
+import types
+import zlib
+
+import numpy as np
+
+__all__ = ["given", "settings", "strategies", "install_as_hypothesis"]
+
+_DEFAULT_MAX_EXAMPLES = 30
+
+
+# ---------------------------------------------------------------------------
+# strategies
+# ---------------------------------------------------------------------------
+
+class Strategy:
+    """A sampler: ``example(rng)`` draws one value."""
+
+    def __init__(self, draw, name: str):
+        self._draw = draw
+        self._name = name
+
+    def example(self, rng: np.random.Generator):
+        return self._draw(rng)
+
+    def __repr__(self):
+        return self._name
+
+
+def integers(min_value: int, max_value: int) -> Strategy:
+    return Strategy(
+        lambda rng: int(rng.integers(min_value, max_value + 1)),
+        f"integers({min_value}, {max_value})")
+
+
+def floats(min_value: float, max_value: float, *, allow_nan: bool = True,
+           allow_infinity: bool = True) -> Strategy:
+    del allow_nan, allow_infinity          # bounded draws are always finite
+    return Strategy(
+        lambda rng: float(rng.uniform(min_value, max_value)),
+        f"floats({min_value}, {max_value})")
+
+
+def booleans() -> Strategy:
+    return Strategy(lambda rng: bool(rng.integers(0, 2)), "booleans()")
+
+
+def just(value) -> Strategy:
+    return Strategy(lambda rng: value, f"just({value!r})")
+
+
+def sampled_from(elements) -> Strategy:
+    pool = list(elements)
+    return Strategy(lambda rng: pool[int(rng.integers(len(pool)))],
+                    f"sampled_from({pool!r})")
+
+
+def lists(elements: Strategy, *, min_size: int = 0,
+          max_size: int = 10) -> Strategy:
+    def draw(rng):
+        n = int(rng.integers(min_size, max_size + 1))
+        return [elements.example(rng) for _ in range(n)]
+    return Strategy(draw, f"lists({elements!r}, {min_size}..{max_size})")
+
+
+def tuples(*strats: Strategy) -> Strategy:
+    return Strategy(lambda rng: tuple(s.example(rng) for s in strats),
+                    f"tuples{strats!r}")
+
+
+# ---------------------------------------------------------------------------
+# decorators
+# ---------------------------------------------------------------------------
+
+def settings(*, max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None,
+             **_ignored):
+    """Record run options on the function; other kwargs are accepted and
+    ignored (the fallback has no deadlines, phases, or health checks)."""
+    del deadline
+
+    def deco(fn):
+        fn._fallback_settings = {"max_examples": max_examples}
+        return fn
+    return deco
+
+
+def given(*strats: Strategy):
+    """Run the property over a deterministic example sweep."""
+
+    def deco(fn):
+        def runner():
+            opts = (getattr(runner, "_fallback_settings", None)
+                    or getattr(fn, "_fallback_settings", None)
+                    or {"max_examples": _DEFAULT_MAX_EXAMPLES})
+            base = zlib.crc32(
+                f"{fn.__module__}.{fn.__qualname__}".encode())
+            for i in range(opts["max_examples"]):
+                rng = np.random.default_rng([base, i])
+                args = tuple(s.example(rng) for s in strats)
+                try:
+                    fn(*args)
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example #{i} for {fn.__qualname__}: "
+                        f"args={args!r}") from e
+
+        # NOTE: no functools.wraps — __wrapped__ would make pytest read the
+        # original signature and demand fixtures named after the arguments.
+        runner.__name__ = fn.__name__
+        runner.__qualname__ = fn.__qualname__
+        runner.__doc__ = fn.__doc__
+        runner.__module__ = fn.__module__
+        runner.hypothesis_fallback = True
+        return runner
+    return deco
+
+
+# module-alias object so `from hypothesis import strategies as st` works
+strategies = types.ModuleType("hypothesis.strategies")
+strategies.integers = integers
+strategies.floats = floats
+strategies.booleans = booleans
+strategies.just = just
+strategies.sampled_from = sampled_from
+strategies.lists = lists
+strategies.tuples = tuples
+
+
+def install_as_hypothesis() -> None:
+    """Register fallback ``hypothesis`` modules in ``sys.modules``."""
+    if "hypothesis" in sys.modules:          # real package (or already done)
+        return
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    mod.strategies = strategies
+    mod.HealthCheck = types.SimpleNamespace(too_slow="too_slow",
+                                            filter_too_much="filter_too_much")
+    mod.__is_fallback__ = True
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = strategies

@@ -1,0 +1,22 @@
+"""Shared test bootstrap.
+
+1. Make ``src/`` importable even when PYTHONPATH isn't set (the tier-1
+   command sets it; IDE runs often don't).
+2. If the real ``hypothesis`` package is missing, install the
+   deterministic fallback from ``repro.testing.property_fallback`` so the
+   suite degrades to fixed example sweeps instead of failing collection.
+   Declare/install the real dependency via ``requirements-test.txt``.
+"""
+
+import os
+import sys
+
+_SRC = os.path.join(os.path.dirname(os.path.dirname(__file__)), "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+try:
+    import hypothesis  # noqa: F401  (real package wins when present)
+except ModuleNotFoundError:
+    from repro.testing.property_fallback import install_as_hypothesis
+    install_as_hypothesis()

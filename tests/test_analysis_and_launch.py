@@ -111,6 +111,9 @@ def test_fmt_s():
 # property test: SI threshold design is correct for ANY monotone step fn
 # ---------------------------------------------------------------------------
 
+# degrade (skip) rather than error if neither the real hypothesis nor the
+# conftest fallback shim is importable
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

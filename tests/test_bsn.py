@@ -159,6 +159,66 @@ def test_spatial_temporal_matches_per_chunk():
     assert np.max(np.abs(value - exact)) <= 9 * spec.scale  # rounding per cycle
 
 
+# ---------------------------------------------------------------------------
+# property tests: BSN invariants on near-Gaussian inputs
+# ---------------------------------------------------------------------------
+
+@given(st.integers(0, 10 ** 6), st.sampled_from([2, 4, 8]),
+       st.integers(4, 64))
+@settings(max_examples=25, deadline=None)
+def test_exact_sort_preserves_popcount_gaussian(seed, bsl, width):
+    """Invariant: popcount(exact_bsn_bits(x)) == sum of input popcounts.
+
+    The sort only permutes wires, so total switched charge is conserved —
+    the paper's central identity.  Inputs are near-Gaussian (binomial
+    counts), the regime the approximate design assumes.
+    """
+    rng = np.random.default_rng(seed)
+    counts = rng.binomial(bsl, 0.5, size=(3, width))
+    levels = jnp.asarray(counts - bsl // 2)
+    bits = coding.encode_thermometer(levels, bsl)
+    sorted_bits = bsn.exact_bsn_bits(bits)
+    np.testing.assert_array_equal(
+        np.asarray(coding.counts_from_bits(sorted_bits)),
+        np.asarray(coding.counts_from_bits(bits)).sum(-1))
+
+
+def _clip_mass_bound(spec: bsn.ApproxBSNSpec) -> float:
+    """Worst-case |value error| of the pipeline.
+
+    Stage i runs ``n_i = width / prod(g_1..g_i)`` parallel sub-BSNs; each
+    can saturate away at most its clipped tail mass (clip_i) and rounds by
+    at most stride_i/2, in stage-i count units = prod of earlier strides
+    in input units.  Parallel sub-BSN errors add downstream, hence n_i."""
+    bound, prefix, n = 0.0, 1.0, spec.width
+    for s in spec.stages:
+        n //= s.group
+        bound += prefix * n * (s.sub.clip + s.sub.stride / 2)
+        prefix *= s.sub.stride
+    return bound
+
+
+@given(st.integers(0, 10 ** 6))
+@settings(max_examples=25, deadline=None)
+def test_approx_error_bounded_by_clip_mass(seed):
+    """Invariant: |approx value - exact sum| <= sum_i prefix_i * (clip_i +
+    stride_i/2) for ANY input; near-Gaussian draws keep it far below."""
+    rng = np.random.default_rng(seed)
+    in_bsl = int(rng.choice([2, 4, 8]))
+    g1, g2 = int(rng.choice([2, 4])), int(rng.choice([2, 4, 8]))
+    s1_len = in_bsl * g1
+    spec = bsn.ApproxBSNSpec(
+        width=g1 * g2, in_bsl=in_bsl,
+        stages=(bsn.StageSpec(g1, bsn.SubSampleSpec(
+            clip=int(rng.integers(0, s1_len // 4 + 1)), stride=1)),
+                bsn.StageSpec(g2, bsn.SubSampleSpec(clip=0, stride=2))))
+    counts = jnp.asarray(rng.binomial(in_bsl, 0.5, size=(8, spec.width)))
+    out = bsn.approx_bsn_counts(counts, spec)
+    value = spec.scale * (np.asarray(out) - spec.out_bsl / 2)
+    exact = np.asarray(counts.sum(-1)) - spec.width * in_bsl / 2
+    assert np.max(np.abs(value - exact)) <= _clip_mass_bound(spec) + 1e-9
+
+
 def test_spec_validation():
     with pytest.raises(ValueError):
         bsn.ApproxBSNSpec(width=8, in_bsl=4,
