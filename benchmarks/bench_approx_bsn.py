@@ -166,6 +166,24 @@ def kernel_sweep(rows_batch: int = 256) -> list[tuple]:
     return out
 
 
-if __name__ == "__main__":
-    for r in run():
+def main() -> None:
+    import argparse
+    import json
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="kernel sweep only (fast); write "
+                         "BENCH_approx_bsn.json")
+    ap.add_argument("--out", default="BENCH_approx_bsn.json")
+    args = ap.parse_args()
+    rows = kernel_sweep(rows_batch=64) if args.smoke else run()
+    if args.smoke:
+        with open(args.out, "w") as f:
+            json.dump({n: {"us_per_call": us, "derived": d}
+                       for n, us, d in rows}, f, indent=2, sort_keys=True)
+        print(f"# wrote {args.out}")
+    for r in rows:
         print(",".join(str(x) for x in r))
+
+
+if __name__ == "__main__":
+    main()

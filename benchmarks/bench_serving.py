@@ -1,0 +1,138 @@
+"""ServeEngine v2 throughput: batched paged decode vs the per-slot loop.
+
+Measures end-to-end tokens/sec of the continuous-batching engine against
+the seed execution model (per-request prefill + one-token-at-a-time
+batch-1 decode — exactly what ``serving.sequential_generate`` encodes)
+across concurrency levels and prompt-length mixes.  Both sides are
+jit-warmed before timing; the sequential baseline reuses its compiled
+steps across requests, so the speedup is batching, not caching.
+
+CLI:
+    PYTHONPATH=src python benchmarks/bench_serving.py            # full
+    PYTHONPATH=src python benchmarks/bench_serving.py --smoke    # CI job
+The smoke run writes ``BENCH_serving.json`` (tokens/sec per point +
+the 8-way speedup) for the perf-trajectory artifact.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.models import decode_step, init_params, prefill
+from repro.serving import ServeEngine
+from repro.serving.engine import _pad_prefill_cache
+
+MAX_LEN = 64
+PAGE = 16
+
+CFG = get_arch("granite-3-2b").scaled(
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+    vocab_size=64, vocab_pad_multiple=32, dtype="float32", attn_q_chunk=8)
+
+MIXES = {
+    "uniform8": lambda n: [[(7 * i + j) % 64 for j in range(8)]
+                           for i in range(n)],
+    "mixed4to24": lambda n: [[(5 * i + j) % 64
+                              for j in range(4 + (i * 5) % 21)]
+                             for i in range(n)],
+}
+
+
+def _engine_tps(params, n_req, prompts_fn, max_new) -> float:
+    eng = ServeEngine(params, CFG, max_slots=min(n_req, 8),
+                      max_len=MAX_LEN, page_size=PAGE)
+
+    def wave():
+        for p in prompts_fn(n_req):
+            eng.submit(p, max_new_tokens=max_new)
+        done = eng.run_to_completion()
+        return sum(len(r.generated) for r in done)
+
+    wave()                                    # compile every bucket
+    t0 = time.time()
+    toks = wave()
+    return toks / (time.time() - t0)
+
+
+def _sequential_tps(params, n_req, prompts_fn, max_new) -> float:
+    """The seed per-slot loop, jitted once and warmed (see module doc)."""
+    prefill_fn = jax.jit(lambda b: prefill(params, b, CFG))
+    decode_fn = jax.jit(lambda c, t: decode_step(params, c, t, CFG))
+
+    def wave():
+        total = 0
+        for prompt in prompts_fn(n_req):
+            toks = jnp.asarray(prompt, jnp.int32)[None, :]
+            logits, cache = prefill_fn({"tokens": toks})
+            cache = _pad_prefill_cache(cache, MAX_LEN)
+            gen = [int(jnp.argmax(logits[0, -1, :CFG.vocab_size]))]
+            while len(gen) < max_new:
+                tok = jnp.asarray([[gen[-1]]], jnp.int32)
+                logits, cache = decode_fn(cache, tok)
+                gen.append(int(jnp.argmax(logits[0, 0, :CFG.vocab_size])))
+            total += len(gen)
+        return total
+
+    wave()
+    t0 = time.time()
+    toks = wave()
+    return toks / (time.time() - t0)
+
+
+def run(smoke: bool = False) -> list[tuple]:
+    params = init_params(jax.random.key(0), CFG)
+    max_new = 8 if smoke else 16
+    slot_counts = (8,) if smoke else (1, 4, 8)
+    mixes = ("uniform8",) if smoke else tuple(MIXES)
+    rows, results = [], {}
+    for mix in mixes:
+        for n in slot_counts:
+            tps_b = _engine_tps(params, n, MIXES[mix], max_new)
+            tps_s = _sequential_tps(params, n, MIXES[mix], max_new)
+            speedup = tps_b / tps_s
+            key = f"serving_{mix}_n{n}"
+            results[key] = {"batched_tps": tps_b, "sequential_tps": tps_s,
+                            "speedup": speedup}
+            rows.append((key, 1e6 / tps_b,
+                         f"batched_tps={tps_b:.1f} seq_tps={tps_s:.1f} "
+                         f"speedup={speedup:.2f}x"))
+    return rows if not smoke else (rows, results)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="one fast point; write BENCH_serving.json")
+    ap.add_argument("--out", default="BENCH_serving.json")
+    ap.add_argument("--min-speedup", type=float, default=0.0,
+                    help="fail unless batched/sequential >= this at every "
+                         "measured point (CI gate; local bar is 3x at 8 "
+                         "slots, CI uses margin for runner noise)")
+    args = ap.parse_args()
+    if args.smoke:
+        rows, results = run(smoke=True)
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=2, sort_keys=True)
+        print(f"# wrote {args.out}")
+    else:
+        rows = run()
+        results = None
+    print("name,us_per_call,derived")
+    for n, us, d in rows:
+        print(f"{n},{us:.1f},{d}")
+    if args.min_speedup and results:
+        worst = min(r["speedup"] for r in results.values())
+        if worst < args.min_speedup:
+            raise SystemExit(f"speedup {worst:.2f}x below the "
+                             f"{args.min_speedup}x gate")
+
+
+if __name__ == "__main__":
+    main()

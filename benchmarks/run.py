@@ -23,6 +23,7 @@ BENCHES = [
     "bsn_cost",              # Fig 9 + Table V + Fig 4
     "approx_bsn",            # Figs 10/11/13
     "kernels",               # Pallas datapath kernels
+    "serving",               # ServeEngine v2 batched vs per-slot loop
 ]
 
 

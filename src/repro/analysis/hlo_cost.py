@@ -115,6 +115,18 @@ def _match_paren(s: str, start: int) -> int:
     return len(s) - 1
 
 
+def _operand_name(raw: str) -> str:
+    """Normalize one operand to its instruction name.
+
+    Depending on the XLA version the printer emits operands bare
+    (``%add.3``) or typed (``f32[64,128]{1,0} %add.3`` — jax >= 0.4.3x).
+    Literals (``constant(10)`` bodies) have no ``%`` and pass through."""
+    m = None
+    for m in re.finditer(r"%([\w\.\-]+)", raw):
+        pass
+    return m.group(1) if m else raw.lstrip("%")
+
+
 def _parse_instr(line: str) -> Instr | None:
     """Manual instruction parser — regexes break on tuple types that embed
     ``/*index=5*/`` comments (i.e. every big while loop's carry)."""
@@ -143,7 +155,7 @@ def _parse_instr(line: str) -> Instr | None:
     if not re.fullmatch(r"[\w\-]+", op):
         return None
     close = _match_paren(rest2, par)
-    operands = [o.strip().lstrip("%")
+    operands = [_operand_name(o)
                 for o in _split_operands(rest2[par + 1:close])]
     attrs = rest2[close + 1:]
     return Instr(name, tstr, op, operands, attrs)
@@ -190,18 +202,22 @@ def _split_operands(s: str) -> list[str]:
 # cost walk
 # ---------------------------------------------------------------------------
 
-def _trip_count(cond: list[Instr]) -> int:
-    """Loop bound = the largest s32 constant in the condition computation.
-    jax counted loops compare the induction var LT bound."""
+def _trip_count(while_attrs: str, cond: list[Instr]) -> int:
+    """Trip count of a counted loop.
+
+    Preferred source: the scheduler's ``known_trip_count`` backend config
+    on the ``while`` op itself (emitted by every XLA version this repo
+    pins).  Fallback: the largest s32 constant in the condition
+    computation — jax counted loops compare the induction var LT bound."""
+    m = re.search(r'"known_trip_count"\s*:\s*\{\s*"n"\s*:\s*"(\d+)"',
+                  while_attrs)
+    if m:
+        return max(int(m.group(1)), 1)
     best = 1
     for ins in cond:
         if ins.op == "constant" and "s32[]" in ins.type_str:
-            m = re.search(r"constant\((\d+)\)", f"{ins.op}({ins.operands[0] if ins.operands else ''})")
-            val = None
             if ins.operands and ins.operands[0].isdigit():
-                val = int(ins.operands[0])
-            if val is not None:
-                best = max(best, val)
+                best = max(best, int(ins.operands[0]))
     return best
 
 
@@ -338,7 +354,8 @@ def _cost_of(comp_name: str, comps: dict, memo: dict) -> HloCost:
         if ins.op == "while":
             body = re.search(r"body=%?([\w\.\-]+)", ins.attrs)
             cond = re.search(r"condition=%?([\w\.\-]+)", ins.attrs)
-            trips = _trip_count(comps.get(cond.group(1), [])) if cond else 1
+            trips = _trip_count(
+                ins.attrs, comps.get(cond.group(1), []) if cond else [])
             if body:
                 cost.add(_cost_of(body.group(1), comps, memo), trips)
             if cond:

@@ -37,6 +37,7 @@ __all__ = [
     "export_sc_linear",
     "sc_linear_int",
     "sc_linear_int_approx",
+    "sc_linear_int_from_qat",
     "sc_residual_quant",
 ]
 
@@ -49,6 +50,9 @@ class SCQuantConfig:
     act_bsl: int = 8                # datapath activation BSL
     resid_bsl: int = 16             # high-precision residual BSL
     per_channel: bool = True        # per-output-channel weight scales
+    # sc_int only: accumulate through the paper's approximate BSN adder
+    # (kernels/dispatch) instead of the exact int32 dot
+    int_approx: bool = False
 
     @property
     def enabled(self) -> bool:
@@ -231,3 +235,43 @@ def sc_linear_int_approx(int_params: dict, x_q: jax.Array,
     out = approx_bsn(counts, spec, cycles=cycles, backend=backend)
     sum_q = spec.scale * (out - cycles * spec.out_bsl // 2)
     return _si_epilogue(int_params, sum_q)
+
+
+def sc_linear_int_from_qat(params: dict, x: jax.Array,
+                           cfg: SCQuantConfig, *,
+                           backend: str | None = None) -> jax.Array:
+    """Run a QAT-trained linear on the integer SC datapath, on the fly.
+
+    This is what lets the *whole model zoo* serve on the silicon path
+    without an export step: ``params`` are the live QAT params
+    (``w/alpha_w/alpha_a``); activations and weights are quantized to
+    their integer codes exactly as the fake-quant forward would round
+    them, the accumulation runs int8 x ternary -> int32 (== the exact
+    BSN popcount), and the result is rescaled back to the float residual
+    stream.  With ``cfg.int_approx`` the accumulation instead goes
+    through the paper's approximate progressive-sorting BSN
+    (:func:`sc_linear_int_approx`), which dispatches to the fused Pallas
+    kernel via kernels/dispatch — an ambient ``backend_scope`` (e.g. the
+    one ServeEngine installs) picks pallas / interpret / reference.
+
+    Numerics: with the exact accumulator the only difference from
+    ``sc_linear_qat`` is summation order (int32 exact vs float dot), so
+    q-domain values agree bit-for-bit and the float output to ~1 ulp.
+    """
+    half = cfg.act_half
+    # mirror lsq_fake_quant's dtype discipline: the rounding boundary is
+    # computed against alpha cast to the activation dtype
+    aa = params["alpha_a"].astype(x.dtype)
+    aw = params["alpha_w"].astype(jnp.float32)
+    x_q = jnp.clip(jnp.round(x / aa), -half, half).astype(jnp.int8)
+    w = params["w"].astype(jnp.float32)
+    w_int = jnp.clip(jnp.round(w / aw), -1, 1).astype(jnp.int8)
+    int_params = {"w_int": w_int}
+    if cfg.int_approx:
+        sum_q = sc_linear_int_approx(int_params, x_q, cfg.act_bsl,
+                                     backend=backend)
+    else:
+        sum_q = sc_linear_int(int_params, x_q)
+    y = sum_q.astype(jnp.float32) * (aa.astype(jnp.float32)
+                                     * jnp.atleast_1d(aw))
+    return y.astype(x.dtype)

@@ -25,7 +25,7 @@ from .common import (DATA, MODEL, apply_rope, dense_apply, dense_init,
                      dense_spec, norm_apply, norm_init, norm_spec)
 
 __all__ = ["attn_init", "attn_spec", "attn_train", "attn_decode",
-           "flash_attention"]
+           "attn_decode_paged", "attn_prefill_paged", "flash_attention"]
 
 
 # ---------------------------------------------------------------------------
@@ -220,3 +220,115 @@ def attn_decode(p: dict, x: jax.Array, cfg: ModelConfig,
     o = o.reshape(B, 1, hq * dh).astype(x.dtype)
     y = dense_apply(p["wo"], o, cfg.quant)
     return y, k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# paged KV cache (ServeEngine v2)
+# ---------------------------------------------------------------------------
+#
+# The serving engine stores KV in a flat pool of fixed-size pages shared
+# by every request (serving/paging.py owns the allocation); the two
+# functions below are the batched gather/scatter attention over that
+# layout.  Per slot ``s`` position ``t`` lives at physical page
+# ``page_tables[s, t // page]`` offset ``t % page``.  Page-table padding
+# points at the reserved trash page (writes land there harmlessly; reads
+# are masked by ``lengths``), so no cross-request leakage is possible by
+# construction.
+
+
+def _gather_pages(pages: jax.Array, page_tables: jax.Array) -> jax.Array:
+    """(N, page, H, Dh) pool + (S, maxp) tables -> (S, maxp*page, H, Dh)."""
+    S, maxp = page_tables.shape
+    _, page, H, Dh = pages.shape
+    g = jnp.take(pages, page_tables.reshape(-1), axis=0)
+    return g.reshape(S, maxp * page, H, Dh)
+
+
+def attn_decode_paged(p: dict, x: jax.Array, cfg: ModelConfig,
+                      k_pages: jax.Array, v_pages: jax.Array,
+                      page_tables: jax.Array, lengths: jax.Array):
+    """Batched one-token decode over the paged KV cache.
+
+    x: (S, 1, D) — one new token per active slot; k_pages/v_pages:
+    (N, page, Hkv, Dh) pools; page_tables: (S, maxp) int32 physical page
+    ids; lengths: (S,) int32 tokens already in the cache (== the new
+    token's position).  Returns (y (S, 1, D), k_pages, v_pages).
+    """
+    S = x.shape[0]
+    page = k_pages.shape[1]
+    dh, hq, hkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    g = hq // hkv
+    positions = lengths[:, None]                            # (S, 1)
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    # scatter the new K/V row: one (phys_page, offset) per slot.  Distinct
+    # active slots own distinct pages, so indices never collide; padded
+    # lanes all hit the trash page, where last-writer-wins is fine.
+    phys = jnp.take_along_axis(page_tables, (lengths // page)[:, None],
+                               axis=1)[:, 0]
+    off = lengths % page
+    k_pages = k_pages.at[phys, off].set(k[:, 0].astype(k_pages.dtype))
+    v_pages = v_pages.at[phys, off].set(v[:, 0].astype(v_pages.dtype))
+
+    kg = _gather_pages(k_pages, page_tables)                # (S, T, Hkv, Dh)
+    vg = _gather_pages(v_pages, page_tables)
+    T = kg.shape[1]
+    qg = q.reshape(S, hkv, g, dh)
+    logits = jnp.einsum("shgd,sthd->shgt", qg.astype(jnp.float32),
+                        kg.astype(jnp.float32)) / math.sqrt(dh)
+    valid = (jnp.arange(T)[None, :] <= lengths[:, None])    # (S, T)
+    logits = jnp.where(valid[:, None, None, :], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("shgt,sthd->shgd", w, vg.astype(jnp.float32))
+    o = o.reshape(S, 1, hq * dh).astype(x.dtype)
+    y = dense_apply(p["wo"], o, cfg.quant)
+    return y, k_pages, v_pages
+
+
+def attn_prefill_paged(p: dict, x: jax.Array, cfg: ModelConfig,
+                       k_pages: jax.Array, v_pages: jax.Array,
+                       page_tables: jax.Array, start: int):
+    """One prefill chunk written straight into the decode page layout.
+
+    x: (G, C, D) — chunk ``[start, start+C)`` of each request in the
+    admission group, with ``C`` a multiple of the page size and ``start``
+    chunk-aligned (static).  K/V of the chunk are scattered as whole
+    pages, then the chunk's queries attend over every page written so
+    far (positions < start + C) under the causal mask — the online
+    equivalent of flash prefill, sharing the decode cache layout so no
+    re-layout pass sits between prefill and decode.
+
+    Returns (y (G, C, D), k_pages, v_pages).
+    """
+    G, C, _ = x.shape
+    page = k_pages.shape[1]
+    assert C % page == 0 and start % page == 0, (C, page, start)
+    dh, hq, hkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    g = hq // hkv
+    positions = start + jnp.broadcast_to(
+        jnp.arange(C, dtype=jnp.int32), (G, C))
+    q, k, v = _project_qkv(p, x, cfg, positions)            # (G,C,H,Dh)
+
+    # whole-page scatter: chunk pages j cover positions start + j*page
+    p0 = start // page
+    npg = C // page
+    phys = page_tables[:, p0:p0 + npg].reshape(-1)          # (G*npg,)
+    kp = k.astype(k_pages.dtype).reshape(G * npg, page, hkv, dh)
+    vp = v.astype(v_pages.dtype).reshape(G * npg, page, hkv, dh)
+    k_pages = k_pages.at[phys].set(kp)
+    v_pages = v_pages.at[phys].set(vp)
+
+    seen = page_tables[:, :p0 + npg]                        # pages <= chunk
+    kg = _gather_pages(k_pages, seen)                       # (G, T, Hkv, Dh)
+    vg = _gather_pages(v_pages, seen)
+    T = kg.shape[1]
+    qg = q.reshape(G, C, hkv, g, dh)
+    logits = jnp.einsum("sqhgd,sthd->shgqt", qg.astype(jnp.float32),
+                        kg.astype(jnp.float32)) / math.sqrt(dh)
+    causal = (jnp.arange(T)[None, :] <=
+              (start + jnp.arange(C))[:, None])             # (C, T)
+    logits = jnp.where(causal[None, None, None, :, :], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("shgqt,sthd->sqhgd", w, vg.astype(jnp.float32))
+    o = o.reshape(G, C, hq * dh).astype(x.dtype)
+    y = dense_apply(p["wo"], o, cfg.quant)
+    return y, k_pages, v_pages

@@ -3,8 +3,10 @@
 Every projection in the zoo routes through :func:`dense_apply`, which is
 where the paper's technique plugs into arbitrary architectures: with
 ``quant.mode == "sc_qat"`` the matmul becomes ternary-weight x thermometer-
-activation fake-quant (LSQ), with ``"none"`` it is a plain matmul.  The
-integer/silicon path (``sc_int``) is wired in serving/export, not here.
+activation fake-quant (LSQ), with ``"none"`` it is a plain matmul, and
+with ``"sc_int"`` it runs the silicon-equivalent integer datapath
+(``sc_linear_int_from_qat``: int8 codes x ternary weights, int32 / BSN
+accumulate) — what ServeEngine's ``datapath="sc_int"`` serves.
 
 Param/spec convention: each ``*_init`` returns a pytree of arrays and each
 ``*_spec`` returns the matching pytree of ``PartitionSpec`` (physical axes
@@ -78,7 +80,14 @@ def dense_apply(p: dict, x: jax.Array, quant: SCQuantConfig) -> jax.Array:
     rate vs an f32 datapath (§Perf iteration 1).
     """
     from repro.core.quant import ternary_weight_quant, thermometer_act_quant
-    if not quant.enabled or quant.mode != "sc_qat":
+    if not quant.enabled:
+        return x @ p["w"]
+    if quant.mode == "sc_int":
+        # serving: the silicon-equivalent integer path (int8 x ternary ->
+        # int32 accumulate, optionally through the approximate BSN adder)
+        from repro.core.sc_layers import sc_linear_int_from_qat
+        return sc_linear_int_from_qat(p, x, quant)
+    if quant.mode != "sc_qat":
         return x @ p["w"]
     x_fq = thermometer_act_quant(x, p["alpha_a"], quant.act_bsl)
     w_fq = ternary_weight_quant(p["w"], p["alpha_w"])

@@ -87,9 +87,11 @@ def _conv_full(p, x, cfg):
     k = cfg.mamba_d_conv
     w = p["conv_w"].astype(jnp.float32)
     xf = x.astype(jnp.float32)
+    S = xf.shape[1]
     out = xf * w[:, k - 1]
     for i in range(1, k):
-        shifted = jnp.pad(xf[:, :-i, :], ((0, 0), (i, 0), (0, 0)))
+        # pad-then-crop keeps the shape right even when S < i
+        shifted = jnp.pad(xf, ((0, 0), (i, 0), (0, 0)))[:, :S, :]
         out = out + shifted * w[:, k - 1 - i]
     return (out + p["conv_b"]).astype(x.dtype)
 
@@ -138,7 +140,11 @@ def mamba_train(p: dict, u: jax.Array, cfg: ModelConfig):
     y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(u.dtype)
     out = dense_apply(p["out_proj"], y, cfg.quant)
     # decode cache: final SSM state + the last (k-1) *pre-conv* inputs
-    conv_tail = x_raw[:, S - (cfg.mamba_d_conv - 1):, :]
+    # (left-zero-padded when the prompt is shorter than the conv window)
+    kc = cfg.mamba_d_conv - 1
+    conv_tail = x_raw[:, max(S - kc, 0):, :]
+    if S < kc:
+        conv_tail = jnp.pad(conv_tail, ((0, 0), (kc - S, 0), (0, 0)))
     return out, (hT, conv_tail)
 
 

@@ -32,7 +32,8 @@ from .common import (DATA, MODEL, add_leading_none, dense_apply, dense_init,
 
 __all__ = ["init_params", "param_specs", "forward", "loss_fn", "init_cache",
            "cache_specs", "decode_step", "prefill", "batch_specs",
-           "make_dummy_batch"]
+           "make_dummy_batch", "init_paged_cache", "paged_decode_step",
+           "paged_prefill", "supports_paged_prefill"]
 
 
 # ---------------------------------------------------------------------------
@@ -154,7 +155,18 @@ def _apply_position(lp: dict, spec: LayerSpec, x, cfg: ModelConfig,
     centry = {}
     h = norm_apply(lp["norm1"], x, cfg.norm)
     if spec.mixer == "attn":
-        if mode == "decode":
+        if mode == "decode" and "k_pages" in (cstate or {}):
+            # batched paged decode: pos is the (S,) per-slot length vector
+            dx, kp, vp = attention.attn_decode_paged(
+                lp["mixer"], h, cfg, cstate["k_pages"], cstate["v_pages"],
+                cstate["page_tables"], pos)
+            centry = {"k_pages": kp, "v_pages": vp}
+        elif mode == "paged_prefill":
+            dx, kp, vp = attention.attn_prefill_paged(
+                lp["mixer"], h, cfg, cstate["k_pages"], cstate["v_pages"],
+                cstate["page_tables"], cstate["start"])
+            centry = {"k_pages": kp, "v_pages": vp}
+        elif mode == "decode":
             dx, kc, vc = attention.attn_decode(
                 lp["mixer"], h, cfg, cstate["k"], cstate["v"], pos)
             centry = {"k": kc, "v": vc}
@@ -417,6 +429,150 @@ def prefill(params: dict, batch: dict, cfg: ModelConfig):
     seq = logits.shape[1]
     return logits, {"pos": jnp.asarray(seq, jnp.int32),
                     "periods": cache_periods}
+
+
+# ---------------------------------------------------------------------------
+# paged serving cache (ServeEngine v2)
+# ---------------------------------------------------------------------------
+#
+# Layout: attention positions hold *shared* page pools
+# ``(num_pages, page, Hkv, Dh)`` (which request owns which page is the
+# engine's page table, serving/paging.py); recurrent positions hold
+# per-slot state ROWS ``(max_slots + 1, ...)`` — row ``max_slots`` is the
+# scratch lane that padded decode lanes read/write so bucket padding
+# never touches a live request.  All entries carry the usual leading
+# ``n_periods`` axis so the period scan is identical to train/decode.
+
+
+def supports_paged_prefill(cfg: ModelConfig) -> bool:
+    """Chunked paged prefill covers pure-attention periods; recurrent
+    mixers carry sequential state across the prompt and are prefilled
+    per-request at exact length instead (engine fallback)."""
+    return (cfg.frontend == "none"
+            and all(s.mixer == "attn" and s.ffn != "rwkv_cmix"
+                    for s in cfg.period))
+
+
+def init_paged_cache(cfg: ModelConfig, max_slots: int, num_pages: int,
+                     page_size: int) -> dict:
+    dtype = jnp.dtype(cfg.dtype)
+    rows = max_slots + 1                      # + scratch lane
+    dh, hkv = cfg.head_dim, cfg.n_kv_heads
+
+    def entry(spec: LayerSpec) -> dict:
+        e = {}
+        if spec.mixer == "attn":
+            e["k_pages"] = jnp.zeros((num_pages, page_size, hkv, dh), dtype)
+            e["v_pages"] = jnp.zeros((num_pages, page_size, hkv, dh), dtype)
+        elif spec.mixer == "mamba":
+            e.update(mamba.mamba_state_init(cfg, rows, dtype))
+        elif spec.mixer == "rwkv6":
+            e.update(rwkv6.rwkv_state_init(cfg, rows, dtype))
+        if spec.ffn == "rwkv_cmix":
+            e["cmix"] = {"shift": jnp.zeros((rows, cfg.d_model), dtype)}
+        return e
+
+    one = {f"p{i}": entry(spec) for i, spec in enumerate(cfg.period)}
+    periods = jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (cfg.n_periods,) + a.shape).copy(), one)
+    return {"periods": periods}
+
+
+_POOL_KEYS = ("k_pages", "v_pages")
+
+
+def paged_decode_step(params: dict, cache: dict, tokens: jax.Array,
+                      slot_ids: jax.Array, page_tables: jax.Array,
+                      lengths: jax.Array, cfg: ModelConfig):
+    """One batched decode step over the paged cache — every active slot
+    advances one token in a single traced computation.
+
+    tokens / slot_ids / lengths: (S,) int32 (S = padded slot bucket);
+    page_tables: (S, maxp) int32.  Padded lanes carry slot_id ==
+    max_slots (scratch row), length 0 and trash-page tables.  Returns
+    (logits (S, V), new cache); retraces only when S or maxp change.
+    """
+    assert not cfg.is_encoder, "encoder archs have no decode step"
+    x = jnp.take(params["embed"]["table"], tokens[:, None], axis=0)  # (S,1,D)
+
+    def period_body(x, inp):
+        pp, cper = inp
+        new_entries = {}
+        for idx, spec in enumerate(cfg.period):
+            entry = cper[f"p{idx}"]
+            cst = {k: (v if k in _POOL_KEYS
+                       else jax.tree.map(lambda a: a[slot_ids], v))
+                   for k, v in entry.items()}
+            cst["page_tables"] = page_tables
+            x, _, ce = _apply_position(pp[f"p{idx}"], spec, x, cfg,
+                                       None, "decode", cst, lengths)
+            new_entries[f"p{idx}"] = {
+                k: (v if k in _POOL_KEYS
+                    else jax.tree.map(
+                        lambda full, rows: full.at[slot_ids].set(rows),
+                        entry[k], v))
+                for k, v in ce.items()}
+        return x, new_entries
+
+    x, new_periods = jax.lax.scan(period_body, x,
+                                  (params["periods"], cache["periods"]))
+    x = norm_apply(params["final_norm"], x, cfg.norm)
+    logits = dense_apply(params["lm_head"], x, cfg.quant)
+    logits = logits + _vocab_bias(cfg, logits.dtype)
+    return logits[:, 0], {"periods": new_periods}
+
+
+def paged_prefill(params: dict, cache: dict, tokens: jax.Array,
+                  page_tables: jax.Array, prompt_lens: jax.Array,
+                  cfg: ModelConfig, *, chunk: int):
+    """Batched *chunked* prefill writing straight into the decode page
+    layout (attention-only periods; see :func:`supports_paged_prefill`).
+
+    tokens: (G, L) right-padded prompts (L a multiple of ``chunk``,
+    ``chunk`` a multiple of the page size); page_tables: (G, maxp)
+    covering at least ceil(L/page) entries (padding = trash page);
+    prompt_lens: (G,).  Each chunk runs the full period scan then dies —
+    peak logits cost is (G, chunk, V) never (G, L, V), and attention per
+    chunk touches only the pages written so far.  Returns
+    (last_token_logits (G, V), new cache).
+    """
+    assert supports_paged_prefill(cfg), \
+        "chunked paged prefill needs a pure-attention period"
+    G, L = tokens.shape
+    assert L % chunk == 0, (L, chunk)
+    table = params["embed"]["table"]
+    h_last = jnp.zeros((G, cfg.d_model), table.dtype)
+    periods = cache["periods"]
+
+    for c in range(L // chunk):
+        start = c * chunk
+        xc = jnp.take(table, tokens[:, start:start + chunk], axis=0)
+
+        def period_body(x, inp, start=start):
+            pp, cper = inp
+            new_entries = {}
+            for idx, spec in enumerate(cfg.period):
+                cst = dict(cper[f"p{idx}"])
+                cst["page_tables"] = page_tables
+                cst["start"] = start
+                x, _, ce = _apply_position(pp[f"p{idx}"], spec, x, cfg,
+                                           None, "paged_prefill", cst, None)
+                new_entries[f"p{idx}"] = ce
+            return x, new_entries
+
+        xc, periods = jax.lax.scan(period_body, xc,
+                                   (params["periods"], periods))
+        # keep the hidden state of each request's last real token
+        last = prompt_lens - 1 - start
+        rows = jnp.take_along_axis(
+            xc, jnp.clip(last, 0, chunk - 1)[:, None, None], axis=1)[:, 0]
+        h_last = jnp.where(((last >= 0) & (last < chunk))[:, None],
+                           rows, h_last)
+
+    h = norm_apply(params["final_norm"], h_last[:, None, :], cfg.norm)
+    logits = dense_apply(params["lm_head"], h, cfg.quant)[:, 0]
+    logits = logits + _vocab_bias(cfg, logits.dtype)
+    return logits, {"periods": periods}
 
 
 # ---------------------------------------------------------------------------

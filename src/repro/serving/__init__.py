@@ -1,5 +1,7 @@
-"""Serving: continuous-batching engine over the zoo's prefill/decode."""
+"""Serving: paged-KV continuous-batching engine over the zoo (see README.md)."""
 
-from .engine import Request, ServeEngine
+from .engine import Request, ServeEngine, sequential_generate
+from .paging import PageAllocator, PageTable
 
-__all__ = ["ServeEngine", "Request"]
+__all__ = ["ServeEngine", "Request", "sequential_generate",
+           "PageAllocator", "PageTable"]

@@ -1,29 +1,46 @@
-"""Slot-based continuous batching engine.
+"""Continuous-batching serve engine v2: paged KV cache, batched decode.
 
-vLLM-style structure scaled to this zoo: a fixed pool of ``max_slots``
-sequence slots, each with its own KV/state cache position.  New requests
-are prefillled individually and inserted into free slots; every engine
-step runs ONE batched decode across all slots (per-slot positions via a
-vmapped decode step), so mixed-progress sequences share each forward pass.
+Execution model (vLLM-style, scaled to this zoo):
 
-The big-mesh serve path (launch/serve.py, dry-run decode cells) uses the
-uniform-position ``decode_step`` directly; this engine is the
-request-level orchestration above it.
+* **Paged KV.**  Attention KV lives in a flat pool of fixed-size pages
+  shared by every request; a host-side free-list allocator
+  (serving/paging.py) hands pages to requests and the device code
+  gathers/scatters through per-request page tables
+  (models/attention.py).  HBM cost is proportional to *tokens actually
+  held*, not ``max_slots x max_len``, and admission never copies or
+  re-layouts a cache — prefill writes the same pages decode reads.
+* **One batched decode step.**  Every engine step runs ALL active slots
+  through a single jitted ``paged_decode_step`` — one period-scan
+  forward for the whole batch, mixed progress handled by per-slot
+  lengths/page tables.  Recurrent mixers (mamba/rwkv) keep per-slot
+  state rows gathered/scattered by slot id inside the same step.
+* **Chunked prefill.**  Pure-attention archs prefill admitted requests
+  as one padded batch, chunk by chunk, directly into the page pools
+  (``paged_prefill``); recurrent archs fall back to exact-length
+  per-request prefill (their prompt state is order-exact) whose outputs
+  are scattered into the paged layout.
+* **Bucketed shapes.**  The decode step is traced per (slot-bucket,
+  page-bucket) — both padded to powers of two — so jax recompiles only
+  when a bucket boundary is crossed, not on every admission/eviction.
+  Padded lanes point at the scratch state row and the trash page; they
+  cost FLOPs, never correctness.
 
-Kernel routing: the engine owns the dispatch policy for the SC
-approximate adder (kernels/dispatch.py).  Every traced entry point
-(prefill, the vmapped decode) runs inside ``backend_scope(bsn_backend)``,
-so any ``core.bsn.approx_bsn`` / ``sc_linear_int_approx`` call in the
-served model resolves to the fused Pallas kernel on TPU (interpret mode
-elsewhere) by default, without the model naming a backend.  Pass
-``bsn_backend="reference"`` to pin the pure-JAX oracle, e.g. when
-A/B-ing kernel output in production.
+Datapath: ``datapath="qat"`` serves the fake-quant QAT forward;
+``"sc_int"`` re-quantizes every projection on the fly and runs the
+silicon-equivalent int8 x ternary -> int32 path
+(``core.sc_layers.sc_linear_int_from_qat``); ``"sc_int_approx"``
+additionally routes the accumulation through the paper's approximate
+BSN adder, which dispatches to the fused Pallas kernel via
+kernels/dispatch.  As in v1, every traced entry point runs inside
+``backend_scope(bsn_backend)`` — dispatch decisions are made at trace
+time, so the scope must surround the *first* (tracing) call.
 """
 
 from __future__ import annotations
 
 import itertools
 from dataclasses import dataclass, field
+from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -31,9 +48,27 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.kernels import dispatch as kernel_dispatch
-from repro.models import decode_step, init_cache, prefill
+from repro.models import (decode_step, init_paged_cache, paged_decode_step,
+                          paged_prefill, prefill, supports_paged_prefill)
 
-__all__ = ["Request", "ServeEngine"]
+from .paging import (TRASH_PAGE, PageAllocator, PageTable, pad_pow2,
+                     pages_needed)
+
+__all__ = ["Request", "ServeEngine", "sequential_generate"]
+
+DATAPATHS = ("qat", "sc_int", "sc_int_approx")
+
+
+def _cfg_for_datapath(cfg: ModelConfig, datapath: str) -> ModelConfig:
+    if datapath not in DATAPATHS:
+        raise ValueError(f"datapath must be one of {DATAPATHS}, "
+                         f"got {datapath!r}")
+    if datapath == "qat" or not cfg.quant.enabled:
+        return cfg
+    import dataclasses
+    q = dataclasses.replace(cfg.quant, mode="sc_int",
+                            int_approx=(datapath == "sc_int_approx"))
+    return cfg.scaled(quant=q)
 
 
 @dataclass
@@ -44,37 +79,77 @@ class Request:
     eos_id: int | None = None
     generated: list[int] = field(default_factory=list)
     done: bool = False
+    # engine internals
+    _table: PageTable | None = field(default=None, repr=False)
+    _len: int = field(default=0, repr=False)      # tokens held in cache
 
 
 class ServeEngine:
     def __init__(self, params, cfg: ModelConfig, max_slots: int = 4,
-                 max_len: int = 256, bsn_backend: str | None = None):
+                 max_len: int = 256, bsn_backend: str | None = None,
+                 page_size: int = 16, num_pages: int | None = None,
+                 prefill_chunk: int = 64, datapath: str = "qat"):
         assert not cfg.is_encoder, "encoders are served via forward()"
         if bsn_backend is not None \
                 and bsn_backend not in kernel_dispatch.BACKENDS:
             raise ValueError(f"bsn_backend must be one of "
                              f"{kernel_dispatch.BACKENDS} or None (auto), "
                              f"got {bsn_backend!r}")
+        if page_size < 1 or page_size & (page_size - 1):
+            raise ValueError(f"page_size must be a power of two, "
+                             f"got {page_size}")
         self.bsn_backend = bsn_backend
-        self.params, self.cfg = params, cfg
+        self.params = params
+        self.cfg = _cfg_for_datapath(cfg, datapath)
+        self.datapath = datapath
         self.max_slots, self.max_len = max_slots, max_len
+        self.page_size = page_size
+        self.max_pages = pages_needed(max_len, page_size)
+        if num_pages is None:
+            # full residency for every slot + the reserved trash page
+            num_pages = max_slots * self.max_pages + 1
+        self.allocator = PageAllocator(num_pages)
         self._rid = itertools.count()
         self.queue: list[Request] = []
         self.slots: list[Request | None] = [None] * max_slots
-        base = init_cache(cfg, 1, max_len)
-        # stacked slot caches: every leaf gains a leading (max_slots,) axis
-        self.cache = jax.tree.map(
-            lambda a: jnp.broadcast_to(a, (max_slots,) + a.shape).copy(),
-            base)
-        self._vdecode = jax.jit(jax.vmap(
-            lambda cache, tok: decode_step(self.params, cache, tok, cfg),
-            in_axes=(0, 0)))
-        self._prefill = jax.jit(
-            lambda batch: prefill(self.params, batch, cfg))
+        self.cache = init_paged_cache(self.cfg, max_slots, num_pages,
+                                      page_size)
+        self._chunk = pad_pow2(max(prefill_chunk, page_size))
 
-    # ------------------------------------------------------------------
+        # jitted entry points.  The decode cache is donated: page pools
+        # are updated in place across steps instead of copied.
+        self._decode = jax.jit(self._decode_fn, donate_argnums=(0,))
+        self._prefill_batched = jax.jit(self._prefill_batched_fn,
+                                        static_argnames=("chunk",),
+                                        donate_argnums=(0,))
+        self._prefill_exact = jax.jit(
+            lambda batch: prefill(self.params, batch, self.cfg))
+
+    # -- traced bodies --------------------------------------------------
+    def _decode_fn(self, cache, tokens, slot_ids, tables, lengths):
+        logits, cache = paged_decode_step(self.params, cache, tokens,
+                                          slot_ids, tables, lengths,
+                                          self.cfg)
+        nxt = jnp.argmax(logits[:, :self.cfg.vocab_size], axis=-1)
+        return nxt.astype(jnp.int32), cache
+
+    def _prefill_batched_fn(self, cache, tokens, tables, lens, *, chunk):
+        logits, cache = paged_prefill(self.params, cache, tokens, tables,
+                                      lens, self.cfg, chunk=chunk)
+        nxt = jnp.argmax(logits[:, :self.cfg.vocab_size], axis=-1)
+        return nxt.astype(jnp.int32), cache
+
+    # -- submission -----------------------------------------------------
     def submit(self, prompt: list[int], max_new_tokens: int = 16,
                eos_id: int | None = None) -> int:
+        if len(prompt) > self.max_len - 1:
+            raise ValueError(f"prompt of {len(prompt)} tokens exceeds "
+                             f"max_len={self.max_len}")
+        need = pages_needed(len(prompt) + 1, self.page_size)
+        if need > self.allocator.num_pages - 1:
+            # would never admit, not even with an empty pool
+            raise ValueError(f"prompt needs {need} pages but the pool "
+                             f"holds {self.allocator.num_pages - 1}")
         r = Request(next(self._rid), list(prompt), max_new_tokens, eos_id)
         self.queue.append(r)
         return r.rid
@@ -85,59 +160,180 @@ class ServeEngine:
                 return i
         return None
 
-    def _insert_cache(self, slot: int, cache_one):
-        """Pad the prefilled cache to max_len and write it into the slot."""
-        def fit(path, stacked, one):
-            names = [getattr(p, "key", None) for p in path]
-            if names and names[-1] in ("k", "v") and one.ndim == 5:
-                # (P, B=1, S, Hkv, Dh): pad prefill length S up to max_len
-                pad = [(0, 0)] * one.ndim
-                pad[2] = (0, self.max_len - one.shape[2])
-                one = jnp.pad(one, pad)
-            return stacked.at[slot].set(one)
-        self.cache = jax.tree_util.tree_map_with_path(
-            lambda p, s, o: fit(p, s, o), self.cache, cache_one)
-
+    # -- admission ------------------------------------------------------
     def _admit(self):
+        group: list[tuple[int, Request]] = []
         while self.queue:
             slot = self._free_slot()
             if slot is None:
-                return
-            req = self.queue.pop(0)
-            toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
-            # scope must surround the tracing call: dispatch decisions are
-            # made at trace time and baked into the jitted computation
-            with kernel_dispatch.backend_scope(self.bsn_backend):
-                logits, cache_one = self._prefill({"tokens": toks})
-            nxt = int(jnp.argmax(logits[0, -1, :self.cfg.vocab_size]))
-            req.generated.append(nxt)
-            self._insert_cache(slot, cache_one)
+                break
+            req = self.queue[0]
+            table = PageTable(self.page_size)
+            # reserve prompt pages + the first decode write up front
+            if not table.ensure(len(req.prompt) + 1, self.allocator):
+                break                         # pool pressure: wait
+            self.queue.pop(0)
+            req._table, req._len = table, len(req.prompt)
             self.slots[slot] = req
+            group.append((slot, req))
+        if not group:
+            return
+        reqs = [r for _, r in group]
+        if supports_paged_prefill(self.cfg):
+            self._prefill_group(reqs)
+        else:
+            for r in reqs:
+                self._prefill_one(r)
 
-    # ------------------------------------------------------------------
-    def step(self) -> list[Request]:
-        """Admit + one batched decode step. Returns completed requests."""
-        self._admit()
-        active = [i for i, r in enumerate(self.slots) if r is not None]
-        if not active:
-            return []
-        toks = np.zeros((self.max_slots, 1, 1), np.int32)
-        for i in active:
-            toks[i, 0, 0] = self.slots[i].generated[-1]
+    def _prefill_group(self, reqs: list[Request]):
+        """Batched chunked prefill: one padded (G, L) bucket.  Like the
+        decode step, every shape is a pow2 bucket (group size, prompt
+        length, table width) so admission retraces only on bucket
+        changes; padded lanes are all-trash tables + zero lengths."""
+        plens = [len(r.prompt) for r in reqs]
+        G = pad_pow2(len(reqs), hi=self.max_slots)
+        L = pad_pow2(max(plens), lo=self.page_size)
+        chunk = min(self._chunk, L)
+        width = pad_pow2(max(L // self.page_size,
+                             max(len(r._table.pages) for r in reqs)))
+        tokens = np.zeros((G, L), np.int32)
+        tables = np.full((G, width), TRASH_PAGE, np.int32)
+        lens = np.zeros((G,), np.int32)
+        for g, r in enumerate(reqs):
+            tokens[g, :plens[g]] = r.prompt
+            tables[g] = r._table.padded(width)
+            lens[g] = plens[g]
         with kernel_dispatch.backend_scope(self.bsn_backend):
-            logits, self.cache = self._vdecode(self.cache, jnp.asarray(toks))
-        nxt = np.asarray(jnp.argmax(
-            logits[:, 0, 0, :self.cfg.vocab_size], axis=-1))
-        done = []
-        for i in active:
+            nxt, self.cache = self._prefill_batched(
+                self.cache, jnp.asarray(tokens), jnp.asarray(tables),
+                jnp.asarray(lens), chunk=chunk)
+        for g, r in enumerate(reqs):
+            r.generated.append(int(nxt[g]))
+            self._check_done(r)
+
+    def _check_done(self, r: Request):
+        hit_eos = r.eos_id is not None and r.generated \
+            and r.generated[-1] == r.eos_id
+        if hit_eos or len(r.generated) >= r.max_new_tokens \
+                or r._len >= self.max_len - 1:
+            r.done = True
+
+    def _prefill_one(self, req: Request):
+        """Exact-length fallback (recurrent mixers need order-exact
+        prompt state); outputs are scattered into the paged layout."""
+        toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
+        with kernel_dispatch.backend_scope(self.bsn_backend):
+            logits, cache_one = self._prefill_exact({"tokens": toks})
+        self._scatter_prefill(req, cache_one)
+        req.generated.append(
+            int(jnp.argmax(logits[0, -1, :self.cfg.vocab_size])))
+        self._check_done(req)
+
+    def _scatter_prefill(self, req: Request, cache_one: dict):
+        """Write a (B=1, exact-length) prefill cache into pages/rows."""
+        plen = len(req.prompt)
+        page = self.page_size
+        npg = pages_needed(plen, page)
+        phys = jnp.asarray(req._table.pages[:npg], jnp.int32)
+        row = self.slots.index(req)
+        periods = dict(self.cache["periods"])
+        for i in range(len(self.cfg.period)):
+            key = f"p{i}"
+            entry = dict(periods[key])
+            one = cache_one["periods"][key]
+            for name, val in one.items():       # leaves: (P, 1, ...)
+                if name in ("k", "v"):          # (P, 1, plen, Hkv, Dh)
+                    pad = npg * page - plen
+                    kv = jnp.pad(val[:, 0], ((0, 0), (0, pad),
+                                             (0, 0), (0, 0)))
+                    kv = kv.reshape(kv.shape[0], npg, page,
+                                    *kv.shape[2:])
+                    pool = entry[name + "_pages"]
+                    entry[name + "_pages"] = pool.at[:, phys].set(
+                        kv.astype(pool.dtype))
+                else:                           # recurrent state rows
+                    entry[name] = jax.tree.map(
+                        lambda full, o: full.at[:, row].set(
+                            o[:, 0].astype(full.dtype)),
+                        entry[name], val)
+            periods[key] = entry
+        self.cache = {"periods": periods}
+
+    # -- stepping -------------------------------------------------------
+    def _grow_or_preempt(self, active: list[int]) -> list[int]:
+        """Make sure every active slot can take one more token; preempt
+        the youngest request (free pages, requeue for re-prefill) under
+        pool pressure.  Greedy decode is deterministic, so a preempted
+        request regenerates the same tokens after re-admission."""
+        for i in list(active):
             r = self.slots[i]
-            r.generated.append(int(nxt[i]))
-            hit_eos = r.eos_id is not None and int(nxt[i]) == r.eos_id
-            if hit_eos or len(r.generated) >= r.max_new_tokens \
-                    or int(self.cache["pos"][i]) >= self.max_len - 1:
-                r.done = True
+            if r is None or r.done:   # preempted / finished at prefill
+                continue
+            while not r._table.ensure(r._len + 1, self.allocator):
+                victims = sorted((j for j in active if j != i),
+                                 key=lambda j: self.slots[j].rid)
+                if not victims:
+                    # nothing left to evict: finish truncated
+                    r.done = True
+                    break
+                v = victims[-1]
+                vr = self.slots[v]
+                vr._table.release(self.allocator)
+                vr._table, vr._len = None, 0
+                vr.generated = []
+                self.queue.insert(0, vr)
+                self.slots[v] = None
+                active.remove(v)
+        return [i for i in active
+                if self.slots[i] is not None and not self.slots[i].done]
+
+    def _sweep_done(self, done: list[Request]) -> None:
+        for i, r in enumerate(self.slots):
+            if r is not None and r.done:
+                r._table.release(self.allocator)
+                r._table = None
                 done.append(r)
                 self.slots[i] = None
+
+    def step(self) -> list[Request]:
+        """Admit + ONE batched decode step.  Returns finished requests."""
+        self._admit()
+        done: list[Request] = []
+        # requests finished at prefill free their pages BEFORE growth, so
+        # they are never preemption victims and their pages count toward
+        # this step's headroom
+        self._sweep_done(done)
+        active = [i for i, r in enumerate(self.slots) if r is not None]
+        active = self._grow_or_preempt(active)
+        if active:
+            Sb = pad_pow2(len(active), hi=self.max_slots)
+            maxp = pad_pow2(max(len(self.slots[i]._table.pages)
+                                for i in active))
+            tokens = np.zeros((Sb,), np.int32)
+            slot_ids = np.full((Sb,), self.max_slots, np.int32)  # scratch
+            tables = np.full((Sb, maxp), TRASH_PAGE, np.int32)
+            lengths = np.zeros((Sb,), np.int32)
+            for lane, i in enumerate(active):
+                r = self.slots[i]
+                tokens[lane] = r.generated[-1]
+                slot_ids[lane] = i
+                tables[lane] = r._table.padded(maxp)
+                lengths[lane] = r._len
+            with kernel_dispatch.backend_scope(self.bsn_backend):
+                nxt, self.cache = self._decode(
+                    self.cache, jnp.asarray(tokens), jnp.asarray(slot_ids),
+                    jnp.asarray(tables), jnp.asarray(lengths))
+            nxt = np.asarray(nxt)
+            for lane, i in enumerate(active):
+                r = self.slots[i]
+                r.generated.append(int(nxt[lane]))
+                r._len += 1
+                hit_eos = r.eos_id is not None \
+                    and int(nxt[lane]) == r.eos_id
+                if hit_eos or len(r.generated) >= r.max_new_tokens \
+                        or r._len >= self.max_len - 1:
+                    r.done = True
+        self._sweep_done(done)          # decode-finished + truncated
         return done
 
     def run_to_completion(self, max_steps: int = 10_000) -> list[Request]:
@@ -147,3 +343,52 @@ class ServeEngine:
             if not self.queue and all(s is None for s in self.slots):
                 break
         return out
+
+
+# ---------------------------------------------------------------------------
+# sequential reference (the seed engine's execution model)
+# ---------------------------------------------------------------------------
+
+def _pad_prefill_cache(cache_one: dict, max_len: int) -> dict:
+    def fit(path, one):
+        names = [getattr(p, "key", None) for p in path]
+        if names and names[-1] in ("k", "v") and one.ndim == 5:
+            pad = [(0, 0)] * one.ndim
+            pad[2] = (0, max_len - one.shape[2])
+            one = jnp.pad(one, pad)
+        return one
+    return jax.tree_util.tree_map_with_path(fit, cache_one)
+
+
+def sequential_generate(params, cfg: ModelConfig, prompts: list[list[int]],
+                        max_new_tokens: int = 16, eos_id: int | None = None,
+                        max_len: int = 256, bsn_backend: str | None = None,
+                        datapath: str = "qat") -> list[list[int]]:
+    """Per-request prefill + one-token-at-a-time greedy decode over the
+    dense (un-paged) cache — the seed engine's per-slot execution model.
+
+    This is the reference oracle: the batched paged engine must produce
+    these tokens exactly (tests/test_paged_kv.py) and beat this loop's
+    throughput (benchmarks/bench_serving.py).  Stop conditions mirror
+    ``ServeEngine.step``.
+    """
+    cfg = _cfg_for_datapath(cfg, datapath)
+    prefill_fn = jax.jit(lambda b: prefill(params, b, cfg))
+    decode_fn = jax.jit(lambda c, t: decode_step(params, c, t, cfg))
+    outs = []
+    with kernel_dispatch.backend_scope(bsn_backend):
+        for prompt in prompts:
+            toks = jnp.asarray(prompt, jnp.int32)[None, :]
+            logits, cache = prefill_fn({"tokens": toks})
+            cache = _pad_prefill_cache(cache, max_len)
+            gen = [int(jnp.argmax(logits[0, -1, :cfg.vocab_size]))]
+            length = len(prompt)
+            while (len(gen) < max_new_tokens
+                   and length < max_len - 1
+                   and (eos_id is None or gen[-1] != eos_id)):
+                tok = jnp.asarray([[gen[-1]]], jnp.int32)
+                logits, cache = decode_fn(cache, tok)
+                gen.append(int(jnp.argmax(logits[0, 0, :cfg.vocab_size])))
+                length += 1
+            outs.append(gen)
+    return outs

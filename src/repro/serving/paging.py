@@ -1,0 +1,117 @@
+"""Paged KV-cache bookkeeping: page pool allocator + per-request tables.
+
+The device side of the paged cache is a flat pool of fixed-size pages per
+attention layer (``(num_pages, page_size, Hkv, Dh)``); which physical
+page holds which request's tokens is decided *here*, on the host, by a
+free-list allocator.  A request's page table is a list of physical page
+ids; position ``t`` of the request lives at
+``(table[t // page_size], t % page_size)``.
+
+Two conventions the device code relies on:
+
+* **Page 0 is the trash page.**  The allocator never hands it out.
+  Padded page-table lanes (inactive decode lanes, short prompts in a
+  padded prefill bucket) point at page 0, so out-of-range *writes* land
+  in the trash page and out-of-range *reads* are masked by the per-slot
+  length — no cross-request corruption either way.
+* Tables handed to the device are padded to a power-of-two page count
+  (:func:`PageTable.padded`) so the jitted decode step retraces only on
+  bucket changes, not on every length change.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+__all__ = ["TRASH_PAGE", "PageAllocator", "PageTable", "pages_needed",
+           "pad_pow2"]
+
+TRASH_PAGE = 0
+
+
+def pages_needed(length: int, page_size: int) -> int:
+    """Pages required to hold ``length`` tokens (ceil division)."""
+    return max(0, (length + page_size - 1) // page_size)
+
+
+def pad_pow2(n: int, lo: int = 1, hi: int | None = None) -> int:
+    """Round ``n`` up to a power of two in ``[lo, hi]`` (bucket size)."""
+    b = max(lo, 1 << (max(n, 1) - 1).bit_length())
+    return min(b, hi) if hi is not None else b
+
+
+class PageAllocator:
+    """Free-list allocator over ``num_pages`` physical pages.
+
+    Page 0 (``TRASH_PAGE``) is reserved at construction and never
+    allocated.  ``alloc`` is all-or-nothing: it either returns ``n``
+    distinct pages or ``None`` (so admission can fall back to waiting /
+    preemption without partial bookkeeping).
+    """
+
+    def __init__(self, num_pages: int):
+        if num_pages < 2:
+            raise ValueError("need >= 2 pages (page 0 is reserved)")
+        self.num_pages = num_pages
+        # LIFO free list: recently-freed pages are reused first, which
+        # keeps the hot working set of physical pages small
+        self._free = list(range(num_pages - 1, 0, -1))
+        self._allocated: set[int] = set()
+
+    @property
+    def free_count(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int) -> list[int] | None:
+        if n < 0:
+            raise ValueError(n)
+        if n > len(self._free):
+            return None
+        pages = [self._free.pop() for _ in range(n)]
+        self._allocated.update(pages)
+        return pages
+
+    def free(self, pages: list[int]) -> None:
+        for p in pages:
+            if p not in self._allocated:
+                raise ValueError(f"double free / foreign page {p}")
+            self._allocated.discard(p)
+            self._free.append(p)
+
+
+@dataclass
+class PageTable:
+    """One request's logical->physical page mapping."""
+    page_size: int
+    pages: list[int] = field(default_factory=list)
+
+    @property
+    def capacity(self) -> int:
+        return len(self.pages) * self.page_size
+
+    def ensure(self, length: int, allocator: PageAllocator) -> bool:
+        """Grow the table to hold ``length`` tokens.  Returns False (table
+        unchanged) when the pool can't supply the missing pages."""
+        need = pages_needed(length, self.page_size) - len(self.pages)
+        if need <= 0:
+            return True
+        got = allocator.alloc(need)
+        if got is None:
+            return False
+        self.pages.extend(got)
+        return True
+
+    def release(self, allocator: PageAllocator) -> None:
+        allocator.free(self.pages)
+        self.pages = []
+
+    def padded(self, width: int) -> np.ndarray:
+        """Physical ids padded with the trash page to ``width`` entries."""
+        if len(self.pages) > width:
+            raise ValueError(f"table has {len(self.pages)} pages > "
+                             f"bucket width {width}")
+        out = np.full((width,), TRASH_PAGE, np.int32)
+        out[:len(self.pages)] = self.pages
+        return out

@@ -1,0 +1,230 @@
+"""Paged KV cache: allocator properties + batched-vs-sequential decode.
+
+Three layers of guarantees, bottom-up:
+
+1. ``PageAllocator``/``PageTable`` host bookkeeping: alloc/free
+   round-trips, all-or-nothing allocation, the trash page is never
+   handed out (property tests via hypothesis or the conftest fallback).
+2. No cross-request leakage: after requests finish and their pages are
+   recycled to *new* requests, the new requests' tokens are identical
+   to a fresh engine's — stale page contents are dead by construction
+   (length-masked reads).
+3. The differential theorem the engine stands on: batched paged decode
+   == per-request sequential decode (the seed execution model),
+   token for token, across the zoo's layer types and datapaths.
+   Quantized archs pin the SC datapaths (``sc_int`` is bit-exact by
+   integer accumulation); recurrent archs run the unquantized twin —
+   LSQ fake-quant puts logits on a discrete grid where exact ties are
+   broken by float summation order (same convention as
+   test_substrate's grad-accum test).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs import get_arch
+from repro.models import init_params
+from repro.serving import (PageAllocator, PageTable, ServeEngine,
+                           sequential_generate)
+from repro.serving.paging import TRASH_PAGE, pad_pow2, pages_needed
+
+SCALE = dict(d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+             vocab_size=64, vocab_pad_multiple=32, dtype="float32",
+             attn_q_chunk=8)
+CFG = get_arch("granite-3-2b").scaled(n_layers=2, **SCALE)
+PROMPTS = [[1, 2, 3], [4, 5, 6, 7], [8, 9], [10, 11, 12, 13, 14]]
+
+
+def _run_engine(params, cfg, prompts, max_new=5, **kw):
+    eng = ServeEngine(params, cfg, **kw)
+    for p in prompts:
+        eng.submit(p, max_new_tokens=max_new)
+    done = eng.run_to_completion()
+    assert len(done) == len(prompts)
+    return [r.generated for r in sorted(done, key=lambda r: r.rid)]
+
+
+# ---------------------------------------------------------------------------
+# 1. allocator properties
+# ---------------------------------------------------------------------------
+
+@given(st.lists(st.integers(1, 5), min_size=1, max_size=8),
+       st.integers(8, 64))
+@settings(max_examples=20, deadline=None)
+def test_alloc_free_roundtrip(sizes, num_pages):
+    a = PageAllocator(num_pages)
+    start_free = a.free_count
+    assert start_free == num_pages - 1          # page 0 reserved
+    held = []
+    for n in sizes:
+        got = a.alloc(n)
+        if got is None:
+            assert n > a.free_count             # only fails when short
+            continue
+        assert len(got) == n
+        assert TRASH_PAGE not in got            # trash never handed out
+        held.append(got)
+    flat = [p for g in held for p in g]
+    assert len(set(flat)) == len(flat)          # no page owned twice
+    for g in held:
+        a.free(g)
+    assert a.free_count == start_free           # round-trip restores all
+
+
+def test_double_free_rejected():
+    a = PageAllocator(8)
+    g = a.alloc(2)
+    a.free(g)
+    with pytest.raises(ValueError):
+        a.free(g)
+    with pytest.raises(ValueError):
+        a.free([TRASH_PAGE])
+
+
+@given(st.integers(0, 40), st.integers(0, 40))
+@settings(max_examples=20, deadline=None)
+def test_page_table_ensure_monotonic(l1, l2):
+    a = PageAllocator(64)
+    t = PageTable(page_size=4)
+    assert t.ensure(l1, a) and t.ensure(l2, a)
+    # table covers the running max, exactly (never shrinks, never over-
+    # allocates), and releases everything it took
+    assert len(t.pages) == pages_needed(max(l1, l2), 4)
+    t.release(a)
+    assert a.free_count == 63
+
+
+def test_padded_table_is_trash_padded():
+    a = PageAllocator(16)
+    t = PageTable(page_size=4)
+    t.ensure(6, a)                              # 2 pages
+    padded = t.padded(8)
+    assert list(padded[:2]) == t.pages
+    assert all(p == TRASH_PAGE for p in padded[2:])
+    with pytest.raises(ValueError):
+        t.padded(1)
+
+
+def test_pad_pow2_buckets():
+    assert [pad_pow2(n) for n in (1, 2, 3, 5, 8, 9)] == [1, 2, 4, 8, 8, 16]
+    assert pad_pow2(3, hi=3) == 3
+    assert pad_pow2(1, lo=16) == 16
+
+
+# ---------------------------------------------------------------------------
+# 2. recycling: no cross-request leakage
+# ---------------------------------------------------------------------------
+
+def test_page_recycling_no_leakage():
+    """Run a wave of requests to completion, then a second wave through
+    the SAME engine — its pages are recycled physical pages.  The second
+    wave must match a fresh engine serving it alone."""
+    params = init_params(jax.random.key(0), CFG)
+    eng = ServeEngine(params, CFG, max_slots=2, max_len=32, page_size=8)
+    wave1 = PROMPTS[:2]
+    wave2 = [[9, 8, 7, 6, 5], [3, 1], [2, 2, 2]]
+    for p in wave1:
+        eng.submit(p, max_new_tokens=6)
+    eng.run_to_completion()
+    used_before = eng.allocator.free_count
+    for p in wave2:
+        eng.submit(p, max_new_tokens=6)
+    done = eng.run_to_completion()
+    got = [r.generated for r in sorted(done, key=lambda r: r.rid)]
+    assert eng.allocator.free_count == used_before   # all pages returned
+    fresh = _run_engine(init_params(jax.random.key(0), CFG), CFG, wave2,
+                        max_new=6, max_slots=2, max_len=32, page_size=8)
+    assert got == fresh
+
+
+def test_unservable_prompt_rejected_at_submit():
+    """A prompt that could never fit the pool (even empty) must fail
+    loudly at submit, not spin forever in the admission queue."""
+    params = init_params(jax.random.key(0), CFG)
+    eng = ServeEngine(params, CFG, max_slots=2, max_len=31, page_size=4,
+                      num_pages=8)                 # 7 usable pages
+    with pytest.raises(ValueError, match="pages"):
+        eng.submit(list(range(30)))                # needs 8 pages
+    eng.submit(list(range(20)))                    # 6 pages: fine
+
+
+def test_preemption_under_page_pressure():
+    """A pool too small for all admitted requests forces preemption
+    (free + requeue + re-prefill); greedy decode is deterministic so the
+    final tokens still match the sequential oracle."""
+    params = init_params(jax.random.key(0), CFG)
+    # 2 slots x up to 24 tokens needs 6 pages of 8; give it 4 + trash
+    eng = ServeEngine(params, CFG, max_slots=2, max_len=24, page_size=8,
+                      num_pages=5)
+    prompts = [[1, 2, 3, 4, 5, 6, 7], [8, 9, 10, 11, 12, 13]]
+    for p in prompts:
+        eng.submit(p, max_new_tokens=12)
+    done = eng.run_to_completion()
+    got = [r.generated for r in sorted(done, key=lambda r: r.rid)]
+    ref = sequential_generate(params, CFG, prompts, max_new_tokens=12,
+                              max_len=24)
+    assert got == ref
+
+
+# ---------------------------------------------------------------------------
+# 3. differential: batched paged == sequential, token for token
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("datapath", ["qat", "sc_int", "sc_int_approx"])
+def test_batched_equals_sequential_sc_datapaths(datapath):
+    params = init_params(jax.random.key(0), CFG)
+    got = _run_engine(params, CFG, PROMPTS, max_new=5, max_slots=3,
+                      max_len=32, page_size=8, datapath=datapath)
+    ref = sequential_generate(params, CFG, PROMPTS, max_new_tokens=5,
+                              max_len=32, datapath=datapath)
+    assert got == ref, datapath
+
+
+def test_batched_equals_sequential_mixed_lengths_and_buckets():
+    """Length mix spanning several page/slot buckets + late admissions."""
+    params = init_params(jax.random.key(1), CFG)
+    prompts = [[1], [2, 3, 4, 5, 6, 7, 8, 9, 10],
+               [11, 12], [13, 14, 15, 16, 17], [18] * 12]
+    got = _run_engine(params, CFG, prompts, max_new=8, max_slots=2,
+                      max_len=32, page_size=4)
+    ref = sequential_generate(params, CFG, prompts, max_new_tokens=8,
+                              max_len=32)
+    assert got == ref
+
+
+def test_batched_equals_sequential_recurrent_archs():
+    """rwkv6 (tmix/cmix state rows) and the jamba hybrid (mamba + attn +
+    MoE) through the exact-length prefill fallback.  Unquantized twin:
+    see module docstring."""
+    noq = {"quant": CFG.quant.with_mode("none")}
+    rwkv = get_arch("rwkv6-7b").scaled(
+        n_layers=2, **{**SCALE, "n_kv_heads": 4}, **noq)
+    jamba = get_arch("jamba-1.5-large-398b").scaled(
+        n_layers=8, **SCALE, mamba_d_state=8, n_experts=4,
+        n_experts_per_tok=2, moe_capacity_factor=2.0, **noq)
+    prompts = PROMPTS[:3]
+    for cfg in (rwkv, jamba):
+        params = init_params(jax.random.key(0), cfg)
+        got = _run_engine(params, cfg, prompts, max_new=4, max_slots=2,
+                          max_len=32, page_size=8)
+        ref = sequential_generate(params, cfg, prompts, max_new_tokens=4,
+                                  max_len=32)
+        assert got == ref, cfg.name
+
+
+def test_decode_retraces_only_on_bucket_changes():
+    """5 requests of mixed lengths through 2 slots crosses admissions,
+    evictions and length growth constantly; the jitted decode must have
+    compiled at most (slot buckets) x (page buckets) variants."""
+    params = init_params(jax.random.key(0), CFG)
+    eng = ServeEngine(params, CFG, max_slots=2, max_len=32, page_size=4)
+    for p in PROMPTS + [[5] * 9]:
+        eng.submit(p, max_new_tokens=7)
+    eng.run_to_completion()
+    if hasattr(eng._decode, "_cache_size"):
+        # slot buckets {1, 2} x page buckets {1, 2, 4} is the ceiling
+        assert eng._decode._cache_size() <= 6

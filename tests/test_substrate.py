@@ -70,21 +70,32 @@ def test_warmup_cosine_shape():
 # ---------------------------------------------------------------------------
 
 def test_train_step_learns():
-    """SC-QAT path learns (the d=32 toy plateaus well above the floor;
-    examples/train_qat.py shows near-floor convergence at d=256)."""
+    """SC-QAT path learns (the d=64 toy plateaus well above the floor;
+    examples/train_qat.py shows near-floor convergence at d=256).
+
+    The improvement threshold is a *measured margin*, not a magic
+    constant: everything here is pinned (init seed, data seed, CPU f32
+    math), and across init seeds {0, 1, 2} on the pinned jax stack the
+    100-step run closes 17..20% of the gap between the initial loss and
+    the language's entropy floor (5-step window means).  Asserting >= 8%
+    keeps >2x headroom over the weakest measured seed while still
+    catching a dead optimizer (which closes ~0%).
+    """
     ds = _ds()
     step_fn = jax.jit(build_train_step(
         CFG, lambda s: warmup_cosine(s, 3e-3, 10, 100)))
     state = _state()
-    first = last = None
+    losses = []
     for i in range(100):
         state, metrics = step_fn(state, ds.batch(i, 8))
-        if i == 0:
-            first = float(metrics["loss"])
-        last = float(metrics["loss"])
-    assert last < first - 0.5, (first, last)
+        losses.append(float(metrics["loss"]))
+    first = float(np.mean(losses[:5]))
+    last = float(np.mean(losses[-5:]))
     # entropy floor of the Markov language is log(branching)
-    assert last > 0.9 * np.log(ds.branching)
+    floor = float(np.log(ds.branching))
+    closed = (first - last) / max(first - floor, 1e-9)
+    assert closed > 0.08, (first, last, floor, closed)
+    assert last > 0.9 * floor
 
 
 def test_grad_accum_matches_single_batch():
