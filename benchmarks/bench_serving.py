@@ -10,8 +10,15 @@ steps across requests, so the speedup is batching, not caching.
 CLI:
     PYTHONPATH=src python benchmarks/bench_serving.py            # full
     PYTHONPATH=src python benchmarks/bench_serving.py --smoke    # CI job
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      PYTHONPATH=src python benchmarks/bench_serving.py --sharded --smoke
 The smoke run writes ``BENCH_serving.json`` (tokens/sec per point +
-the 8-way speedup) for the perf-trajectory artifact.
+the 8-way speedup) for the perf-trajectory artifact; ``--sharded``
+additionally measures the mesh-sharded engine against the unsharded one
+on the same prompts and writes ``BENCH_serving_sharded.json``.  On
+forced host devices the sharded path is expected to be SLOWER (every
+collective is a host copy) — the artifact tracks the overhead trend,
+it is not gated.
 """
 
 from __future__ import annotations
@@ -45,9 +52,11 @@ MIXES = {
 }
 
 
-def _engine_tps(params, n_req, prompts_fn, max_new) -> float:
-    eng = ServeEngine(params, CFG, max_slots=min(n_req, 8),
-                      max_len=MAX_LEN, page_size=PAGE)
+def _engine_tps(params, n_req, prompts_fn, max_new, cfg=None,
+                rules=None) -> float:
+    eng = ServeEngine(params, cfg if cfg is not None else CFG,
+                      max_slots=min(n_req, 8), max_len=MAX_LEN,
+                      page_size=PAGE, mesh_rules=rules)
 
     def wave():
         for p in prompts_fn(n_req):
@@ -106,16 +115,71 @@ def run(smoke: bool = False) -> list[tuple]:
     return rows if not smoke else (rows, results)
 
 
+def run_sharded(smoke: bool = False):
+    """Mesh-sharded engine vs the same engine unsharded, same prompts.
+
+    Needs a multi-device jax (CI forces 8 host devices).  The sharded
+    engine must produce the same token count — token identity is the
+    test suite's job (tests/test_sharded_serving.py); here we track the
+    collective overhead on the forced-host mesh.
+    """
+    ndev = jax.device_count()
+    if ndev < 2:
+        raise SystemExit(
+            "--sharded needs a multi-device jax; set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=8")
+    from repro.launch.mesh import make_serving_mesh, serving_rules
+    # tp must divide n_heads=4 (GQA grouping) AND equal the KV head
+    # count so the pools shard: 4-way when possible, else 2-way
+    tp = 4 if ndev >= 4 else 2
+    dp = 2 if ndev >= 2 * tp else 1
+    rules = serving_rules(make_serving_mesh(model_parallel=tp,
+                                            data_parallel=dp))
+    cfg = CFG.scaled(n_kv_heads=tp)
+    params = init_params(jax.random.key(0), cfg)
+    max_new = 8 if smoke else 16
+    mixes = ("uniform8",) if smoke else tuple(MIXES)
+    rows, results = [], {}
+    for mix in mixes:
+        tps_sh = _engine_tps(params, 8, MIXES[mix], max_new, cfg=cfg,
+                             rules=rules)
+        tps_un = _engine_tps(params, 8, MIXES[mix], max_new, cfg=cfg)
+        key = f"serving_sharded_{mix}_n8"
+        results[key] = {"sharded_tps": tps_sh, "unsharded_tps": tps_un,
+                        "ratio": tps_sh / tps_un, "devices": ndev,
+                        "mesh": f"{dp}x{tp}"}
+        rows.append((key, 1e6 / tps_sh,
+                     f"sharded_tps={tps_sh:.1f} unsharded_tps={tps_un:.1f} "
+                     f"ratio={tps_sh / tps_un:.2f}x mesh={dp}x{tp}"))
+    return rows, results
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="one fast point; write BENCH_serving.json")
-    ap.add_argument("--out", default="BENCH_serving.json")
+    ap.add_argument("--sharded", action="store_true",
+                    help="mesh-sharded engine vs unsharded (needs "
+                         "multi-device jax); writes "
+                         "BENCH_serving_sharded.json")
+    ap.add_argument("--out", default=None)
     ap.add_argument("--min-speedup", type=float, default=0.0,
                     help="fail unless batched/sequential >= this at every "
                          "measured point (CI gate; local bar is 3x at 8 "
                          "slots, CI uses margin for runner noise)")
     args = ap.parse_args()
+    if args.out is None:
+        args.out = "BENCH_serving_sharded.json" if args.sharded \
+            else "BENCH_serving.json"
+    if args.sharded:
+        rows, results = run_sharded(smoke=args.smoke)
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=2, sort_keys=True)
+        print(f"# wrote {args.out}")
+        print("name,us_per_call,derived")
+        for n, us, d in rows:
+            print(f"{n},{us:.1f},{d}")
+        return
     if args.smoke:
         rows, results = run(smoke=True)
         with open(args.out, "w") as f:

@@ -26,7 +26,8 @@ from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
 __all__ = ["MeshRules", "mesh_rules", "current_rules", "constrain",
-           "logical_to_spec", "named_sharding"]
+           "logical_to_spec", "named_sharding", "serving_mapping",
+           "fit_spec", "shard_tree"]
 
 
 @dataclass(frozen=True)
@@ -83,6 +84,73 @@ def multipod_mapping() -> dict:
         "model": ("model",),
         "expert": ("model",),
     }
+
+
+def serving_mapping() -> dict:
+    """Logical->physical mapping for the tensor-parallel serving mesh
+    (launch/mesh.make_serving_mesh).  Decode is weight-traffic-bound, so
+    only "model"/"expert" carry real parallelism (weights stay resident,
+    sharded over output channels / experts); "batch" takes the slot axis
+    when a data dimension exists, and the training-only axes ("fsdp",
+    "seq") resolve to nothing — the serving mesh has no ZeRO/context
+    parallelism."""
+    return {
+        "batch": ("data",),
+        "model": ("model",),
+        "expert": ("model",),
+        "fsdp": (),
+        "seq": (),
+    }
+
+
+def fit_spec(spec: P, shape, mesh: Mesh) -> P:
+    """Drop spec axes a concrete array can't satisfy on this mesh.
+
+    Per dimension, an axis is kept only if it names mesh axes whose
+    total size evenly divides that dimension (e.g. a 2-KV-head pool on a
+    4-way "model" axis falls back to replicated for that dim).  This is
+    what keeps the host-side engine device-count-agnostic: the same spec
+    tree serves any mesh, degrading per-leaf instead of erroring.
+    """
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    parts = []
+    for i, ax in enumerate(spec):
+        if ax is None or i >= len(shape):
+            parts.append(None)
+            continue
+        names = ax if isinstance(ax, tuple) else (ax,)
+        total = 1
+        for a in names:
+            total *= sizes.get(a, 1)
+        ok = all(a in sizes for a in names) and shape[i] % total == 0
+        parts.append(ax if ok else None)
+    return P(*parts)
+
+
+def shard_tree(tree, spec_tree, rules: MeshRules, logical: bool = False):
+    """``device_put`` a pytree of arrays onto ``rules.mesh``.
+
+    ``spec_tree`` mirrors ``tree`` with either ``PartitionSpec`` leaves
+    (``logical=False`` — the param_specs convention) or logical-axis
+    tuples resolved through ``rules`` (``logical=True`` — the
+    cache_specs convention).  Every spec is passed through
+    :func:`fit_spec`, so non-dividing / unknown axes degrade to
+    replicated rather than raising.
+    """
+    def put(x, spec):
+        if spec is None:
+            spec = P()
+        if logical:
+            spec = rules.resolve(spec)
+        spec = fit_spec(spec, jnp_shape(x), rules.mesh)
+        return jax.device_put(x, NamedSharding(rules.mesh, spec))
+
+    def jnp_shape(x):
+        return getattr(x, "shape", ())
+
+    is_leaf = (lambda s: s is None or isinstance(s, tuple)) if logical \
+        else (lambda s: s is None or isinstance(s, P))
+    return jax.tree.map(put, tree, spec_tree, is_leaf=is_leaf)
 
 
 def constrain(x: jax.Array, *logical) -> jax.Array:

@@ -11,7 +11,8 @@ import math
 
 import jax
 
-__all__ = ["make_production_mesh", "mesh_chips", "mesh_name"]
+__all__ = ["make_production_mesh", "make_serving_mesh", "serving_rules",
+           "mesh_chips", "mesh_name"]
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -27,6 +28,36 @@ def make_production_mesh(*, multi_pod: bool = False):
             "dry-run entrypoint must set XLA_FLAGS="
             "--xla_force_host_platform_device_count=512 before importing jax")
     return jax.sharding.Mesh(_device_grid(devices[:n], shape), axes)
+
+
+def make_serving_mesh(model_parallel: int | None = None,
+                      data_parallel: int = 1):
+    """(data, model) mesh for the tensor-parallel serving engine.
+
+    ``model_parallel`` defaults to every visible device after
+    ``data_parallel`` is carved off.  Works on any device count (tests
+    force host devices via XLA_FLAGS=--xla_force_host_platform_device_
+    count=8); a single device yields a degenerate (1, 1) mesh, which the
+    engine treats identically to no mesh at all.
+    """
+    devices = jax.devices()
+    if model_parallel is None:
+        model_parallel = max(1, len(devices) // data_parallel)
+    need = data_parallel * model_parallel
+    if len(devices) < need:
+        raise RuntimeError(
+            f"serving mesh ({data_parallel}, {model_parallel}) needs "
+            f"{need} devices, found {len(devices)}")
+    return jax.sharding.Mesh(
+        _device_grid(devices[:need], (data_parallel, model_parallel)),
+        ("data", "model"))
+
+
+def serving_rules(mesh):
+    """MeshRules with the serving logical mapping (weights resident over
+    "model", no fsdp/seq axes) — what ServeEngine(mesh_rules=...) wants."""
+    from repro.distributed.sharding import MeshRules, serving_mapping
+    return MeshRules(mesh=mesh, mapping=serving_mapping())
 
 
 def _device_grid(devices, shape):

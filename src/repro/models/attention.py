@@ -49,13 +49,26 @@ def attn_init(key: jax.Array, cfg: ModelConfig) -> dict:
     return p
 
 
-def attn_spec(cfg: ModelConfig) -> dict:
+def attn_spec(cfg: ModelConfig, serving: bool = False) -> dict:
+    """Training: Megatron TP (wq/wk/wv column-, wo row-parallel — the
+    all-reduce amortizes over the token batch).  Serving: EVERY
+    projection is column-parallel (output channels over "model", no
+    contraction dim sharded).  Decode is weight-resident by design, and
+    the SC datapaths make contraction sharding wrong, not just slow: the
+    approximate BSN adder (``sc_int_approx``) is a nonlinear per-output-
+    channel accumulator, so splitting its K inputs across chips changes
+    the answer — whole adders must live on one device.  Column-parallel
+    keeps each channel's accumulation device-local (mesh-on output is
+    token-identical to mesh-off) at the cost of all-gathering the (tiny)
+    decode activations instead of all-reducing partials."""
     q = cfg.quant
+    in_ax = None if serving else DATA
     s = {
-        "wq": dense_spec(DATA, MODEL, q),
-        "wk": dense_spec(DATA, MODEL, q),
-        "wv": dense_spec(DATA, MODEL, q),
-        "wo": dense_spec(MODEL, DATA, q),
+        "wq": dense_spec(in_ax, MODEL, q),
+        "wk": dense_spec(in_ax, MODEL, q),
+        "wv": dense_spec(in_ax, MODEL, q),
+        "wo": dense_spec(None, MODEL, q) if serving
+        else dense_spec(MODEL, DATA, q),
     }
     if getattr(cfg, "qk_norm", False):
         s["q_norm"] = norm_spec("rmsnorm")
@@ -268,6 +281,10 @@ def attn_decode_paged(p: dict, x: jax.Array, cfg: ModelConfig,
     off = lengths % page
     k_pages = k_pages.at[phys, off].set(k[:, 0].astype(k_pages.dtype))
     v_pages = v_pages.at[phys, off].set(v[:, 0].astype(v_pages.dtype))
+    # pools stay KV-head-sharded across steps (weights-resident layout);
+    # scatter indices are replicated, so the update is device-local
+    k_pages = constrain(k_pages, None, None, "model", None)
+    v_pages = constrain(v_pages, None, None, "model", None)
 
     kg = _gather_pages(k_pages, page_tables)                # (S, T, Hkv, Dh)
     vg = _gather_pages(v_pages, page_tables)
@@ -275,11 +292,16 @@ def attn_decode_paged(p: dict, x: jax.Array, cfg: ModelConfig,
     qg = q.reshape(S, hkv, g, dh)
     logits = jnp.einsum("shgd,sthd->shgt", qg.astype(jnp.float32),
                         kg.astype(jnp.float32)) / math.sqrt(dh)
+    logits = constrain(logits, None, "model", None, None)
     valid = (jnp.arange(T)[None, :] <= lengths[:, None])    # (S, T)
     logits = jnp.where(valid[:, None, None, :], logits, -1e30)
     w = jax.nn.softmax(logits, axis=-1)
     o = jnp.einsum("shgt,sthd->shgd", w, vg.astype(jnp.float32))
     o = o.reshape(S, 1, hq * dh).astype(x.dtype)
+    # gather the head-sharded context BEFORE wo: the serving wo is
+    # column-parallel, so its hq*dh contraction must be device-local
+    # (never partial-summed — see attn_spec's serving rationale)
+    o = constrain(o, None, None, None)
     y = dense_apply(p["wo"], o, cfg.quant)
     return y, k_pages, v_pages
 
@@ -316,6 +338,8 @@ def attn_prefill_paged(p: dict, x: jax.Array, cfg: ModelConfig,
     vp = v.astype(v_pages.dtype).reshape(G * npg, page, hkv, dh)
     k_pages = k_pages.at[phys].set(kp)
     v_pages = v_pages.at[phys].set(vp)
+    k_pages = constrain(k_pages, None, None, "model", None)
+    v_pages = constrain(v_pages, None, None, "model", None)
 
     seen = page_tables[:, :p0 + npg]                        # pages <= chunk
     kg = _gather_pages(k_pages, seen)                       # (G, T, Hkv, Dh)
@@ -324,11 +348,13 @@ def attn_prefill_paged(p: dict, x: jax.Array, cfg: ModelConfig,
     qg = q.reshape(G, C, hkv, g, dh)
     logits = jnp.einsum("sqhgd,sthd->shgqt", qg.astype(jnp.float32),
                         kg.astype(jnp.float32)) / math.sqrt(dh)
+    logits = constrain(logits, None, "model", None, None, None)
     causal = (jnp.arange(T)[None, :] <=
               (start + jnp.arange(C))[:, None])             # (C, T)
     logits = jnp.where(causal[None, None, None, :, :], logits, -1e30)
     w = jax.nn.softmax(logits, axis=-1)
     o = jnp.einsum("shgqt,sthd->sqhgd", w, vg.astype(jnp.float32))
     o = o.reshape(G, C, hq * dh).astype(x.dtype)
+    o = constrain(o, None, None, None)      # see attn_decode_paged
     y = dense_apply(p["wo"], o, cfg.quant)
     return y, k_pages, v_pages

@@ -63,6 +63,16 @@ def dense_init(key: jax.Array, d_in: int, d_out: int, quant: SCQuantConfig,
 
 def dense_spec(in_axis: str | None, out_axis: str | None,
                quant: SCQuantConfig) -> dict:
+    """PartitionSpecs for one dense layer's params.
+
+    Axis convention: training uses Megatron pairs (column-parallel
+    ``(DATA, MODEL)`` feeding row-parallel ``(MODEL, DATA)``); the
+    serving layout (attn_spec/ffn_spec ``serving=True``) passes
+    ``(None, MODEL)`` everywhere — output channels shard, contractions
+    stay device-local so the per-channel SC accumulators never split
+    across chips (see serving/README.md).  Per-channel ``alpha_w``
+    follows the out axis so the quantizer scale lives with its column.
+    """
     s = {"w": P(in_axis, out_axis)}
     if quant.enabled:
         s["alpha_w"] = P(out_axis) if quant.per_channel else P()

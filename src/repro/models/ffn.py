@@ -31,8 +31,19 @@ def ffn_init(key: jax.Array, cfg: ModelConfig, d_ff: int | None = None) -> dict:
             "w_down": dense_init(k2, d_ff, cfg.d_model, q, dtype=dt)}
 
 
-def ffn_spec(cfg: ModelConfig) -> dict:
+def ffn_spec(cfg: ModelConfig, serving: bool = False) -> dict:
+    """Training: w_up/w_gate column-, w_down row-parallel.  Serving:
+    all three column-parallel (output over "model", contraction local) —
+    same rationale as ``attention.attn_spec``: the per-output-channel
+    BSN accumulator must not be split across devices, and decode wants
+    weights resident with only activations moving."""
     q = cfg.quant
+    if serving:
+        s = {"w_up": dense_spec(None, MODEL, q),
+             "w_down": dense_spec(None, MODEL, q)}
+        if cfg.ffn_gated:
+            s["w_gate"] = dense_spec(None, MODEL, q)
+        return s
     s = {"w_up": dense_spec(DATA, MODEL, q),
          "w_down": dense_spec(MODEL, DATA, q)}
     if cfg.ffn_gated:

@@ -81,7 +81,15 @@ def moe_spec(cfg: ModelConfig, serving: bool = False) -> dict:
     over the contraction dim — gathers amortize over the token batch), but
     (E:model, d_ff:data) for serving: decode is weight-traffic-bound, so
     the weights stay resident and only the (tiny) expert activations
-    all-reduce over data (§Perf iteration: qwen3 decode_32k)."""
+    all-reduce over data (§Perf iteration: qwen3 decode_32k).
+
+    The serving layout also satisfies the SC-datapath correctness
+    constraint the mesh-sharded ServeEngine relies on: experts are whole
+    per device (the expert matmul contractions d/f stay local), so each
+    output channel's BSN accumulation — exact or approximate — never
+    splits across chips.  The only cross-device float reduction left is
+    the router-weighted combine over E, which is outside the quantized
+    datapath."""
     q = cfg.quant
     in_ax, out_ax = (None, DATA) if serving else (DATA, None)
     s = {

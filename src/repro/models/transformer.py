@@ -31,9 +31,9 @@ from .common import (DATA, MODEL, add_leading_none, dense_apply, dense_init,
                      norm_init, norm_spec)
 
 __all__ = ["init_params", "param_specs", "forward", "loss_fn", "init_cache",
-           "cache_specs", "decode_step", "prefill", "batch_specs",
-           "make_dummy_batch", "init_paged_cache", "paged_decode_step",
-           "paged_prefill", "supports_paged_prefill"]
+           "cache_specs", "paged_cache_specs", "decode_step", "prefill",
+           "batch_specs", "make_dummy_batch", "init_paged_cache",
+           "paged_decode_step", "paged_prefill", "supports_paged_prefill"]
 
 
 # ---------------------------------------------------------------------------
@@ -58,7 +58,7 @@ def _ffn_init(key, cfg: ModelConfig, kind: str):
 
 def _ffn_spec(cfg: ModelConfig, kind: str, serving: bool = False):
     if kind == "dense":
-        return ffn.ffn_spec(cfg)
+        return ffn.ffn_spec(cfg, serving=serving)
     if kind == "moe":
         return moe.moe_spec(cfg, serving=serving)
     if kind == "rwkv_cmix":
@@ -109,9 +109,14 @@ def init_params(key: jax.Array, cfg: ModelConfig) -> dict:
 
 
 def param_specs(cfg: ModelConfig, serving: bool = False) -> dict:
+    def mixer_spec(spec: LayerSpec) -> dict:
+        if spec.mixer == "attn":
+            return attention.attn_spec(cfg, serving=serving)
+        return _MIXER_SPEC[spec.mixer](cfg)
+
     def pos_spec(spec: LayerSpec) -> dict:
         s = {"norm1": norm_spec(cfg.norm),
-             "mixer": _MIXER_SPEC[spec.mixer](cfg)}
+             "mixer": mixer_spec(spec)}
         if spec.ffn != "none":
             s["norm2"] = norm_spec(cfg.norm)
             s["ffn"] = _ffn_spec(cfg, spec.ffn, serving=serving)
@@ -125,7 +130,9 @@ def param_specs(cfg: ModelConfig, serving: bool = False) -> dict:
         "embed": embed_spec(),
         "periods": add_leading_none(periods),
         "final_norm": norm_spec(cfg.norm),
-        "lm_head": dense_spec(DATA, MODEL, cfg.quant),
+        # serving: vocab column-parallel with the d_model contraction
+        # local (same no-split-accumulator rule as attn/ffn specs)
+        "lm_head": dense_spec(None if serving else DATA, MODEL, cfg.quant),
     }
     if cfg.frontend == "vision_stub":
         specs["frontend"] = {"w1": dense_spec(None, None, cfg.quant),
@@ -153,6 +160,17 @@ def _apply_position(lp: dict, spec: LayerSpec, x, cfg: ModelConfig,
     """One layer (mixer + ffn). Returns (x, aux, new_cache_entry)."""
     aux = jnp.zeros((), jnp.float32)
     centry = {}
+    # Paged serving runs under the column-parallel serving specs: every
+    # projection output is feature-sharded over "model", so the residual
+    # stream is pinned back to replicated after each add.  This is the
+    # "all-gather activations" half of the serving layout — and it keeps
+    # every norm/quantizer reduction device-local, which is what makes
+    # mesh-on decode token-identical to mesh-off (no resharded float
+    # reductions).  `constrain` is the identity when no mesh is active.
+    paged = (mode == "paged_prefill"
+             or (cstate is not None and "page_tables" in cstate))
+    def repl(y):
+        return constrain(y, None, None, None) if paged else y
     h = norm_apply(lp["norm1"], x, cfg.norm)
     if spec.mixer == "attn":
         if mode == "decode" and "k_pages" in (cstate or {}):
@@ -190,7 +208,7 @@ def _apply_position(lp: dict, spec: LayerSpec, x, cfg: ModelConfig,
                 centry = {"s": sT, "shift": xlast}
     else:
         raise ValueError(spec.mixer)
-    x = _residual_add(x, dx, lp, "alpha_r1", cfg)
+    x = repl(_residual_add(x, repl(dx), lp, "alpha_r1", cfg))
 
     if spec.ffn != "none":
         h2 = norm_apply(lp["norm2"], x, cfg.norm)
@@ -208,7 +226,7 @@ def _apply_position(lp: dict, spec: LayerSpec, x, cfg: ModelConfig,
                 dx2, xlast2 = rwkv6.rwkv_cmix_train(lp["ffn"], h2, cfg)
                 if mode == "prefill":
                     centry = dict(centry, cmix={"shift": xlast2})
-        x = _residual_add(x, dx2, lp, "alpha_r2", cfg)
+        x = repl(_residual_add(x, repl(dx2), lp, "alpha_r2", cfg))
     return x, aux, centry
 
 
@@ -478,6 +496,39 @@ def init_paged_cache(cfg: ModelConfig, max_slots: int, num_pages: int,
     return {"periods": periods}
 
 
+def paged_cache_specs(cfg: ModelConfig) -> dict:
+    """Logical-axis tuples per paged-cache leaf (shard_tree(logical=True)).
+
+    KV page pools shard over their head axis ("model" carries KV heads —
+    each device holds every page but only its heads); recurrent state
+    rows shard their channel axis the same way.  Page/row axes stay
+    unsharded: which page a request owns is HOST bookkeeping
+    (serving/paging.py) and must remain device-count-agnostic.  Leaves
+    whose channel count doesn't divide the mesh axis degrade to
+    replicated via ``fit_spec``.
+    """
+    def entry(spec: LayerSpec) -> dict:
+        e = {}
+        if spec.mixer == "attn":
+            # (n_periods, num_pages, page, Hkv, Dh)
+            e["k_pages"] = (None, None, None, "model", None)
+            e["v_pages"] = (None, None, None, "model", None)
+        elif spec.mixer == "mamba":
+            # h: (n_periods, rows, d_inner, n); conv: (…, k-1, d_inner)
+            e["h"] = (None, None, "model", None)
+            e["conv"] = (None, None, None, "model")
+        elif spec.mixer == "rwkv6":
+            # s: (n_periods, rows, heads, dh, dh)
+            e["s"] = (None, None, "model", None, None)
+            e["shift"] = (None, None, None)
+        if spec.ffn == "rwkv_cmix":
+            e["cmix"] = {"shift": (None, None, None)}
+        return e
+
+    periods = {f"p{i}": entry(spec) for i, spec in enumerate(cfg.period)}
+    return {"periods": periods}
+
+
 _POOL_KEYS = ("k_pages", "v_pages")
 
 
@@ -494,6 +545,7 @@ def paged_decode_step(params: dict, cache: dict, tokens: jax.Array,
     """
     assert not cfg.is_encoder, "encoder archs have no decode step"
     x = jnp.take(params["embed"]["table"], tokens[:, None], axis=0)  # (S,1,D)
+    x = constrain(x, None, None, None)   # embed table is vocab-sharded
 
     def period_body(x, inp):
         pp, cper = inp
@@ -547,6 +599,7 @@ def paged_prefill(params: dict, cache: dict, tokens: jax.Array,
     for c in range(L // chunk):
         start = c * chunk
         xc = jnp.take(table, tokens[:, start:start + chunk], axis=0)
+        xc = constrain(xc, None, None, None)
 
         def period_body(x, inp, start=start):
             pp, cper = inp

@@ -25,6 +25,21 @@ Execution model (vLLM-style, scaled to this zoo):
   Padded lanes point at the scratch state row and the trash page; they
   cost FLOPs, never correctness.
 
+* **Mesh-sharded decode (tensor parallel).**  ``ServeEngine(mesh_rules=
+  launch.mesh.serving_rules(mesh))`` shards params with the serving
+  layout (column-parallel projections over ``"model"``, whole experts
+  per device via ``moe_spec(serving=True)``), the KV page pools over
+  their KV-head axis, and recurrent state rows over their channel axis;
+  the jitted steps trace under the rules so GSPMD keeps weights
+  resident and moves only the (tiny) decode activations.  Host-side
+  paging/slot bookkeeping never sees the mesh.  The layout shards
+  output channels only — never a contraction dim — because the SC
+  accumulators (exact and approximate BSN) are per-output-channel
+  units: each channel's K-term accumulation stays device-local, so
+  mesh-on decode is token-identical to mesh-off (and to
+  ``sequential_generate``) on every datapath.  With ``mesh_rules=None``
+  nothing here activates and behavior is exactly single-device.
+
 Datapath: ``datapath="qat"`` serves the fake-quant QAT forward;
 ``"sc_int"`` re-quantizes every projection on the fly and runs the
 silicon-equivalent int8 x ternary -> int32 path
@@ -38,6 +53,7 @@ time, so the scope must surround the *first* (tracing) call.
 
 from __future__ import annotations
 
+import contextlib
 import itertools
 from dataclasses import dataclass, field
 from functools import partial
@@ -47,9 +63,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.distributed.sharding import MeshRules, mesh_rules, shard_tree
 from repro.kernels import dispatch as kernel_dispatch
-from repro.models import (decode_step, init_paged_cache, paged_decode_step,
-                          paged_prefill, prefill, supports_paged_prefill)
+from repro.models import (decode_step, init_paged_cache, paged_cache_specs,
+                          paged_decode_step, paged_prefill, param_specs,
+                          prefill, supports_paged_prefill)
 
 from .paging import (TRASH_PAGE, PageAllocator, PageTable, pad_pow2,
                      pages_needed)
@@ -88,7 +106,8 @@ class ServeEngine:
     def __init__(self, params, cfg: ModelConfig, max_slots: int = 4,
                  max_len: int = 256, bsn_backend: str | None = None,
                  page_size: int = 16, num_pages: int | None = None,
-                 prefill_chunk: int = 64, datapath: str = "qat"):
+                 prefill_chunk: int = 64, datapath: str = "qat",
+                 mesh_rules: MeshRules | None = None):
         assert not cfg.is_encoder, "encoders are served via forward()"
         if bsn_backend is not None \
                 and bsn_backend not in kernel_dispatch.BACKENDS:
@@ -99,7 +118,6 @@ class ServeEngine:
             raise ValueError(f"page_size must be a power of two, "
                              f"got {page_size}")
         self.bsn_backend = bsn_backend
-        self.params = params
         self.cfg = _cfg_for_datapath(cfg, datapath)
         self.datapath = datapath
         self.max_slots, self.max_len = max_slots, max_len
@@ -112,36 +130,84 @@ class ServeEngine:
         self._rid = itertools.count()
         self.queue: list[Request] = []
         self.slots: list[Request | None] = [None] * max_slots
-        self.cache = init_paged_cache(self.cfg, max_slots, num_pages,
-                                      page_size)
+        cache = init_paged_cache(self.cfg, max_slots, num_pages, page_size)
         self._chunk = pad_pow2(max(prefill_chunk, page_size))
 
+        # Mesh-sharded serving (tensor-parallel decode): params take the
+        # serving layout (every projection column-parallel over "model",
+        # experts whole-per-device — see models/attention.attn_spec),
+        # KV page pools and recurrent state rows shard their head /
+        # channel axes (models/transformer.paged_cache_specs), and every
+        # traced entry point runs under the rules so the
+        # with_sharding_constraint annotations resolve.  All HOST
+        # bookkeeping (allocator, page tables, slots) is device-count-
+        # agnostic — it never sees the mesh.  With mesh_rules=None this
+        # block is dead and behavior is exactly single-device.
+        self.rules = mesh_rules
+        if mesh_rules is not None:
+            params = shard_tree(params, param_specs(self.cfg, serving=True),
+                                mesh_rules)
+            cache = shard_tree(cache, paged_cache_specs(self.cfg),
+                               mesh_rules, logical=True)
+        self.params = params
+        self.cache = cache
+
         # jitted entry points.  The decode cache is donated: page pools
-        # are updated in place across steps instead of copied.
-        self._decode = jax.jit(self._decode_fn, donate_argnums=(0,))
+        # are updated in place across steps instead of copied.  Under a
+        # mesh, output shardings are pinned to the input cache layout so
+        # every step reuses one compiled variant per shape bucket
+        # (donation stays clean, no sharding ping-pong).
+        jit_kw = {}
+        self._cache_sh = None
+        if mesh_rules is not None:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            self._cache_sh = jax.tree.map(lambda a: a.sharding, self.cache)
+            rep = NamedSharding(mesh_rules.mesh, P())
+            jit_kw["out_shardings"] = (rep, self._cache_sh)
+        self._decode = jax.jit(self._decode_fn, donate_argnums=(1,),
+                               **jit_kw)
         self._prefill_batched = jax.jit(self._prefill_batched_fn,
                                         static_argnames=("chunk",),
-                                        donate_argnums=(0,))
+                                        donate_argnums=(1,), **jit_kw)
         self._prefill_exact = jax.jit(
-            lambda batch: prefill(self.params, batch, self.cfg))
+            lambda params, batch: prefill(params, batch, self.cfg))
 
     # -- traced bodies --------------------------------------------------
-    def _decode_fn(self, cache, tokens, slot_ids, tables, lengths):
-        logits, cache = paged_decode_step(self.params, cache, tokens,
+    def _decode_fn(self, params, cache, tokens, slot_ids, tables, lengths):
+        logits, cache = paged_decode_step(params, cache, tokens,
                                           slot_ids, tables, lengths,
                                           self.cfg)
         nxt = jnp.argmax(logits[:, :self.cfg.vocab_size], axis=-1)
         return nxt.astype(jnp.int32), cache
 
-    def _prefill_batched_fn(self, cache, tokens, tables, lens, *, chunk):
-        logits, cache = paged_prefill(self.params, cache, tokens, tables,
+    def _prefill_batched_fn(self, params, cache, tokens, tables, lens, *,
+                            chunk):
+        logits, cache = paged_prefill(params, cache, tokens, tables,
                                       lens, self.cfg, chunk=chunk)
         nxt = jnp.argmax(logits[:, :self.cfg.vocab_size], axis=-1)
         return nxt.astype(jnp.int32), cache
 
+    @contextlib.contextmanager
+    def _scope(self):
+        """Every traced call runs here: BSN backend dispatch happens at
+        trace time, and the mesh rules must be active so logical-axis
+        constraints resolve (both are no-ops when unset)."""
+        with kernel_dispatch.backend_scope(self.bsn_backend):
+            if self.rules is None:
+                yield
+            else:
+                with mesh_rules(self.rules):
+                    yield
+
     # -- submission -----------------------------------------------------
     def submit(self, prompt: list[int], max_new_tokens: int = 16,
                eos_id: int | None = None) -> int:
+        if len(prompt) == 0:
+            # an empty prompt would reach prefill as a (1, 0) token batch
+            # and fail deep inside the model (rope/scan over S=0);
+            # sequential_generate has no first-token logit either — fail
+            # loudly at the API boundary instead.
+            raise ValueError("empty prompt: need at least one token")
         if len(prompt) > self.max_len - 1:
             raise ValueError(f"prompt of {len(prompt)} tokens exceeds "
                              f"max_len={self.max_len}")
@@ -203,15 +269,20 @@ class ServeEngine:
             tokens[g, :plens[g]] = r.prompt
             tables[g] = r._table.padded(width)
             lens[g] = plens[g]
-        with kernel_dispatch.backend_scope(self.bsn_backend):
+        with self._scope():
             nxt, self.cache = self._prefill_batched(
-                self.cache, jnp.asarray(tokens), jnp.asarray(tables),
-                jnp.asarray(lens), chunk=chunk)
+                self.params, self.cache, jnp.asarray(tokens),
+                jnp.asarray(tables), jnp.asarray(lens), chunk=chunk)
         for g, r in enumerate(reqs):
             r.generated.append(int(nxt[g]))
             self._check_done(r)
 
     def _check_done(self, r: Request):
+        """THE stop rule (the only copy: prefill and decode both route
+        here).  Mirrors ``sequential_generate``'s loop condition — it
+        keeps decoding while ``len(gen) < max_new_tokens and length <
+        max_len - 1 and gen[-1] != eos`` — so a request stops after the
+        token that makes any of the three false."""
         hit_eos = r.eos_id is not None and r.generated \
             and r.generated[-1] == r.eos_id
         if hit_eos or len(r.generated) >= r.max_new_tokens \
@@ -222,8 +293,9 @@ class ServeEngine:
         """Exact-length fallback (recurrent mixers need order-exact
         prompt state); outputs are scattered into the paged layout."""
         toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
-        with kernel_dispatch.backend_scope(self.bsn_backend):
-            logits, cache_one = self._prefill_exact({"tokens": toks})
+        with self._scope():
+            logits, cache_one = self._prefill_exact(self.params,
+                                                    {"tokens": toks})
         self._scatter_prefill(req, cache_one)
         req.generated.append(
             int(jnp.argmax(logits[0, -1, :self.cfg.vocab_size])))
@@ -257,7 +329,14 @@ class ServeEngine:
                             o[:, 0].astype(full.dtype)),
                         entry[name], val)
             periods[key] = entry
-        self.cache = {"periods": periods}
+        cache = {"periods": periods}
+        if self._cache_sh is not None:
+            # the eager scatters above leave GSPMD-inferred shardings on
+            # the touched leaves; re-pin to the init-time layout so the
+            # next decode step's donation (out_shardings pinned at
+            # __init__) stays clean instead of copying the whole cache
+            cache = jax.device_put(cache, self._cache_sh)
+        self.cache = cache
 
     # -- stepping -------------------------------------------------------
     def _grow_or_preempt(self, active: list[int]) -> list[int]:
@@ -319,20 +398,17 @@ class ServeEngine:
                 slot_ids[lane] = i
                 tables[lane] = r._table.padded(maxp)
                 lengths[lane] = r._len
-            with kernel_dispatch.backend_scope(self.bsn_backend):
+            with self._scope():
                 nxt, self.cache = self._decode(
-                    self.cache, jnp.asarray(tokens), jnp.asarray(slot_ids),
-                    jnp.asarray(tables), jnp.asarray(lengths))
+                    self.params, self.cache, jnp.asarray(tokens),
+                    jnp.asarray(slot_ids), jnp.asarray(tables),
+                    jnp.asarray(lengths))
             nxt = np.asarray(nxt)
             for lane, i in enumerate(active):
                 r = self.slots[i]
                 r.generated.append(int(nxt[lane]))
                 r._len += 1
-                hit_eos = r.eos_id is not None \
-                    and int(nxt[lane]) == r.eos_id
-                if hit_eos or len(r.generated) >= r.max_new_tokens \
-                        or r._len >= self.max_len - 1:
-                    r.done = True
+                self._check_done(r)
         self._sweep_done(done)          # decode-finished + truncated
         return done
 
@@ -373,13 +449,18 @@ def sequential_generate(params, cfg: ModelConfig, prompts: list[list[int]],
     ``ServeEngine.step``.
     """
     cfg = _cfg_for_datapath(cfg, datapath)
-    prefill_fn = jax.jit(lambda b: prefill(params, b, cfg))
-    decode_fn = jax.jit(lambda c, t: decode_step(params, c, t, cfg))
+    # params are explicit jit ARGUMENTS, matching the engine's traced
+    # entry points: closure-captured params constant-fold differently in
+    # XLA, and on the fake-quant lattice that 1-ulp drift can flip exact
+    # argmax ties — the differential theorem needs both sides compiled
+    # under the same discipline.
+    prefill_fn = jax.jit(lambda p, b: prefill(p, b, cfg))
+    decode_fn = jax.jit(lambda p, c, t: decode_step(p, c, t, cfg))
     outs = []
     with kernel_dispatch.backend_scope(bsn_backend):
         for prompt in prompts:
             toks = jnp.asarray(prompt, jnp.int32)[None, :]
-            logits, cache = prefill_fn({"tokens": toks})
+            logits, cache = prefill_fn(params, {"tokens": toks})
             cache = _pad_prefill_cache(cache, max_len)
             gen = [int(jnp.argmax(logits[0, -1, :cfg.vocab_size]))]
             length = len(prompt)
@@ -387,7 +468,7 @@ def sequential_generate(params, cfg: ModelConfig, prompts: list[list[int]],
                    and length < max_len - 1
                    and (eos_id is None or gen[-1] != eos_id)):
                 tok = jnp.asarray([[gen[-1]]], jnp.int32)
-                logits, cache = decode_fn(cache, tok)
+                logits, cache = decode_fn(params, cache, tok)
                 gen.append(int(jnp.argmax(logits[0, 0, :cfg.vocab_size])))
                 length += 1
             outs.append(gen)

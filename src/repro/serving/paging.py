@@ -36,10 +36,26 @@ def pages_needed(length: int, page_size: int) -> int:
     return max(0, (length + page_size - 1) // page_size)
 
 
+def _pow2_up(n: int) -> int:
+    return 1 << (max(n, 1) - 1).bit_length()
+
+
 def pad_pow2(n: int, lo: int = 1, hi: int | None = None) -> int:
-    """Round ``n`` up to a power of two in ``[lo, hi]`` (bucket size)."""
-    b = max(lo, 1 << (max(n, 1) - 1).bit_length())
-    return min(b, hi) if hi is not None else b
+    """Round ``n`` up to a power-of-two bucket size in ``[lo, hi]``.
+
+    The result is ALWAYS a power of two >= n (the jit-bucket contract:
+    non-pow2 buckets would mint a fresh trace per odd size).  ``lo`` is
+    rounded up to a power of two; ``hi`` is clamped *down* to one (a
+    non-pow2 cap like 6 cannot name a pow2 bucket).  ``hi`` is a soft
+    cap: when no power of two <= hi can hold ``n`` (e.g. n=6, hi=6) the
+    next power of two above ``n`` is returned anyway, so buffers sized
+    by the bucket never under-allocate.
+    """
+    b = max(_pow2_up(lo), _pow2_up(n))
+    if hi is not None:
+        hi_pow = 1 << max(hi, 1).bit_length() - 1       # pow2 floor of hi
+        b = min(b, max(hi_pow, _pow2_up(n)))
+    return b
 
 
 class PageAllocator:

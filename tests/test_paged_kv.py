@@ -19,6 +19,10 @@ Three layers of guarantees, bottom-up:
    test_substrate's grad-accum test).
 """
 
+import os
+import subprocess
+import sys
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -111,8 +115,29 @@ def test_padded_table_is_trash_padded():
 
 def test_pad_pow2_buckets():
     assert [pad_pow2(n) for n in (1, 2, 3, 5, 8, 9)] == [1, 2, 4, 8, 8, 16]
-    assert pad_pow2(3, hi=3) == 3
     assert pad_pow2(1, lo=16) == 16
+
+
+def test_pad_pow2_always_pow2():
+    """The pow2-bucket contract: whatever the bounds, the bucket is a
+    power of two >= n (a non-pow2 bucket would mint a fresh jit trace
+    per odd size; a bucket < n would under-allocate the lane buffers)."""
+    for n in range(1, 20):
+        for lo in (1, 3, 4, 16):
+            for hi in (None, 3, 4, 6, 8, 31):
+                b = pad_pow2(n, lo=lo, hi=hi)
+                assert b & (b - 1) == 0, (n, lo, hi, b)
+                assert b >= n, (n, lo, hi, b)
+    # hi is clamped DOWN to a pow2 (6 -> 4), lo rounded up (3 -> 4)
+    assert pad_pow2(3, hi=6) == 4
+    assert pad_pow2(4, hi=6) == 4
+    assert pad_pow2(2, hi=3) == 2
+    assert pad_pow2(1, lo=3) == 4
+    # the old bug: min(b, hi) returned a non-pow2 hi verbatim
+    assert pad_pow2(3, hi=3) == 4
+    # soft cap: no pow2 <= hi can hold n -> next pow2 above n anyway
+    assert pad_pow2(5, hi=6) == 8
+    assert pad_pow2(6, hi=6) == 8
 
 
 # ---------------------------------------------------------------------------
@@ -150,6 +175,50 @@ def test_unservable_prompt_rejected_at_submit():
     with pytest.raises(ValueError, match="pages"):
         eng.submit(list(range(30)))                # needs 8 pages
     eng.submit(list(range(20)))                    # 6 pages: fine
+
+
+def test_empty_prompt_rejected_at_submit():
+    """An empty prompt would reach prefill as a (1, 0) token batch and
+    blow up deep inside the model; it must fail at the API boundary."""
+    params = init_params(jax.random.key(0), CFG)
+    eng = ServeEngine(params, CFG, max_slots=2, max_len=32, page_size=8)
+    with pytest.raises(ValueError, match="empty prompt"):
+        eng.submit([])
+    eng.submit([1])                                # 1 token: fine
+
+
+def test_boundary_prompts_match_sequential():
+    """Prompts of length max_len-2 and max_len-1: the done-logic boundary
+    (`_len >= max_len - 1`, consolidated in `_check_done`) must agree
+    with sequential_generate's `length < max_len - 1` loop condition —
+    exactly 2 and 1 generated tokens respectively."""
+    params = init_params(jax.random.key(0), CFG)
+    max_len = 16
+    prompts = [list(range(1, max_len - 1)),        # max_len - 2 tokens
+               list(range(1, max_len))]            # max_len - 1 tokens
+    got = _run_engine(params, CFG, prompts, max_new=8, max_slots=2,
+                      max_len=max_len, page_size=4)
+    ref = sequential_generate(params, CFG, prompts, max_new_tokens=8,
+                              max_len=max_len)
+    assert got == ref
+    assert [len(g) for g in got] == [2, 1]
+    with pytest.raises(ValueError, match="exceeds"):
+        ServeEngine(params, CFG, max_slots=2, max_len=max_len,
+                    page_size=4).submit(list(range(max_len)))
+
+
+def test_non_pow2_max_slots_matches_sequential():
+    """max_slots=3 (non-pow2): slot buckets must still be powers of two
+    (the pad_pow2 fix) and tokens must match the oracle."""
+    params = init_params(jax.random.key(0), CFG)
+    eng = ServeEngine(params, CFG, max_slots=3, max_len=32, page_size=8)
+    for p in PROMPTS:
+        eng.submit(p, max_new_tokens=5)
+    done = eng.run_to_completion()
+    got = [r.generated for r in sorted(done, key=lambda r: r.rid)]
+    ref = sequential_generate(params, CFG, PROMPTS, max_new_tokens=5,
+                              max_len=32)
+    assert got == ref
 
 
 def test_preemption_under_page_pressure():
@@ -214,6 +283,29 @@ def test_batched_equals_sequential_recurrent_archs():
         ref = sequential_generate(params, cfg, prompts, max_new_tokens=4,
                                   max_len=32)
         assert got == ref, cfg.name
+
+
+def test_sharded_serving_subprocess():
+    """Tier-1 entry to the 8-device sharded suite
+    (test_sharded_serving.py).  The forced host-device count must be
+    set before jax initializes, so it needs a fresh interpreter; when
+    this process already has 8 devices (the CI sharded job) the inner
+    suite runs natively and this wrapper skips."""
+    if jax.device_count() >= 8:
+        pytest.skip("sharded suite runs natively in this process")
+    here = os.path.dirname(os.path.abspath(__file__))
+    env = dict(
+        os.environ,
+        XLA_FLAGS="--xla_force_host_platform_device_count=8",
+        JAX_PLATFORMS="cpu",
+        PYTHONPATH=os.path.join(os.path.dirname(here), "src")
+        + os.pathsep + os.environ.get("PYTHONPATH", ""),
+    )
+    r = subprocess.run(
+        [sys.executable, "-m", "pytest", "-x", "-q",
+         os.path.join(here, "test_sharded_serving.py")],
+        env=env, capture_output=True, text=True, timeout=1500)
+    assert r.returncode == 0, r.stdout[-4000:] + r.stderr[-2000:]
 
 
 def test_decode_retraces_only_on_bucket_changes():

@@ -1,0 +1,133 @@
+"""Mesh-sharded paged serving: the tensor-parallel differential theorem.
+
+The sharded engine (`ServeEngine(mesh_rules=...)`) must be TOKEN-
+IDENTICAL to the unsharded engine and to `sequential_generate` — not
+approximately equal.  That holds because the serving layout shards
+output channels only (column-parallel projections, whole experts per
+device, KV pools over KV heads): every norm / quantizer / accumulator
+reduction stays device-local, so mesh-on decode produces bit-equal
+logits on the qat path and bit-equal integer sums on the sc_int /
+sc_int_approx paths (the approximate BSN adder is a per-output-channel
+unit — splitting its inputs across chips would change the answer, which
+is exactly why no contraction dim is ever sharded).
+
+These tests need a multi-device jax, which must be forced BEFORE jax
+initializes: run under ``XLA_FLAGS=--xla_force_host_platform_device_
+count=8`` (the CI sharded job does; so does the tier-1 subprocess
+wrapper ``test_paged_kv.py::test_sharded_serving_subprocess``).  With
+fewer devices everything here skips.
+"""
+
+import jax
+import pytest
+
+from repro.configs import get_arch
+from repro.launch.mesh import make_serving_mesh, serving_rules
+from repro.models import init_params
+from repro.serving import ServeEngine, sequential_generate
+
+pytestmark = pytest.mark.skipif(
+    jax.device_count() < 8,
+    reason="needs 8 devices — set "
+           "XLA_FLAGS=--xla_force_host_platform_device_count=8")
+
+# n_kv_heads=4 so the KV page pools actually shard over the 4-way
+# "model" axis (2 data x 4 model = the forced 8 devices)
+SCALE = dict(d_model=64, n_heads=4, n_kv_heads=4, d_ff=128,
+             vocab_size=64, vocab_pad_multiple=32, dtype="float32",
+             attn_q_chunk=8)
+ATTN_CFG = get_arch("granite-3-2b").scaled(n_layers=2, **SCALE)
+MOE_CFG = get_arch("dbrx-132b").scaled(
+    n_layers=2, **SCALE, n_experts=4, n_experts_per_tok=2,
+    moe_capacity_factor=2.0)
+PROMPTS = [[1, 2, 3], [4, 5, 6, 7], [8, 9]]
+
+
+def _rules():
+    return serving_rules(make_serving_mesh(model_parallel=4,
+                                           data_parallel=2))
+
+
+def _engine_tokens(params, cfg, datapath, rules, max_new=4):
+    eng = ServeEngine(params, cfg, max_slots=2, max_len=32, page_size=8,
+                      datapath=datapath, mesh_rules=rules)
+    for p in PROMPTS:
+        eng.submit(p, max_new_tokens=max_new)
+    done = eng.run_to_completion()
+    assert len(done) == len(PROMPTS)
+    return [r.generated for r in sorted(done, key=lambda r: r.rid)]
+
+
+@pytest.mark.parametrize("datapath", ["qat", "sc_int", "sc_int_approx"])
+@pytest.mark.parametrize("cfg", [ATTN_CFG, MOE_CFG], ids=["attn", "moe"])
+def test_mesh_on_equals_mesh_off_equals_sequential(cfg, datapath):
+    """The acceptance differential: sharded == unsharded == oracle,
+    token for token, on an attention config and an MoE config across
+    all three datapaths."""
+    params = init_params(jax.random.key(0), cfg)
+    sharded = _engine_tokens(params, cfg, datapath, _rules())
+    local = _engine_tokens(params, cfg, datapath, None)
+    ref = sequential_generate(params, cfg, PROMPTS, max_new_tokens=4,
+                              max_len=32, datapath=datapath)
+    assert sharded == local, (cfg.name, datapath)
+    assert local == ref, (cfg.name, datapath)
+
+
+def test_kv_pools_sharded_over_model_axis():
+    """The page pools really shard their KV-head axis (weights-resident
+    layout), while host bookkeeping stays device-count-agnostic."""
+    params = init_params(jax.random.key(0), ATTN_CFG)
+    eng = ServeEngine(params, ATTN_CFG, max_slots=2, max_len=32,
+                      page_size=8, mesh_rules=_rules())
+    kp = eng.cache["periods"]["p0"]["k_pages"]
+    # (n_periods, num_pages, page, Hkv, Dh): Hkv carries "model"
+    assert kp.sharding.spec[3] == "model"
+    wq = eng.params["periods"]["p0"]["mixer"]["wq"]["w"]
+    # (n_periods, d_model, hq*dh): column-parallel -> out dim on "model"
+    assert wq.sharding.spec[2] == "model"
+    # the allocator never saw the mesh
+    assert eng.allocator.num_pages == eng.max_slots * eng.max_pages + 1
+
+
+def test_uneven_heads_degrade_to_replicated():
+    """A KV-head count that doesn't divide the model axis must degrade
+    that leaf to replicated (fit_spec), not error."""
+    cfg = get_arch("granite-3-2b").scaled(
+        n_layers=2, **{**SCALE, "n_kv_heads": 2, "n_heads": 4})
+    params = init_params(jax.random.key(0), cfg)
+    eng = ServeEngine(params, cfg, max_slots=2, max_len=32, page_size=8,
+                      mesh_rules=_rules())          # model axis = 4, Hkv = 2
+    kp = eng.cache["periods"]["p0"]["k_pages"]
+    assert kp.sharding.spec[3] is None
+    for p in PROMPTS[:2]:
+        eng.submit(p, max_new_tokens=3)
+    done = eng.run_to_completion()
+    ref = sequential_generate(params, cfg, PROMPTS[:2], max_new_tokens=3,
+                              max_len=32)
+    assert [r.generated for r in
+            sorted(done, key=lambda r: r.rid)] == ref
+
+
+def test_recurrent_arch_sharded_matches_sequential():
+    """rwkv6 takes the exact-length prefill fallback whose eager scatter
+    runs OUTSIDE the jit: under a mesh its output must be re-pinned to
+    the init-time cache layout (or the next decode step loses donation
+    and copies the whole cache).  Unquantized twin — same float-tie
+    convention as test_paged_kv's recurrent differential."""
+    cfg = get_arch("rwkv6-7b").scaled(
+        n_layers=2, **SCALE,
+        quant=get_arch("rwkv6-7b").quant.with_mode("none"))
+    params = init_params(jax.random.key(0), cfg)
+    got = _engine_tokens(params, cfg, "qat", _rules())
+    ref = sequential_generate(params, cfg, PROMPTS, max_new_tokens=4,
+                              max_len=32)
+    assert got == ref
+
+
+def test_degenerate_mesh_equals_no_mesh():
+    """A (1, 1) mesh is behaviorally identical to mesh_rules=None."""
+    params = init_params(jax.random.key(0), ATTN_CFG)
+    rules = serving_rules(make_serving_mesh(model_parallel=1,
+                                            data_parallel=1))
+    assert _engine_tokens(params, ATTN_CFG, "qat", rules) \
+        == _engine_tokens(params, ATTN_CFG, "qat", None)
