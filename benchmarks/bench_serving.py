@@ -13,7 +13,8 @@ CLI:
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
       PYTHONPATH=src python benchmarks/bench_serving.py --sharded --smoke
 The smoke run writes ``BENCH_serving.json`` (tokens/sec per point +
-the 8-way speedup) for the perf-trajectory artifact; ``--sharded``
+the 8-way speedup, plus seeded-sampled vs greedy decode throughput —
+the cost of the in-jit top-k/top-p filter and categorical draw); ``--sharded``
 additionally measures the mesh-sharded engine against the unsharded one
 on the same prompts and writes ``BENCH_serving_sharded.json``.  On
 forced host devices the sharded path is expected to be SLOWER (every
@@ -33,7 +34,7 @@ import numpy as np
 
 from repro.configs import get_arch
 from repro.models import decode_step, init_params, prefill
-from repro.serving import ServeEngine
+from repro.serving import SamplingParams, ServeEngine
 from repro.serving.engine import _pad_prefill_cache
 
 MAX_LEN = 64
@@ -53,14 +54,18 @@ MIXES = {
 
 
 def _engine_tps(params, n_req, prompts_fn, max_new, cfg=None,
-                rules=None) -> float:
+                rules=None, sampled=False) -> float:
     eng = ServeEngine(params, cfg if cfg is not None else CFG,
                       max_slots=min(n_req, 8), max_len=MAX_LEN,
                       page_size=PAGE, mesh_rules=rules)
+    # seeded stochastic decode (vs the default greedy): same jitted step,
+    # plus the in-jit filter + categorical draw per token
+    sps = [SamplingParams(temperature=0.8, top_p=0.9, top_k=32, seed=i)
+           for i in range(n_req)] if sampled else [None] * n_req
 
     def wave():
-        for p in prompts_fn(n_req):
-            eng.submit(p, max_new_tokens=max_new)
+        for p, sp in zip(prompts_fn(n_req), sps):
+            eng.submit(p, max_new_tokens=max_new, sampling=sp)
         done = eng.run_to_completion()
         return sum(len(r.generated) for r in done)
 
@@ -105,13 +110,21 @@ def run(smoke: bool = False) -> list[tuple]:
         for n in slot_counts:
             tps_b = _engine_tps(params, n, MIXES[mix], max_new)
             tps_s = _sequential_tps(params, n, MIXES[mix], max_new)
+            # sampled decode (temperature/top-k/top-p inside the jit) vs
+            # greedy: tracks what the filter + categorical draw cost per
+            # decoded token — recorded, not gated
+            tps_smp = _engine_tps(params, n, MIXES[mix], max_new,
+                                  sampled=True)
             speedup = tps_b / tps_s
             key = f"serving_{mix}_n{n}"
             results[key] = {"batched_tps": tps_b, "sequential_tps": tps_s,
-                            "speedup": speedup}
+                            "speedup": speedup, "sampled_tps": tps_smp,
+                            "sampled_vs_greedy": tps_smp / tps_b}
             rows.append((key, 1e6 / tps_b,
                          f"batched_tps={tps_b:.1f} seq_tps={tps_s:.1f} "
-                         f"speedup={speedup:.2f}x"))
+                         f"speedup={speedup:.2f}x "
+                         f"sampled_tps={tps_smp:.1f} "
+                         f"sampled_vs_greedy={tps_smp / tps_b:.2f}x"))
     return rows if not smoke else (rows, results)
 
 

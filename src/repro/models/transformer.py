@@ -571,6 +571,11 @@ def paged_decode_step(params: dict, cache: dict, tokens: jax.Array,
     x = norm_apply(params["final_norm"], x, cfg.norm)
     logits = dense_apply(params["lm_head"], x, cfg.quant)
     logits = logits + _vocab_bias(cfg, logits.dtype)
+    # serving lm_head is column-parallel: pin the product's vocab axis to
+    # "model" so GSPMD gathers exactly once — the sampler (or argmax)
+    # downstream re-pins its crop to replicated, which is what makes the
+    # categorical draw identical on and off the mesh
+    logits = constrain(logits, None, None, "model")
     return logits[:, 0], {"periods": new_periods}
 
 
@@ -625,6 +630,9 @@ def paged_prefill(params: dict, cache: dict, tokens: jax.Array,
     h = norm_apply(params["final_norm"], h_last[:, None, :], cfg.norm)
     logits = dense_apply(params["lm_head"], h, cfg.quant)[:, 0]
     logits = logits + _vocab_bias(cfg, logits.dtype)
+    # same vocab-axis pin as paged_decode_step: sampling the first
+    # generated token must see mesh-invariant logit rows
+    logits = constrain(logits, None, "model")
     return logits, {"periods": periods}
 
 

@@ -2,6 +2,7 @@
 
 from .engine import Request, ServeEngine, sequential_generate
 from .paging import PageAllocator, PageTable
+from .sampling import SamplingParams
 
-__all__ = ["ServeEngine", "Request", "sequential_generate",
-           "PageAllocator", "PageTable"]
+__all__ = ["ServeEngine", "Request", "SamplingParams",
+           "sequential_generate", "PageAllocator", "PageTable"]

@@ -40,6 +40,19 @@ Execution model (vLLM-style, scaled to this zoo):
   ``sequential_generate``) on every datapath.  With ``mesh_rules=None``
   nothing here activates and behavior is exactly single-device.
 
+* **Seeded sampling.**  Each request carries :class:`SamplingParams`
+  (temperature / top-k / top-p / min-p / seed; ``temperature == 0`` is
+  greedy, the default).  The controls are packed into flat per-lane
+  tensors and the categorical draw happens INSIDE the jitted decode /
+  prefill steps (serving/sampling.py) — one traced step still advances
+  the whole batch, bucketed shapes unchanged, no host round-trip.  The
+  per-request PRNG key is a pure function of ``(seed, position)``, so
+  batched, preempted-and-resumed, mesh-sharded and
+  ``sequential_generate`` decode all draw identical tokens.  Whether a
+  batch samples at all is a STATIC jit flag: all-greedy batches compile
+  the plain argmax step (zero sampler compute — the default workload
+  costs what the pre-sampling engine cost).
+
 Datapath: ``datapath="qat"`` serves the fake-quant QAT forward;
 ``"sc_int"`` re-quantizes every projection on the fly and runs the
 silicon-equivalent int8 x ternary -> int32 path
@@ -71,8 +84,11 @@ from repro.models import (decode_step, init_paged_cache, paged_cache_specs,
 
 from .paging import (TRASH_PAGE, PageAllocator, PageTable, pad_pow2,
                      pages_needed)
+from .sampling import (SamplingParams, greedy_tokens, pack_sampling,
+                       sample_tokens)
 
-__all__ = ["Request", "ServeEngine", "sequential_generate"]
+__all__ = ["Request", "SamplingParams", "ServeEngine",
+           "sequential_generate"]
 
 DATAPATHS = ("qat", "sc_int", "sc_int_approx")
 
@@ -95,6 +111,7 @@ class Request:
     prompt: list[int]
     max_new_tokens: int = 16
     eos_id: int | None = None
+    sampling: SamplingParams = field(default_factory=SamplingParams)
     generated: list[int] = field(default_factory=list)
     done: bool = False
     # engine internals
@@ -165,27 +182,60 @@ class ServeEngine:
             rep = NamedSharding(mesh_rules.mesh, P())
             jit_kw["out_shardings"] = (rep, self._cache_sh)
         self._decode = jax.jit(self._decode_fn, donate_argnums=(1,),
-                               **jit_kw)
+                               static_argnames=("do_sample",), **jit_kw)
         self._prefill_batched = jax.jit(self._prefill_batched_fn,
-                                        static_argnames=("chunk",),
+                                        static_argnames=("chunk",
+                                                         "do_sample"),
                                         donate_argnums=(1,), **jit_kw)
-        self._prefill_exact = jax.jit(
-            lambda params, batch: prefill(params, batch, self.cfg))
+        self._prefill_exact = jax.jit(self._prefill_exact_fn,
+                                      static_argnames=("do_sample",))
 
     # -- traced bodies --------------------------------------------------
-    def _decode_fn(self, params, cache, tokens, slot_ids, tables, lengths):
+    #
+    # The categorical draw lives INSIDE each traced body: the logits
+    # never leave the device, and the ``samp`` tensors follow the lane
+    # bucket shape so sampling adds zero retraces within a mode.  Draw
+    # positions are the fold-in counters of the (seed, position)
+    # streams — the decode step writes its input token at ``lengths``,
+    # so the token it draws sits at sequence index ``lengths + 1``;
+    # prefill draws the first generated token at index ``prompt_len``.
+    #
+    # ``do_sample`` is a STATIC flag, true iff some live lane has
+    # temperature > 0: an all-greedy batch (the default workload)
+    # compiles the plain argmax step with zero sampler compute — no
+    # sorts, no RNG — exactly the pre-sampling engine.  Worst case this
+    # doubles the compiled variants per shape bucket (greedy + sampled);
+    # temperature=0 lanes inside a sampled batch take the in-trace
+    # greedy branch of ``sample_tokens``, which is bit-identical, so
+    # batch composition never changes anyone's tokens.
+
+    def _decode_fn(self, params, cache, tokens, slot_ids, tables, lengths,
+                   samp, *, do_sample):
         logits, cache = paged_decode_step(params, cache, tokens,
                                           slot_ids, tables, lengths,
                                           self.cfg)
-        nxt = jnp.argmax(logits[:, :self.cfg.vocab_size], axis=-1)
-        return nxt.astype(jnp.int32), cache
+        nxt = sample_tokens(logits, lengths + 1, samp,
+                            self.cfg.vocab_size) if do_sample \
+            else greedy_tokens(logits, self.cfg.vocab_size)
+        return nxt, cache
 
-    def _prefill_batched_fn(self, params, cache, tokens, tables, lens, *,
-                            chunk):
+    def _prefill_batched_fn(self, params, cache, tokens, tables, lens,
+                            samp, *, chunk, do_sample):
         logits, cache = paged_prefill(params, cache, tokens, tables,
                                       lens, self.cfg, chunk=chunk)
-        nxt = jnp.argmax(logits[:, :self.cfg.vocab_size], axis=-1)
-        return nxt.astype(jnp.int32), cache
+        nxt = sample_tokens(logits, lens, samp,
+                            self.cfg.vocab_size) if do_sample \
+            else greedy_tokens(logits, self.cfg.vocab_size)
+        return nxt, cache
+
+    def _prefill_exact_fn(self, params, batch, samp, *, do_sample):
+        logits, cache = prefill(params, batch, self.cfg)
+        plen = logits.shape[1]                    # static: exact length
+        pos = jnp.full((1,), plen, jnp.int32)
+        tok = sample_tokens(logits[:, -1], pos, samp,
+                            self.cfg.vocab_size) if do_sample \
+            else greedy_tokens(logits[:, -1], self.cfg.vocab_size)
+        return tok[0], cache
 
     @contextlib.contextmanager
     def _scope(self):
@@ -201,7 +251,8 @@ class ServeEngine:
 
     # -- submission -----------------------------------------------------
     def submit(self, prompt: list[int], max_new_tokens: int = 16,
-               eos_id: int | None = None) -> int:
+               eos_id: int | None = None,
+               sampling: SamplingParams | None = None) -> int:
         if len(prompt) == 0:
             # an empty prompt would reach prefill as a (1, 0) token batch
             # and fail deep inside the model (rope/scan over S=0);
@@ -216,7 +267,8 @@ class ServeEngine:
             # would never admit, not even with an empty pool
             raise ValueError(f"prompt needs {need} pages but the pool "
                              f"holds {self.allocator.num_pages - 1}")
-        r = Request(next(self._rid), list(prompt), max_new_tokens, eos_id)
+        r = Request(next(self._rid), list(prompt), max_new_tokens, eos_id,
+                    sampling if sampling is not None else SamplingParams())
         self.queue.append(r)
         return r.rid
 
@@ -269,10 +321,13 @@ class ServeEngine:
             tokens[g, :plens[g]] = r.prompt
             tables[g] = r._table.padded(width)
             lens[g] = plens[g]
+        samp = pack_sampling([r.sampling for r in reqs], pad_to=G)
+        do_sample = any(not r.sampling.greedy for r in reqs)
         with self._scope():
             nxt, self.cache = self._prefill_batched(
                 self.params, self.cache, jnp.asarray(tokens),
-                jnp.asarray(tables), jnp.asarray(lens), chunk=chunk)
+                jnp.asarray(tables), jnp.asarray(lens), samp, chunk=chunk,
+                do_sample=do_sample)
         for g, r in enumerate(reqs):
             r.generated.append(int(nxt[g]))
             self._check_done(r)
@@ -293,12 +348,13 @@ class ServeEngine:
         """Exact-length fallback (recurrent mixers need order-exact
         prompt state); outputs are scattered into the paged layout."""
         toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
+        samp = pack_sampling([req.sampling])
         with self._scope():
-            logits, cache_one = self._prefill_exact(self.params,
-                                                    {"tokens": toks})
+            tok, cache_one = self._prefill_exact(
+                self.params, {"tokens": toks}, samp,
+                do_sample=not req.sampling.greedy)
         self._scatter_prefill(req, cache_one)
-        req.generated.append(
-            int(jnp.argmax(logits[0, -1, :self.cfg.vocab_size])))
+        req.generated.append(int(tok))
         self._check_done(req)
 
     def _scatter_prefill(self, req: Request, cache_one: dict):
@@ -339,11 +395,25 @@ class ServeEngine:
         self.cache = cache
 
     # -- stepping -------------------------------------------------------
+    def _packed_sampling(self, active: list[int], Sb: int) -> dict:
+        """Per-lane sampling tensors for the decode step.  They are
+        constant for a given lane composition, so re-pack (5 host
+        builds + uploads) only when admission/eviction/preemption
+        changes which request rides which lane — not every token."""
+        key = (tuple(self.slots[i].rid for i in active), Sb)
+        if getattr(self, "_samp_key", None) != key:
+            self._samp_key = key
+            self._samp_packed = pack_sampling(
+                [self.slots[i].sampling for i in active], pad_to=Sb)
+        return self._samp_packed
+
     def _grow_or_preempt(self, active: list[int]) -> list[int]:
         """Make sure every active slot can take one more token; preempt
         the youngest request (free pages, requeue for re-prefill) under
-        pool pressure.  Greedy decode is deterministic, so a preempted
-        request regenerates the same tokens after re-admission."""
+        pool pressure.  Decode is deterministic — greedy trivially, and
+        seeded sampling because its PRNG streams are keyed by (seed,
+        position) only — so a preempted request regenerates the same
+        tokens after re-admission."""
         for i in list(active):
             r = self.slots[i]
             if r is None or r.done:   # preempted / finished at prefill
@@ -398,11 +468,14 @@ class ServeEngine:
                 slot_ids[lane] = i
                 tables[lane] = r._table.padded(maxp)
                 lengths[lane] = r._len
+            samp = self._packed_sampling(active, Sb)
+            do_sample = any(not self.slots[i].sampling.greedy
+                            for i in active)
             with self._scope():
                 nxt, self.cache = self._decode(
                     self.params, self.cache, jnp.asarray(tokens),
                     jnp.asarray(slot_ids), jnp.asarray(tables),
-                    jnp.asarray(lengths))
+                    jnp.asarray(lengths), samp, do_sample=do_sample)
             nxt = np.asarray(nxt)
             for lane, i in enumerate(active):
                 r = self.slots[i]
@@ -439,16 +512,30 @@ def _pad_prefill_cache(cache_one: dict, max_len: int) -> dict:
 def sequential_generate(params, cfg: ModelConfig, prompts: list[list[int]],
                         max_new_tokens: int = 16, eos_id: int | None = None,
                         max_len: int = 256, bsn_backend: str | None = None,
-                        datapath: str = "qat") -> list[list[int]]:
-    """Per-request prefill + one-token-at-a-time greedy decode over the
-    dense (un-paged) cache — the seed engine's per-slot execution model.
+                        datapath: str = "qat",
+                        sampling: SamplingParams | list[SamplingParams]
+                        | None = None) -> list[list[int]]:
+    """Per-request prefill + one-token-at-a-time decode over the dense
+    (un-paged) cache — the seed engine's per-slot execution model.
 
     This is the reference oracle: the batched paged engine must produce
-    these tokens exactly (tests/test_paged_kv.py) and beat this loop's
-    throughput (benchmarks/bench_serving.py).  Stop conditions mirror
-    ``ServeEngine.step``.
+    these tokens exactly (tests/test_paged_kv.py, test_sampling.py) and
+    beat this loop's throughput (benchmarks/bench_serving.py).  Stop
+    conditions mirror ``ServeEngine.step``.  ``sampling`` is one
+    :class:`SamplingParams` for every prompt or a per-prompt list
+    (default greedy); token picks route through the SAME
+    ``sample_tokens`` the engine traces, at batch 1, with the same
+    (seed, position) fold-in streams — position ``len(prompt) + n`` for
+    the n-th generated token.
     """
     cfg = _cfg_for_datapath(cfg, datapath)
+    sps = sampling if isinstance(sampling, list) \
+        else [sampling] * len(prompts)
+    if len(sps) != len(prompts):
+        raise ValueError(f"sampling list has {len(sps)} entries for "
+                         f"{len(prompts)} prompts")
+    # None entries mean greedy, same as ServeEngine.submit(sampling=None)
+    sps = [sp if sp is not None else SamplingParams() for sp in sps]
     # params are explicit jit ARGUMENTS, matching the engine's traced
     # entry points: closure-captured params constant-fold differently in
     # XLA, and on the fake-quant lattice that 1-ulp drift can flip exact
@@ -456,20 +543,33 @@ def sequential_generate(params, cfg: ModelConfig, prompts: list[list[int]],
     # under the same discipline.
     prefill_fn = jax.jit(lambda p, b: prefill(p, b, cfg))
     decode_fn = jax.jit(lambda p, c, t: decode_step(p, c, t, cfg))
+    sample_fn = jax.jit(
+        lambda lg, pos, sm: sample_tokens(lg, pos, sm, cfg.vocab_size))
+    greedy_fn = jax.jit(lambda lg: greedy_tokens(lg, cfg.vocab_size))
     outs = []
     with kernel_dispatch.backend_scope(bsn_backend):
-        for prompt in prompts:
+        for prompt, sp in zip(prompts, sps):
+            samp = pack_sampling([sp])
+
+            def pick(lg, t):
+                # greedy requests skip the sampler entirely, mirroring
+                # the engine's static do_sample split
+                if sp.greedy:
+                    return int(greedy_fn(lg)[0])
+                return int(sample_fn(lg, jnp.asarray([t], jnp.int32),
+                                     samp)[0])
+
             toks = jnp.asarray(prompt, jnp.int32)[None, :]
             logits, cache = prefill_fn(params, {"tokens": toks})
             cache = _pad_prefill_cache(cache, max_len)
-            gen = [int(jnp.argmax(logits[0, -1, :cfg.vocab_size]))]
             length = len(prompt)
+            gen = [pick(logits[:, -1], length)]
             while (len(gen) < max_new_tokens
                    and length < max_len - 1
                    and (eos_id is None or gen[-1] != eos_id)):
                 tok = jnp.asarray([[gen[-1]]], jnp.int32)
                 logits, cache = decode_fn(params, cache, tok)
-                gen.append(int(jnp.argmax(logits[0, 0, :cfg.vocab_size])))
+                gen.append(pick(logits[:, 0], length + 1))
                 length += 1
             outs.append(gen)
     return outs

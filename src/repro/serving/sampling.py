@@ -1,0 +1,219 @@
+"""Seeded stochastic sampling for the paged serving stack.
+
+Per-request :class:`SamplingParams` (temperature / top-k / top-p / min-p /
+seed) ride through admission and are packed into flat per-lane tensors,
+so the WHOLE batch samples inside the one jitted decode step — masking,
+renormalization and the categorical draw are traced jax, no host
+round-trip, and the jit signature depends only on the pow2 shape
+buckets plus one static bit (sampled vs all-greedy: batches without a
+``temperature > 0`` lane compile :func:`greedy_tokens`, the plain
+argmax step, so default serving pays no sampler compute).
+
+The reproducibility contract
+----------------------------
+
+The per-request PRNG stream is a pure function of ``(seed, position)``::
+
+    key(seed, t) = fold_in(PRNGKey(seed), t)      # t = token index drawn
+
+where ``t`` is the 0-based index of the token being drawn in the full
+sequence (prompt tokens occupy ``0..P-1``, so the first sampled token is
+drawn at ``t = P``).  Nothing else enters the key — not the batch slot,
+not the slot/page bucket size, not the mesh layout, not wall clock.
+Consequences, all load-bearing for the engine:
+
+* **batched == sequential** — the continuous-batching engine and the
+  per-request ``sequential_generate`` oracle draw identical tokens;
+* **preemption-safe** — a preempted request is re-prefilled and replays
+  positions ``P, P+1, ...`` with the same keys, regenerating the exact
+  tokens it lost (the same argument that made greedy preemption safe);
+* **mesh-invariant** — the sampled-token tensor is pinned replicated
+  (``constrain``), so tensor-parallel decode draws the same tokens as
+  single-device decode.
+
+Greedy decode is the ``temperature == 0`` special case: the sampler
+returns the exact ``argmax`` the pre-sampling engine computed, so default
+requests are bit-compatible with the old greedy-only engine.
+
+Filtering order (applied to ``logits / temperature``):
+
+1. **top-k**  — keep the k largest logits; ties *at* the k-th value are
+   all kept (a pure function of the logit row, so slot/bucket invariant).
+2. **top-p**  — over the top-k-renormalized probabilities, sort
+   descending and keep the shortest prefix whose *preceding* mass is
+   ``< top_p``; probability ties at the boundary are all kept (same
+   invariance argument — the kept set never depends on sort tie order).
+3. **min-p**  — keep tokens with ``prob >= min_p * max_prob``.
+4. categorical draw via the Gumbel trick on the surviving logits.
+
+The best token always survives every filter, so the masked row is never
+empty.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import constrain
+
+__all__ = ["SamplingParams", "pack_sampling", "filter_logits",
+           "sample_tokens", "greedy_tokens", "lane_keys"]
+
+
+@dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling controls (vLLM-style semantics).
+
+    ``temperature == 0`` is greedy argmax decode — the default, and the
+    engine's historical behavior.  ``top_k == 0`` disables the top-k
+    filter; ``top_p == 1`` and ``min_p == 0`` disable theirs.  ``seed``
+    names the request's deterministic draw stream (two requests with the
+    same seed and the same context draw the same tokens — reproducibility
+    is the feature, perturb the seed for variety).  Only the low 32 bits
+    of ``seed`` enter the PRNG key: seeds congruent mod 2**32 name the
+    SAME stream (hash-derived seeds should be masked by the caller).
+    """
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    min_p: float = 0.0
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.temperature < 0:
+            raise ValueError(f"temperature must be >= 0, "
+                             f"got {self.temperature}")
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0 (0 = off), "
+                             f"got {self.top_k}")
+        if not 0 < self.top_p <= 1:
+            raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
+        if not 0 <= self.min_p <= 1:
+            raise ValueError(f"min_p must be in [0, 1], got {self.min_p}")
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature == 0.0
+
+
+def pack_sampling(sps: list[SamplingParams], pad_to: int | None = None
+                  ) -> dict[str, jax.Array]:
+    """Pack per-request params into flat per-lane device tensors.
+
+    Padded lanes get ``temperature = 0`` (greedy over garbage logits —
+    their draw is discarded by the engine, and the greedy branch burns no
+    RNG).  The dict is a single jit argument; shapes follow the lane
+    bucket, so sampling never adds retraces.
+    """
+    n = len(sps) if pad_to is None else pad_to
+    assert n >= len(sps), (n, len(sps))
+    out = {"seed": np.zeros((n,), np.int32),
+           "temperature": np.zeros((n,), np.float32),
+           "top_k": np.zeros((n,), np.int32),
+           "top_p": np.ones((n,), np.float32),
+           "min_p": np.zeros((n,), np.float32)}
+    for i, sp in enumerate(sps):
+        out["seed"][i] = np.uint32(sp.seed & 0xFFFFFFFF).astype(np.int32)
+        out["temperature"][i] = sp.temperature
+        out["top_k"][i] = sp.top_k
+        out["top_p"][i] = sp.top_p
+        out["min_p"][i] = sp.min_p
+    return {k: jnp.asarray(v) for k, v in out.items()}
+
+
+def lane_keys(seeds: jax.Array, positions: jax.Array) -> jax.Array:
+    """The (seed, position) fold-in stream — one key per lane.
+
+    vmap over per-lane keys applies the counter-based PRNG per key, so a
+    lane's bits are identical whether it is drawn alone (the sequential
+    oracle), in an 8-wide bucket, or on a mesh.
+    """
+    def one(seed, pos):
+        return jax.random.fold_in(jax.random.PRNGKey(seed), pos)
+    return jax.vmap(one)(seeds, positions)
+
+
+def filter_logits(logits: jax.Array, temperature: jax.Array,
+                  top_k: jax.Array, top_p: jax.Array,
+                  min_p: jax.Array) -> jax.Array:
+    """Temperature-scale then mask a batch of logit rows.
+
+    logits: ``(S, V)`` float32 (already cropped to the real vocab);
+    the per-lane controls are ``(S,)``.  Returns ``(S, V)`` scaled logits
+    with ``-inf`` outside the kept set.  Every mask is a pure function of
+    its own row, so the result is invariant to batch composition.
+    """
+    S, V = logits.shape
+    # the greedy lanes divide by 1 (their branch ignores this tensor)
+    scaled = logits / jnp.maximum(temperature, 1e-8)[:, None]
+
+    # top-k: threshold at the k-th largest value, keep boundary ties
+    sorted_desc = jnp.sort(scaled, axis=-1)[:, ::-1]
+    k_eff = jnp.clip(jnp.where(top_k > 0, top_k, V), 1, V)
+    kth = jnp.take_along_axis(sorted_desc, (k_eff - 1)[:, None], axis=-1)
+    keep = scaled >= kth
+
+    # top-p on the top-k-renormalized distribution: keep the shortest
+    # descending prefix whose PRECEDING mass is < top_p, then widen to
+    # every token tied with the smallest kept probability (boundary ties
+    # must not depend on sort order between equal probs)
+    probs = jax.nn.softmax(jnp.where(keep, scaled, -jnp.inf), axis=-1)
+    sp = jnp.sort(probs, axis=-1)[:, ::-1]
+    mass_before = jnp.cumsum(sp, axis=-1) - sp
+    kept_sorted = mass_before < top_p[:, None]          # monotone prefix
+    n_keep = jnp.sum(kept_sorted, axis=-1)              # >= 1 (top_p > 0)
+    p_thr = jnp.take_along_axis(sp, (n_keep - 1)[:, None], axis=-1)
+    keep = keep & (probs >= p_thr)
+
+    # min-p relative to the row's best token
+    pmax = jnp.max(probs, axis=-1, keepdims=True)
+    keep = keep & (probs >= min_p[:, None] * pmax)
+
+    return jnp.where(keep, scaled, -jnp.inf)
+
+
+def greedy_tokens(logits: jax.Array, vocab_size: int) -> jax.Array:
+    """Argmax decode with the same vocab crop and sharding pins as
+    :func:`sample_tokens` — the step traced for all-greedy batches, so
+    the default serving path pays zero sampler compute (no sorts, no
+    RNG).  Bit-identical to a ``temperature == 0`` lane of the sampled
+    step (same f32 cast, same argmax), so a request draws the same
+    tokens whether its batch happens to contain sampled neighbors."""
+    lf = logits[:, :vocab_size].astype(jnp.float32)
+    lf = constrain(lf, None, None)
+    return constrain(jnp.argmax(lf, axis=-1).astype(jnp.int32), None)
+
+
+def sample_tokens(logits: jax.Array, positions: jax.Array,
+                  samp: dict[str, jax.Array], vocab_size: int) -> jax.Array:
+    """Draw one token per lane, inside the caller's jit.
+
+    logits: ``(S, V_padded)``; positions: ``(S,)`` int32 — the 0-based
+    sequence index of the token being drawn (the fold-in counter);
+    ``samp``: :func:`pack_sampling` output.  Returns ``(S,)`` int32.
+
+    Lanes with ``temperature == 0`` return the exact argmax (the padded
+    vocab is cropped first, so the ``-1e9`` vocab-bias slots can never
+    win).  Under a mesh the logit rows are pinned replicated before the
+    row-wise sort/scan ops and the sampled tokens are pinned replicated
+    on the way out — tensor-parallel decode must draw the very token the
+    single-device engine draws.
+    """
+    lf = logits[:, :vocab_size].astype(jnp.float32)
+    lf = constrain(lf, None, None)
+    greedy = jnp.argmax(lf, axis=-1).astype(jnp.int32)
+
+    masked = filter_logits(lf, samp["temperature"], samp["top_k"],
+                           samp["top_p"], samp["min_p"])
+    keys = lane_keys(samp["seed"], positions)
+    u = jax.vmap(
+        lambda k: jax.random.uniform(k, (vocab_size,), jnp.float32))(keys)
+    gumbel = -jnp.log(-jnp.log(jnp.maximum(u, jnp.finfo(jnp.float32).tiny)))
+    drawn = jnp.argmax(masked + gumbel, axis=-1).astype(jnp.int32)
+
+    nxt = jnp.where(samp["temperature"] > 0, drawn, greedy)
+    return constrain(nxt, None)

@@ -1,0 +1,268 @@
+"""Seeded stochastic sampling: filter laws + the engine differentials.
+
+Two layers:
+
+1. Unit laws of the pure sampler (serving/sampling.py): temperature=0 is
+   exact argmax, top-k=1 is greedy at any temperature, top-p mass
+   boundary ties are all kept (the kept set is a pure function of the
+   logit row, never of sort tie order), min-p thresholds against the
+   row's best token, and the (seed, position) stream draws the same
+   token no matter which lane / batch width carries it.
+2. The seeded differential family the greedy-only engine could never
+   express: batched continuous-batching decode == per-request sequential
+   decode under nontrivial temperature / top-p, per datapath, invariant
+   across retrace buckets and across preemption (the mesh third of the
+   family lives in test_sharded_serving.py).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.models import init_params
+from repro.serving import (SamplingParams, ServeEngine,
+                           sequential_generate)
+from repro.serving.sampling import (filter_logits, pack_sampling,
+                                    sample_tokens)
+
+SCALE = dict(d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+             vocab_size=64, vocab_pad_multiple=32, dtype="float32",
+             attn_q_chunk=8)
+CFG = get_arch("granite-3-2b").scaled(n_layers=2, **SCALE)
+PROMPTS = [[1, 2, 3], [4, 5, 6, 7], [8, 9], [10, 11, 12, 13, 14]]
+SAMPLED = [SamplingParams(temperature=0.9, top_p=0.8, top_k=16,
+                          seed=100 + i) for i in range(len(PROMPTS))]
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(jax.random.key(0), CFG)
+
+
+def _run_engine(params, prompts, sps, max_new=5, eos_id=None, **kw):
+    eng = ServeEngine(params, CFG, **kw)
+    for p, sp in zip(prompts, sps):
+        eng.submit(p, max_new_tokens=max_new, eos_id=eos_id, sampling=sp)
+    done = eng.run_to_completion()
+    assert len(done) == len(prompts)
+    return [r.generated for r in sorted(done, key=lambda r: r.rid)]
+
+
+def _kept(masked_row):
+    """Indices surviving the filters (finite entries)."""
+    return set(np.flatnonzero(np.isfinite(np.asarray(masked_row))))
+
+
+def _filter_one(logits_row, sp: SamplingParams):
+    samp = pack_sampling([sp])
+    return filter_logits(jnp.asarray(logits_row, jnp.float32)[None],
+                         samp["temperature"], samp["top_k"],
+                         samp["top_p"], samp["min_p"])[0]
+
+
+# ---------------------------------------------------------------------------
+# 1. unit laws
+# ---------------------------------------------------------------------------
+
+def test_params_validation():
+    for bad in (dict(temperature=-0.1), dict(top_k=-1), dict(top_p=0.0),
+                dict(top_p=1.5), dict(min_p=-0.2), dict(min_p=1.1)):
+        with pytest.raises(ValueError):
+            SamplingParams(**bad)
+    assert SamplingParams().greedy
+    assert not SamplingParams(temperature=0.5).greedy
+
+
+def test_temperature_zero_is_exact_argmax():
+    """Greedy is the temperature=0 special case: other controls are
+    ignored and the draw is the bit-exact argmax of the cropped row —
+    the old greedy-only engine's behavior."""
+    logits = jax.random.normal(jax.random.key(0), (5, 48))
+    samp = pack_sampling([SamplingParams(top_k=3, top_p=0.5, min_p=0.3,
+                                         seed=s) for s in range(5)])
+    pos = jnp.arange(5, dtype=jnp.int32)
+    got = sample_tokens(logits, pos, samp, vocab_size=48)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(jnp.argmax(logits, -1)))
+
+
+def test_top_k1_equals_greedy_at_any_temperature():
+    logits = jax.random.normal(jax.random.key(1), (6, 40))
+    for temp in (0.3, 1.0, 7.5):
+        samp = pack_sampling([SamplingParams(temperature=temp, top_k=1,
+                                             seed=s) for s in range(6)])
+        got = sample_tokens(logits, jnp.arange(6, dtype=jnp.int32),
+                            samp, vocab_size=40)
+        np.testing.assert_array_equal(np.asarray(got),
+                                      np.asarray(jnp.argmax(logits, -1)))
+
+
+def test_top_p_mass_boundary_ties_all_kept():
+    """Four tokens tied at p~=0.25 with top_p=0.5: the strict prefix
+    holds 2 (or 3) of them depending on float rounding and sort order —
+    the tie rule must widen to ALL FOUR, so the kept set is a pure
+    function of the row and boundary ties can never break slot/bucket
+    invariance.  The tiny-tail tokens stay excluded."""
+    probs = np.full(8, 1e-9)
+    probs[[1, 3, 4, 6]] = 0.25
+    row = np.log(probs)
+    kept = _kept(_filter_one(row, SamplingParams(temperature=1.0,
+                                                 top_p=0.5)))
+    assert kept == {1, 3, 4, 6}
+
+
+def test_top_p_prefix_rule():
+    """No ties: probs (.5, .3, .2) with top_p=0.6 keeps exactly the
+    shortest prefix whose preceding mass is < 0.6 — tokens {0, 1}."""
+    row = np.log(np.array([0.5, 0.3, 0.2]))
+    kept = _kept(_filter_one(row, SamplingParams(temperature=1.0,
+                                                 top_p=0.6)))
+    assert kept == {0, 1}
+
+
+def test_min_p_thresholds_against_best():
+    """min_p=0.1 with best prob .5: threshold .05 cuts the .04 token."""
+    row = np.log(np.array([0.5, 0.3, 0.12, 0.04, 0.04]))
+    kept = _kept(_filter_one(row, SamplingParams(temperature=1.0,
+                                                 min_p=0.1)))
+    assert kept == {0, 1, 2}
+
+
+def test_temperature_extremes():
+    """t -> 0+ concentrates on the argmax; t -> inf flattens but must
+    stay inside the top-k set (the filter, not the temperature, bounds
+    the support)."""
+    logits = jnp.asarray(np.linspace(0.0, 8.0, 32), jnp.float32)[None]
+    top4 = set(range(28, 32))
+    cold = hot = set()
+    for pos in range(40):
+        p = jnp.asarray([pos], jnp.int32)
+        tc = sample_tokens(logits, p, pack_sampling(
+            [SamplingParams(temperature=1e-4, seed=3)]), 32)
+        cold = cold | {int(tc[0])}
+        th = sample_tokens(logits, p, pack_sampling(
+            [SamplingParams(temperature=1e4, top_k=4, seed=3)]), 32)
+        hot = hot | {int(th[0])}
+    assert cold == {31}                     # effectively greedy
+    assert hot <= top4 and len(hot) > 1     # spread, but filtered
+
+
+def test_same_seed_position_same_draw_any_lane_any_width():
+    """The stream is (seed, position) ONLY: identical rows with the same
+    seed/position draw the same token in every lane of a wide batch, and
+    that token equals the batch-1 draw (the oracle's shape)."""
+    row = jax.random.normal(jax.random.key(2), (24,))
+    sp = SamplingParams(temperature=1.2, top_p=0.95, seed=42)
+    pos = jnp.full((4,), 9, jnp.int32)
+    wide = sample_tokens(jnp.tile(row[None], (4, 1)), pos,
+                         pack_sampling([sp] * 4), 24)
+    assert len(set(np.asarray(wide).tolist())) == 1
+    one = sample_tokens(row[None], pos[:1], pack_sampling([sp]), 24)
+    assert int(one[0]) == int(wide[0])
+
+
+def test_positions_advance_the_stream():
+    """Successive positions under one seed must not replay the draw."""
+    row = jnp.zeros((1, 16), jnp.float32)       # uniform: pure RNG
+    sp = pack_sampling([SamplingParams(temperature=1.0, seed=0)])
+    toks = {int(sample_tokens(row, jnp.asarray([t], jnp.int32),
+                              sp, 16)[0]) for t in range(32)}
+    assert len(toks) > 4
+
+
+# ---------------------------------------------------------------------------
+# 2. engine differentials (batched == sequential, seeded)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("datapath", ["qat", "sc_int", "sc_int_approx"])
+def test_sampled_batched_equals_sequential_per_datapath(params, datapath):
+    """The acceptance differential's local two-thirds: seeded sampled
+    decode (temperature>0, top-p<1) is token-identical between the
+    batched paged engine and the sequential oracle on every datapath."""
+    got = _run_engine(params, PROMPTS, SAMPLED, max_slots=3, max_len=32,
+                      page_size=8, datapath=datapath)
+    ref = sequential_generate(params, CFG, PROMPTS, max_new_tokens=5,
+                              max_len=32, datapath=datapath,
+                              sampling=SAMPLED)
+    assert got == ref, datapath
+    greedy = sequential_generate(params, CFG, PROMPTS, max_new_tokens=5,
+                                 max_len=32, datapath=datapath)
+    assert got != greedy, "sampling degenerated to greedy"
+
+
+def test_mixed_greedy_and_sampled_batch(params):
+    """Greedy (default / None) and sampled requests share one decode
+    step; each lane follows its own rule.  This also pins the
+    bit-identity of the two compiled paths: the engine's mixed batch
+    runs greedy lanes through the sampled step's in-trace argmax
+    branch, while the oracle's greedy requests take the dedicated
+    argmax-only step — the tokens must agree."""
+    sps = [None, SAMPLED[1], SamplingParams(), SAMPLED[3]]
+    got = _run_engine(params, PROMPTS, sps, max_slots=4, max_len=32,
+                      page_size=8)
+    ref = sequential_generate(params, CFG, PROMPTS, max_new_tokens=5,
+                              max_len=32, sampling=sps)
+    assert got == ref
+    with pytest.raises(ValueError, match="entries"):
+        sequential_generate(params, CFG, PROMPTS, max_new_tokens=5,
+                            max_len=32, sampling=sps[:2])
+
+
+def test_seed_stream_invariant_across_retrace_buckets(params):
+    """Different max_slots / page_size force different pow2 lane buckets
+    (and different padded-lane counts); the fold-in streams must not see
+    any of it."""
+    a = _run_engine(params, PROMPTS, SAMPLED, max_slots=4, max_len=32,
+                    page_size=16)
+    b = _run_engine(params, PROMPTS, SAMPLED, max_slots=2, max_len=32,
+                    page_size=4)
+    assert a == b
+
+
+def test_seed_stream_invariant_under_preemption(params):
+    """A pool too small for both requests forces preempt + re-prefill;
+    position-keyed draws replay the identical tokens, so the run matches
+    the never-preempted oracle."""
+    prompts = [[1, 2, 3, 4, 5, 6, 7], [8, 9, 10, 11, 12, 13]]
+    sps = [SamplingParams(temperature=1.1, top_p=0.9, seed=5),
+           SamplingParams(temperature=0.7, top_k=8, seed=6)]
+    eng = ServeEngine(params, CFG, max_slots=2, max_len=24, page_size=8,
+                      num_pages=5)
+    for p, sp in zip(prompts, sps):
+        eng.submit(p, max_new_tokens=12, sampling=sp)
+    done = eng.run_to_completion()
+    got = [r.generated for r in sorted(done, key=lambda r: r.rid)]
+    ref = sequential_generate(params, CFG, prompts, max_new_tokens=12,
+                              max_len=24, sampling=sps)
+    assert got == ref
+
+
+def test_same_seed_same_prompt_reproduces(params):
+    """Two requests sharing seed AND prompt draw identical tokens —
+    reproducibility is the contract; distinct seeds diverge."""
+    sps = [SamplingParams(temperature=1.0, seed=9),
+           SamplingParams(temperature=1.0, seed=9),
+           SamplingParams(temperature=1.0, seed=10)]
+    got = _run_engine(params, [[1, 2, 3]] * 3, sps, max_slots=3,
+                      max_len=32, page_size=8)
+    assert got[0] == got[1]
+    assert got[0] != got[2]
+
+
+def test_eos_stops_sampled_requests(params):
+    """The _check_done stop rules apply to sampled tokens too: force an
+    unavoidable eos by sampling from a single-token support."""
+    sps = [SamplingParams(temperature=1.0, top_k=1, seed=0)]
+    ref = sequential_generate(params, CFG, [PROMPTS[0]],
+                              max_new_tokens=8, max_len=32,
+                              sampling=sps)
+    eos = ref[0][2]                          # stop at the 3rd token
+    got = _run_engine(params, [PROMPTS[0]], sps, max_new=8, max_slots=2,
+                      max_len=32, page_size=8, eos_id=eos)
+    seq = sequential_generate(params, CFG, [PROMPTS[0]],
+                              max_new_tokens=8, max_len=32, eos_id=eos,
+                              sampling=sps)
+    assert got == seq
+    assert got[0][-1] == eos and len(got[0]) == 3

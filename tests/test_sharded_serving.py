@@ -24,7 +24,8 @@ import pytest
 from repro.configs import get_arch
 from repro.launch.mesh import make_serving_mesh, serving_rules
 from repro.models import init_params
-from repro.serving import ServeEngine, sequential_generate
+from repro.serving import (SamplingParams, ServeEngine,
+                           sequential_generate)
 
 pytestmark = pytest.mark.skipif(
     jax.device_count() < 8,
@@ -48,11 +49,13 @@ def _rules():
                                            data_parallel=2))
 
 
-def _engine_tokens(params, cfg, datapath, rules, max_new=4):
+def _engine_tokens(params, cfg, datapath, rules, max_new=4,
+                   sampling=None):
     eng = ServeEngine(params, cfg, max_slots=2, max_len=32, page_size=8,
                       datapath=datapath, mesh_rules=rules)
-    for p in PROMPTS:
-        eng.submit(p, max_new_tokens=max_new)
+    sps = sampling or [None] * len(PROMPTS)
+    for p, sp in zip(PROMPTS, sps):
+        eng.submit(p, max_new_tokens=max_new, sampling=sp)
     done = eng.run_to_completion()
     assert len(done) == len(PROMPTS)
     return [r.generated for r in sorted(done, key=lambda r: r.rid)]
@@ -71,6 +74,34 @@ def test_mesh_on_equals_mesh_off_equals_sequential(cfg, datapath):
                               max_len=32, datapath=datapath)
     assert sharded == local, (cfg.name, datapath)
     assert local == ref, (cfg.name, datapath)
+
+
+SAMPLED = [SamplingParams(temperature=0.8, top_p=0.9, seed=11 + i)
+           for i in range(len(PROMPTS))]
+
+
+@pytest.mark.parametrize("datapath", ["qat", "sc_int", "sc_int_approx"])
+def test_sampled_mesh_on_equals_mesh_off_equals_sequential(datapath):
+    """The seeded third of the acceptance differential: nontrivial
+    temperature/top-p draws are token-identical across the mesh-sharded
+    engine, the unsharded engine, and the sequential oracle on every
+    datapath.  Holds because the sampler's PRNG streams are keyed by
+    (seed, position) only and the logit/sample tensors are pinned
+    replicated before the categorical draw — the mesh can change neither
+    the kept set nor the Gumbel bits."""
+    params = init_params(jax.random.key(0), ATTN_CFG)
+    sharded = _engine_tokens(params, ATTN_CFG, datapath, _rules(),
+                             sampling=SAMPLED)
+    local = _engine_tokens(params, ATTN_CFG, datapath, None,
+                           sampling=SAMPLED)
+    ref = sequential_generate(params, ATTN_CFG, PROMPTS,
+                              max_new_tokens=4, max_len=32,
+                              datapath=datapath, sampling=SAMPLED)
+    assert sharded == local == ref, datapath
+    greedy = sequential_generate(params, ATTN_CFG, PROMPTS,
+                                 max_new_tokens=4, max_len=32,
+                                 datapath=datapath)
+    assert sharded != greedy, "sampling degenerated to greedy"
 
 
 def test_kv_pools_sharded_over_model_axis():

@@ -1,0 +1,73 @@
+"""Markdown link checker for the docs CI job.
+
+Walks every ``*.md`` in the repo (skipping dot-directories), extracts
+inline links/images ``[text](target)`` and reference definitions
+``[id]: target``, and verifies that every RELATIVE target resolves to an
+existing file or directory.  External schemes (http/https/mailto) and
+pure in-page anchors are skipped — this job gates the repo's own wiring
+(README architecture map, test/bench pointers), not the internet.
+
+    python tools/check_links.py            # check the whole repo
+    python tools/check_links.py README.md  # or explicit files
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+# inline [text](target) — target ends at the first unescaped ')' or space
+_INLINE = re.compile(r"\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+# reference definitions: [id]: target
+_REFDEF = re.compile(r"^\[[^\]]+\]:\s+(\S+)", re.M)
+_SKIP = ("http://", "https://", "mailto:", "ftp://")
+
+
+def _strip_code(text: str) -> str:
+    """Drop fenced and inline code spans — links there are examples."""
+    text = re.sub(r"```.*?```", "", text, flags=re.S)
+    return re.sub(r"`[^`]*`", "", text)
+
+
+def targets(md: Path) -> list[str]:
+    text = _strip_code(md.read_text(encoding="utf-8"))
+    return _INLINE.findall(text) + _REFDEF.findall(text)
+
+
+def check(files: list[Path]) -> list[str]:
+    broken = []
+    for md in files:
+        for tgt in targets(md):
+            if tgt.startswith(_SKIP) or tgt.startswith("#"):
+                continue
+            path = tgt.split("#", 1)[0]
+            if not path:
+                continue
+            resolved = (ROOT / path.lstrip("/")) if path.startswith("/") \
+                else (md.parent / path)
+            if not resolved.exists():
+                broken.append(f"{md.relative_to(ROOT)}: broken link "
+                              f"-> {tgt}")
+    return broken
+
+
+def main() -> int:
+    if len(sys.argv) > 1:
+        files = [Path(a).resolve() for a in sys.argv[1:]]
+    else:
+        files = [p for p in sorted(ROOT.rglob("*.md"))
+                 if not any(part.startswith(".")
+                            for part in p.relative_to(ROOT).parts)]
+    broken = check(files)
+    for b in broken:
+        print(b)
+    print(f"checked {len(files)} markdown files: "
+          f"{'FAIL' if broken else 'ok'} ({len(broken)} broken)")
+    return 1 if broken else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
