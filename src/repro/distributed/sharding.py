@@ -26,8 +26,8 @@ from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
 __all__ = ["MeshRules", "mesh_rules", "current_rules", "constrain",
-           "logical_to_spec", "named_sharding", "serving_mapping",
-           "fit_spec", "shard_tree"]
+           "constrain_tree", "logical_to_spec", "named_sharding",
+           "serving_mapping", "fit_spec", "shard_tree"]
 
 
 @dataclass(frozen=True)
@@ -161,6 +161,31 @@ def constrain(x: jax.Array, *logical) -> jax.Array:
     spec = rules.resolve(logical)
     return jax.lax.with_sharding_constraint(
         x, NamedSharding(rules.mesh, spec))
+
+
+def constrain_tree(tree, logical_tree):
+    """:func:`constrain` over a pytree of activations.
+
+    ``logical_tree`` mirrors ``tree`` with logical-axis tuples (or None
+    = leave that leaf unconstrained) at the leaves — the same convention
+    as ``cache_specs``/``paged_cache_specs``.  The chunked paged prefill
+    uses this to keep its carried recurrent state on the SAME pins as
+    the paged cache's state rows (channel axes over "model"), so the
+    chunk-to-chunk carry never round-trips through a resharded float
+    reduction and mesh-on prefill stays token-identical to mesh-off.
+    Identity when no rules are active.
+    """
+    if current_rules() is None:
+        return tree
+
+    def is_spec_leaf(s):
+        return s is None or (isinstance(s, tuple) and
+                             all(a is None or isinstance(a, str)
+                                 for a in s))
+
+    return jax.tree.map(
+        lambda lg, x: x if lg is None else constrain(x, *lg),
+        logical_tree, tree, is_leaf=is_spec_leaf)
 
 
 def logical_to_spec(logical) -> P:

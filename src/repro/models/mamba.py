@@ -24,7 +24,7 @@ from repro.configs.base import ModelConfig
 from .common import DATA, MODEL, dense_apply, dense_init, dense_spec
 
 __all__ = ["mamba_init", "mamba_spec", "mamba_train", "mamba_decode",
-           "mamba_state_init"]
+           "mamba_prefill_chunk", "mamba_state_init"]
 
 
 def mamba_init(key: jax.Array, cfg: ModelConfig) -> dict:
@@ -96,6 +96,25 @@ def _conv_full(p, x, cfg):
     return (out + p["conv_b"]).astype(x.dtype)
 
 
+def _conv_window(p, xcat, cfg):
+    """Causal depthwise conv over a chunk WITH its left context.
+
+    xcat: (B, (k-1) + C, din) — the carried conv tail (k-1 pre-conv
+    inputs, zeros at sequence start) concatenated before the chunk's
+    pre-conv inputs.  Returns (B, C, din).  Term order matches
+    :func:`_conv_full` exactly, so a zero tail reproduces its
+    zero-padded output bit for bit.
+    """
+    k = cfg.mamba_d_conv
+    w = p["conv_w"].astype(jnp.float32)
+    xf = xcat.astype(jnp.float32)
+    C = xf.shape[1] - (k - 1)
+    out = xf[:, k - 1:] * w[:, k - 1]
+    for i in range(1, k):
+        out = out + xf[:, k - 1 - i:k - 1 - i + C] * w[:, k - 1 - i]
+    return (out + p["conv_b"]).astype(xcat.dtype)
+
+
 def _assoc_combine(left, right):
     a1, b1 = left
     a2, b2 = right
@@ -146,6 +165,63 @@ def mamba_train(p: dict, u: jax.Array, cfg: ModelConfig):
     if S < kc:
         conv_tail = jnp.pad(conv_tail, ((0, 0), (kc - S, 0), (0, 0)))
     return out, (hT, conv_tail)
+
+
+def mamba_prefill_chunk(p: dict, u: jax.Array, cfg: ModelConfig,
+                        state: dict, valid: jax.Array | None = None):
+    """Chunk-resumable prefill: one chunk of the prompt through the
+    per-token recurrence, consuming and emitting decode-shaped state.
+
+    u: (B, C, D); state: ``{"h": (B, din, n) f32, "conv": (B, k-1, din)}``
+    (zeros at sequence start — the same shapes :func:`mamba_decode`
+    carries); ``valid``: optional (B, C) bool, True on real prompt
+    tokens.  Masked positions leave the state untouched (``where`` on
+    the carry is an exact select), so right-padded lanes in a batched
+    prefill bucket freeze at their last real token.
+
+    The scan is PER-TOKEN (not the train path's chunked associative
+    scan): splitting a prompt at any boundary and threading the state
+    replays the identical per-step ops, so chunked prefill is
+    bit-identical to one-shot prefill for every chunk size — the
+    order-exactness the serving differentials (batched == sequential on
+    sc_int) stand on.  Training keeps :func:`mamba_train`'s log-depth
+    associative scan; this path trades that depth for exactness, which
+    is the right trade at serving prompt lengths.
+    """
+    B, C, _ = u.shape
+    k = cfg.mamba_d_conv
+    x_raw, z = _split_xz(p, u, cfg)
+    xcat = jnp.concatenate([state["conv"].astype(x_raw.dtype), x_raw],
+                           axis=1)
+    x = jax.nn.silu(_conv_window(p, xcat, cfg))
+    dt, bm, cm = _ssm_params(p, x, cfg)
+    a = -jnp.exp(p["a_log"])                              # (din, n)
+    xf = x.astype(jnp.float32)
+
+    def step(h, inp):
+        xt, dtt, bt, ct, mt = inp                         # (B,din),(B,n),(B,)
+        da = jnp.exp(dtt[..., None] * a)                  # (B,din,n)
+        hn = h * da + (dtt * xt)[..., None] * bt[:, None, :]
+        hn = jnp.where(mt[:, None, None], hn, h)
+        y = jnp.einsum("bdn,bn->bd", hn, ct)
+        return hn, y
+
+    vmask = jnp.ones((B, C), bool) if valid is None else valid
+    tm = lambda t: jnp.moveaxis(t, 1, 0)                  # time-major
+    hT, ys = jax.lax.scan(step, state["h"],
+                          (tm(xf), tm(dt), tm(bm), tm(cm), tm(vmask)))
+    y = jnp.moveaxis(ys, 0, 1)
+    y = y + xf * p["d_skip"]
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(u.dtype)
+    out = dense_apply(p["out_proj"], y, cfg.quant)
+    # conv tail: the k-1 pre-conv inputs ENDING at each lane's last valid
+    # token.  xcat positions [nvalid, nvalid + k - 1) are exactly those
+    # rows (old tail when nvalid == 0), so a gather both advances and
+    # freezes correctly — no second masking pass.
+    nvalid = jnp.sum(vmask, axis=1).astype(jnp.int32)     # (B,)
+    idx = nvalid[:, None] + jnp.arange(k - 1, dtype=jnp.int32)[None, :]
+    new_tail = jnp.take_along_axis(xcat, idx[:, :, None], axis=1)
+    return out, {"h": hT, "conv": new_tail.astype(state["conv"].dtype)}
 
 
 def mamba_state_init(cfg: ModelConfig, batch: int, dtype=jnp.float32):

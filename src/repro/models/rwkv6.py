@@ -25,8 +25,10 @@ from .common import (DATA, MODEL, dense_apply, dense_init, dense_spec,
                      norm_apply, norm_init, norm_spec)
 
 __all__ = ["rwkv_tmix_init", "rwkv_tmix_spec", "rwkv_tmix_train",
-           "rwkv_tmix_decode", "rwkv_cmix_init", "rwkv_cmix_spec",
-           "rwkv_cmix_train", "rwkv_cmix_decode", "rwkv_state_init"]
+           "rwkv_tmix_decode", "rwkv_tmix_prefill_chunk",
+           "rwkv_cmix_init", "rwkv_cmix_spec", "rwkv_cmix_train",
+           "rwkv_cmix_decode", "rwkv_cmix_prefill_chunk",
+           "rwkv_state_init"]
 
 _MIX_NAMES = ("w", "k", "v", "r", "g")
 
@@ -105,26 +107,36 @@ def _decay(p, xw):
     return jnp.exp(-jnp.exp(p["w0"] + ww.astype(jnp.float32)))  # (B,S,D) in (0,1)
 
 
-def _wkv_scan(r, k, v, w, u, s0):
+def _wkv_scan(r, k, v, w, u, s0, valid=None):
     """r,k,v: (B,S,H,Dh) bf16; w f32 decay; s0: (B,H,Dh,Dh) f32 state.
 
     The recurrence is head-local: carry and time-major inputs are pinned
     head-sharded ("model") so every step is collective-free.  r/k/v ride
     in the compute dtype (the f32 state/decay carry the numerics); the
     emitted y is compute-dtype too — halves the scan's residual traffic.
+
+    ``valid``: optional (B, S) bool — masked steps leave the carried
+    state untouched (``where`` is an exact select), so right-padded
+    prefill lanes freeze at their last real token while the per-token
+    op sequence on valid tokens stays bit-identical to the unmasked
+    scan (chunk-split invariance for serving prefill).
     """
     def step(s, inp):
-        rt, kt, vt, wt = inp                               # (B,H,Dh) f32
+        rt, kt, vt, wt, mt = inp                           # (B,H,Dh) f32
         kv = kt[..., :, None] * vt[..., None, :]           # (B,H,K,V)
         y = jnp.einsum("bhk,bhkv->bhv", rt, s + u[None, :, :, None] * kv)
-        s = wt[..., :, None] * s + kv
+        s = jnp.where(mt[:, None, None, None],
+                      wt[..., :, None] * s + kv, s)
         return s, y
 
     # note: no sharding constraints here — the recurrence inherits the
     # head sharding of r/k/v/w and stays collective-free (verified by HLO
     # attribution; forcing constraints only added layout copies — §Perf)
     tm = lambda t: jnp.moveaxis(t, 1, 0).astype(jnp.float32)  # time-major
-    sT, ys = jax.lax.scan(step, s0, (tm(r), tm(k), tm(v), tm(w)))
+    if valid is None:
+        valid = jnp.ones(r.shape[:2], bool)
+    sT, ys = jax.lax.scan(step, s0, (tm(r), tm(k), tm(v), tm(w),
+                                     jnp.moveaxis(valid, 1, 0)))
     return jnp.moveaxis(ys, 0, 1), sT                      # (B,S,H,Dh), state
 
 
@@ -181,7 +193,7 @@ def _wkv_chunked(r, k, v, w, u, s0, chunk: int):
     return y, sT
 
 
-def _tmix_core(p, x, sx, cfg, s0):
+def _tmix_core(p, x, sx, cfg, s0, valid=None, force_scan=False):
     B, S, d = x.shape
     h, dh = _n_heads(cfg), cfg.rwkv_head_dim
     xw, xk, xv, xr, xg = _ddlerp(p, x, sx)
@@ -190,10 +202,13 @@ def _tmix_core(p, x, sx, cfg, s0):
     k = dense_apply(p["wk"], xk, cfg.quant).reshape(B, S, h, dh)
     v = dense_apply(p["wv"], xv, cfg.quant).reshape(B, S, h, dh)
     g = jax.nn.silu(dense_apply(p["wg"], xg, cfg.quant))
-    if cfg.rwkv_wkv_impl == "chunked" and S > 1:
+    # force_scan: serving prefill must be chunk-split-invariant, which
+    # only the token recurrence is (the GLA form's intra-chunk matmul
+    # tree depends on where the chunk boundaries fall)
+    if cfg.rwkv_wkv_impl == "chunked" and S > 1 and not force_scan:
         y, sT = _wkv_chunked(r, k, v, w, p["u"], s0, cfg.rwkv_chunk)
     else:
-        y, sT = _wkv_scan(r, k, v, w, p["u"], s0)
+        y, sT = _wkv_scan(r, k, v, w, p["u"], s0, valid=valid)
     y = y.reshape(B, S, d)
     y = norm_apply(p["ln_x"], y, "layernorm", eps=1e-5, groups=h)
     out = dense_apply(p["wo"], (y * g).astype(x.dtype), cfg.quant)
@@ -216,6 +231,34 @@ def rwkv_tmix_decode(p: dict, x: jax.Array, cfg: ModelConfig, state: dict):
     sx = state["shift"][:, None, :].astype(x.dtype) - x
     out, sT = _tmix_core(p, x, sx, cfg, state["s"])
     return out, {"s": sT, "shift": x[:, 0, :]}
+
+
+def _last_valid(x, valid, fallback):
+    """Each lane's last valid token row (the carried token-shift state);
+    lanes with no valid token this chunk keep ``fallback``."""
+    if valid is None:
+        return x[:, -1, :]
+    nv = jnp.sum(valid, axis=1).astype(jnp.int32)          # (B,)
+    idx = jnp.clip(nv - 1, 0, x.shape[1] - 1)
+    rows = jnp.take_along_axis(x, idx[:, None, None], axis=1)[:, 0]
+    return jnp.where((nv > 0)[:, None], rows, fallback.astype(x.dtype))
+
+
+def rwkv_tmix_prefill_chunk(p: dict, x: jax.Array, cfg: ModelConfig,
+                            state: dict, valid: jax.Array | None = None):
+    """Chunk-resumable tmix prefill, consuming and emitting the decode
+    state shapes (``{"s": (B,H,Dh,Dh) f32, "shift": (B,D)}`` — zeros at
+    sequence start).  The wkv recurrence runs as the PER-TOKEN scan
+    regardless of ``cfg.rwkv_wkv_impl`` so splitting a prompt at any
+    chunk boundary replays the identical op sequence (bit-exact — see
+    :func:`_wkv_scan`); ``valid`` masks right-padded positions, freezing
+    both the wkv state and the token-shift carry at the last real token.
+    """
+    prev = jnp.concatenate([state["shift"][:, None, :].astype(x.dtype),
+                            x[:, :-1, :]], axis=1)
+    out, sT = _tmix_core(p, x, prev - x, cfg, state["s"], valid=valid,
+                         force_scan=True)
+    return out, {"s": sT, "shift": _last_valid(x, valid, state["shift"])}
 
 
 # ---------------------------------------------------------------------------
@@ -260,6 +303,17 @@ def rwkv_cmix_train(p: dict, x: jax.Array, cfg: ModelConfig):
 def rwkv_cmix_decode(p: dict, x: jax.Array, cfg: ModelConfig, state: dict):
     sx = state["shift"][:, None, :].astype(x.dtype) - x
     return _cmix_core(p, x, sx, cfg), {"shift": x[:, 0, :]}
+
+
+def rwkv_cmix_prefill_chunk(p: dict, x: jax.Array, cfg: ModelConfig,
+                            state: dict, valid: jax.Array | None = None):
+    """Chunk-resumable cmix prefill: the only cross-token coupling is
+    the one-token shift, so carrying ``{"shift": (B, D)}`` makes any
+    chunk split bit-exact (everything else is per-token elementwise)."""
+    prev = jnp.concatenate([state["shift"][:, None, :].astype(x.dtype),
+                            x[:, :-1, :]], axis=1)
+    return (_cmix_core(p, x, prev - x, cfg),
+            {"shift": _last_valid(x, valid, state["shift"])})
 
 
 def rwkv_state_init(cfg: ModelConfig, batch: int, dtype=jnp.float32):

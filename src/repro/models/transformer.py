@@ -23,7 +23,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import LayerSpec, ModelConfig
 from repro.core.sc_layers import sc_residual_quant
-from repro.distributed.sharding import constrain
+from repro.distributed.sharding import constrain, constrain_tree
 
 from . import attention, ffn, mamba, moe, rwkv6
 from .common import (DATA, MODEL, add_leading_none, dense_apply, dense_init,
@@ -193,19 +193,37 @@ def _apply_position(lp: dict, spec: LayerSpec, x, cfg: ModelConfig,
             if mode == "prefill":
                 centry = {"k": k, "v": v}
     elif spec.mixer == "mamba":
+        # prefill (exact AND chunked-paged) runs the chunk-resumable
+        # per-token recurrence: exact prefill is the one-chunk special
+        # case (zero state in), so chunked serving prefill is bit-equal
+        # to it at every split.  Train keeps the associative scan.
         if mode == "decode":
             dx, centry = mamba.mamba_decode(lp["mixer"], h, cfg, cstate)
+        elif mode == "paged_prefill":
+            dx, centry = mamba.mamba_prefill_chunk(
+                lp["mixer"], h, cfg,
+                {"h": cstate["h"], "conv": cstate["conv"]},
+                valid=cstate["valid"])
+        elif mode == "prefill":
+            dx, centry = mamba.mamba_prefill_chunk(
+                lp["mixer"], h, cfg,
+                mamba.mamba_state_init(cfg, h.shape[0], h.dtype))
         else:
-            dx, (hT, conv) = mamba.mamba_train(lp["mixer"], h, cfg)
-            if mode == "prefill":
-                centry = {"h": hT, "conv": conv}
+            dx, _ = mamba.mamba_train(lp["mixer"], h, cfg)
     elif spec.mixer == "rwkv6":
         if mode == "decode":
             dx, centry = rwkv6.rwkv_tmix_decode(lp["mixer"], h, cfg, cstate)
+        elif mode == "paged_prefill":
+            dx, centry = rwkv6.rwkv_tmix_prefill_chunk(
+                lp["mixer"], h, cfg,
+                {"s": cstate["s"], "shift": cstate["shift"]},
+                valid=cstate["valid"])
+        elif mode == "prefill":
+            dx, centry = rwkv6.rwkv_tmix_prefill_chunk(
+                lp["mixer"], h, cfg,
+                rwkv6.rwkv_state_init(cfg, h.shape[0], h.dtype))
         else:
-            dx, (sT, xlast) = rwkv6.rwkv_tmix_train(lp["mixer"], h, cfg)
-            if mode == "prefill":
-                centry = {"s": sT, "shift": xlast}
+            dx, _ = rwkv6.rwkv_tmix_train(lp["mixer"], h, cfg)
     else:
         raise ValueError(spec.mixer)
     x = repl(_residual_add(x, repl(dx), lp, "alpha_r1", cfg))
@@ -222,10 +240,19 @@ def _apply_position(lp: dict, spec: LayerSpec, x, cfg: ModelConfig,
                 dx2, cshift = rwkv6.rwkv_cmix_decode(
                     lp["ffn"], h2, cfg, cstate["cmix"] if cstate else None)
                 centry = dict(centry, cmix=cshift)
+            elif mode == "paged_prefill":
+                dx2, cshift = rwkv6.rwkv_cmix_prefill_chunk(
+                    lp["ffn"], h2, cfg, cstate["cmix"],
+                    valid=cstate["valid"])
+                centry = dict(centry, cmix=cshift)
+            elif mode == "prefill":
+                dx2, cshift = rwkv6.rwkv_cmix_prefill_chunk(
+                    lp["ffn"], h2, cfg,
+                    {"shift": jnp.zeros((h2.shape[0], cfg.d_model),
+                                        h2.dtype)})
+                centry = dict(centry, cmix=cshift)
             else:
-                dx2, xlast2 = rwkv6.rwkv_cmix_train(lp["ffn"], h2, cfg)
-                if mode == "prefill":
-                    centry = dict(centry, cmix={"shift": xlast2})
+                dx2, _ = rwkv6.rwkv_cmix_train(lp["ffn"], h2, cfg)
         x = repl(_residual_add(x, repl(dx2), lp, "alpha_r2", cfg))
     return x, aux, centry
 
@@ -457,18 +484,24 @@ def prefill(params: dict, batch: dict, cfg: ModelConfig):
 # ``(num_pages, page, Hkv, Dh)`` (which request owns which page is the
 # engine's page table, serving/paging.py); recurrent positions hold
 # per-slot state ROWS ``(max_slots + 1, ...)`` — row ``max_slots`` is the
-# scratch lane that padded decode lanes read/write so bucket padding
-# never touches a live request.  All entries carry the usual leading
-# ``n_periods`` axis so the period scan is identical to train/decode.
+# scratch lane that padded lanes read/write so bucket padding never
+# touches a live request: padded DECODE lanes gather/scatter it by slot
+# id, and padded PREFILL lanes scatter their (frozen-at-zero) final
+# state into it.  Prefill never READS the rows — prompt state always
+# starts from zero, so a recycled slot's stale rows are dead by
+# construction.  All entries carry the usual leading ``n_periods`` axis
+# so the period scan is identical to train/decode.
 
 
 def supports_paged_prefill(cfg: ModelConfig) -> bool:
-    """Chunked paged prefill covers pure-attention periods; recurrent
-    mixers carry sequential state across the prompt and are prefilled
-    per-request at exact length instead (engine fallback)."""
-    return (cfg.frontend == "none"
-            and all(s.mixer == "attn" and s.ffn != "rwkv_cmix"
-                    for s in cfg.period))
+    """Chunked paged prefill covers EVERY decoder period: attention
+    positions scatter whole K/V pages, recurrent positions (mamba /
+    rwkv6 / rwkv_cmix) thread chunk-resumable state — conv tail +
+    SSM/WKV state + token shift — across chunk boundaries, order-exact
+    (see mamba_prefill_chunk / rwkv_tmix_prefill_chunk).  Only frontend
+    archs (vision/audio stubs) are excluded: their inputs aren't token
+    prompts, so they take the exact-length per-request path."""
+    return cfg.frontend == "none"
 
 
 def init_paged_cache(cfg: ModelConfig, max_slots: int, num_pages: int,
@@ -579,53 +612,128 @@ def paged_decode_step(params: dict, cache: dict, tokens: jax.Array,
     return logits[:, 0], {"periods": new_periods}
 
 
+def _group_state_entry(cfg: ModelConfig, spec: LayerSpec, G: int,
+                       dtype) -> dict:
+    """Zero recurrent state for the G prefill lanes (decode row shapes,
+    batch axis = lane)."""
+    e = {}
+    if spec.mixer == "mamba":
+        e.update(mamba.mamba_state_init(cfg, G, dtype))
+    elif spec.mixer == "rwkv6":
+        e.update(rwkv6.rwkv_state_init(cfg, G, dtype))
+    if spec.ffn == "rwkv_cmix":
+        e["cmix"] = {"shift": jnp.zeros((G, cfg.d_model), dtype)}
+    return e
+
+
+def _group_state_specs(cfg: ModelConfig, idx: int) -> dict:
+    """Logical pins for the carried group state, DERIVED from
+    :func:`paged_cache_specs` by dropping the leading period axis (the
+    rows axis becomes the lane axis, replicated either way) — same
+    channel axes over "model", one source of truth, so the
+    chunk-to-chunk carry keeps the cache's sharding and mesh-on prefill
+    stays token-identical to mesh-off."""
+    entry = paged_cache_specs(cfg)["periods"][f"p{idx}"]
+    return jax.tree.map(lambda lg: tuple(lg)[1:],
+                        {k: v for k, v in entry.items()
+                         if k not in _POOL_KEYS},
+                        is_leaf=lambda s: isinstance(s, tuple))
+
+
 def paged_prefill(params: dict, cache: dict, tokens: jax.Array,
                   page_tables: jax.Array, prompt_lens: jax.Array,
-                  cfg: ModelConfig, *, chunk: int):
-    """Batched *chunked* prefill writing straight into the decode page
-    layout (attention-only periods; see :func:`supports_paged_prefill`).
+                  cfg: ModelConfig, *, chunk: int,
+                  slot_ids: jax.Array | None = None):
+    """Batched *chunked* prefill writing straight into the decode cache
+    layout, for EVERY decoder period type (:func:`supports_paged_prefill`).
 
     tokens: (G, L) right-padded prompts (L a multiple of ``chunk``,
     ``chunk`` a multiple of the page size); page_tables: (G, maxp)
     covering at least ceil(L/page) entries (padding = trash page);
-    prompt_lens: (G,).  Each chunk runs the full period scan then dies —
-    peak logits cost is (G, chunk, V) never (G, L, V), and attention per
-    chunk touches only the pages written so far.  Returns
-    (last_token_logits (G, V), new cache).
+    prompt_lens: (G,); slot_ids: (G,) int32 slot of each lane (padding =
+    the scratch row) — required when the period holds recurrent state.
+    Each chunk runs the full period scan then dies — peak logits cost is
+    (G, chunk, V) never (G, L, V).  Attention positions scatter the
+    chunk's K/V as whole pages and attend over the pages written so far;
+    recurrent positions consume the carried state (conv tail + SSM/WKV
+    state + token shifts, zeros before the first chunk) and emit the
+    updated carry, with right-padded positions masked so each lane's
+    state freezes at its last real token (``valid`` select — exact, so
+    any chunk size reproduces the one-shot prefill bit for bit).  The
+    final carries scatter into the per-slot state rows at the end, all
+    inside the caller's jit.  Returns (last_token_logits (G, V), new
+    cache).
     """
     assert supports_paged_prefill(cfg), \
-        "chunked paged prefill needs a pure-attention period"
+        "paged prefill serves token prompts only (frontend == none)"
     G, L = tokens.shape
     assert L % chunk == 0, (L, chunk)
     table = params["embed"]["table"]
     h_last = jnp.zeros((G, cfg.d_model), table.dtype)
-    periods = cache["periods"]
+    # split the cache: shared page pools ride the chunk loop; per-slot
+    # state rows are untouched until the final scatter (prompt state
+    # starts from zero, never from a previous occupant's rows)
+    pools, rows = {}, {}
+    for i in range(len(cfg.period)):
+        pe = cache["periods"][f"p{i}"]
+        pools[f"p{i}"] = {k: v for k, v in pe.items() if k in _POOL_KEYS}
+        rows[f"p{i}"] = {k: v for k, v in pe.items()
+                         if k not in _POOL_KEYS}
+    has_state = len(jax.tree_util.tree_leaves(rows)) > 0
+    if has_state and slot_ids is None:
+        raise ValueError("recurrent periods need slot_ids to place their "
+                         "carried state rows")
+    one = {f"p{i}": _group_state_entry(cfg, spec, G, table.dtype)
+           for i, spec in enumerate(cfg.period)}
+    gstate = jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (cfg.n_periods,) + a.shape), one)
 
     for c in range(L // chunk):
         start = c * chunk
         xc = jnp.take(table, tokens[:, start:start + chunk], axis=0)
         xc = constrain(xc, None, None, None)
+        valid = (start + jnp.arange(chunk, dtype=jnp.int32))[None, :] \
+            < prompt_lens[:, None]                        # (G, chunk)
 
-        def period_body(x, inp, start=start):
-            pp, cper = inp
-            new_entries = {}
+        def period_body(x, inp, start=start, valid=valid):
+            pp, cper, gsper = inp
+            new_pools, new_gs = {}, {}
             for idx, spec in enumerate(cfg.period):
                 cst = dict(cper[f"p{idx}"])
+                cst.update(gsper[f"p{idx}"])
                 cst["page_tables"] = page_tables
                 cst["start"] = start
+                cst["valid"] = valid
                 x, _, ce = _apply_position(pp[f"p{idx}"], spec, x, cfg,
                                            None, "paged_prefill", cst, None)
-                new_entries[f"p{idx}"] = ce
-            return x, new_entries
+                new_pools[f"p{idx}"] = {k: v for k, v in ce.items()
+                                        if k in _POOL_KEYS}
+                new_gs[f"p{idx}"] = constrain_tree(
+                    {k: v for k, v in ce.items() if k not in _POOL_KEYS},
+                    _group_state_specs(cfg, idx))
+            return x, (new_pools, new_gs)
 
-        xc, periods = jax.lax.scan(period_body, xc,
-                                   (params["periods"], periods))
+        xc, (pools, gstate) = jax.lax.scan(
+            period_body, xc, (params["periods"], pools, gstate))
         # keep the hidden state of each request's last real token
         last = prompt_lens - 1 - start
-        rows = jnp.take_along_axis(
+        rws = jnp.take_along_axis(
             xc, jnp.clip(last, 0, chunk - 1)[:, None, None], axis=1)[:, 0]
         h_last = jnp.where(((last >= 0) & (last < chunk))[:, None],
-                           rows, h_last)
+                           rws, h_last)
+
+    # scatter each lane's final carry into its slot's state rows (padded
+    # lanes land in the scratch row, whose contents no live request
+    # reads)
+    new_periods = {}
+    for i in range(len(cfg.period)):
+        entry = dict(pools[f"p{i}"])
+        for name, rv in rows[f"p{i}"].items():
+            gv = gstate[f"p{i}"][name]
+            entry[name] = jax.tree.map(
+                lambda full, g: full.at[:, slot_ids].set(
+                    g.astype(full.dtype)), rv, gv)
+        new_periods[f"p{i}"] = entry
 
     h = norm_apply(params["final_norm"], h_last[:, None, :], cfg.norm)
     logits = dense_apply(params["lm_head"], h, cfg.quant)[:, 0]
@@ -633,7 +741,7 @@ def paged_prefill(params: dict, cache: dict, tokens: jax.Array,
     # same vocab-axis pin as paged_decode_step: sampling the first
     # generated token must see mesh-invariant logit rows
     logits = constrain(logits, None, "model")
-    return logits, {"periods": periods}
+    return logits, {"periods": new_periods}
 
 
 # ---------------------------------------------------------------------------

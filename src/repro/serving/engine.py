@@ -14,11 +14,17 @@ Execution model (vLLM-style, scaled to this zoo):
   forward for the whole batch, mixed progress handled by per-slot
   lengths/page tables.  Recurrent mixers (mamba/rwkv) keep per-slot
   state rows gathered/scattered by slot id inside the same step.
-* **Chunked prefill.**  Pure-attention archs prefill admitted requests
-  as one padded batch, chunk by chunk, directly into the page pools
-  (``paged_prefill``); recurrent archs fall back to exact-length
-  per-request prefill (their prompt state is order-exact) whose outputs
-  are scattered into the paged layout.
+* **Chunked prefill — one path for every arch.**  Admitted requests
+  prefill as one padded batch, chunk by chunk, directly into the page
+  pools (``paged_prefill``).  Attention positions scatter whole K/V
+  pages; recurrent positions (mamba/rwkv6) thread chunk-resumable state
+  (conv tail + SSM/WKV state + token shifts) across chunk boundaries
+  and scatter the final carry into their per-slot rows, all inside the
+  same jitted call.  The recurrence runs per-token during prefill, so
+  any chunk size reproduces the exact-length result bit for bit —
+  order-exactness is preserved, it no longer costs a second datapath.
+  ``prefill_mode="exact"`` keeps the old per-request exact-length
+  fallback alive as a DEBUG ORACLE only.
 * **Bucketed shapes.**  The decode step is traced per (slot-bucket,
   page-bucket) — both padded to powers of two — so jax recompiles only
   when a bucket boundary is crossed, not on every admission/eviction.
@@ -124,8 +130,13 @@ class ServeEngine:
                  max_len: int = 256, bsn_backend: str | None = None,
                  page_size: int = 16, num_pages: int | None = None,
                  prefill_chunk: int = 64, datapath: str = "qat",
-                 mesh_rules: MeshRules | None = None):
+                 mesh_rules: MeshRules | None = None,
+                 prefill_mode: str = "chunked"):
         assert not cfg.is_encoder, "encoders are served via forward()"
+        if prefill_mode not in ("chunked", "exact"):
+            raise ValueError(f"prefill_mode must be 'chunked' or 'exact' "
+                             f"(debug oracle), got {prefill_mode!r}")
+        self.prefill_mode = prefill_mode
         if bsn_backend is not None \
                 and bsn_backend not in kernel_dispatch.BACKENDS:
             raise ValueError(f"bsn_backend must be one of "
@@ -220,9 +231,10 @@ class ServeEngine:
         return nxt, cache
 
     def _prefill_batched_fn(self, params, cache, tokens, tables, lens,
-                            samp, *, chunk, do_sample):
+                            slot_ids, samp, *, chunk, do_sample):
         logits, cache = paged_prefill(params, cache, tokens, tables,
-                                      lens, self.cfg, chunk=chunk)
+                                      lens, self.cfg, chunk=chunk,
+                                      slot_ids=slot_ids)
         nxt = sample_tokens(logits, lens, samp,
                             self.cfg.vocab_size) if do_sample \
             else greedy_tokens(logits, self.cfg.vocab_size)
@@ -296,18 +308,20 @@ class ServeEngine:
             group.append((slot, req))
         if not group:
             return
-        reqs = [r for _, r in group]
-        if supports_paged_prefill(self.cfg):
-            self._prefill_group(reqs)
+        if supports_paged_prefill(self.cfg) \
+                and self.prefill_mode == "chunked":
+            self._prefill_group(group)
         else:
-            for r in reqs:
+            for _, r in group:
                 self._prefill_one(r)
 
-    def _prefill_group(self, reqs: list[Request]):
+    def _prefill_group(self, group: list[tuple[int, Request]]):
         """Batched chunked prefill: one padded (G, L) bucket.  Like the
         decode step, every shape is a pow2 bucket (group size, prompt
         length, table width) so admission retraces only on bucket
-        changes; padded lanes are all-trash tables + zero lengths."""
+        changes; padded lanes are all-trash tables + zero lengths +
+        the scratch state row."""
+        reqs = [r for _, r in group]
         plens = [len(r.prompt) for r in reqs]
         G = pad_pow2(len(reqs), hi=self.max_slots)
         L = pad_pow2(max(plens), lo=self.page_size)
@@ -317,16 +331,19 @@ class ServeEngine:
         tokens = np.zeros((G, L), np.int32)
         tables = np.full((G, width), TRASH_PAGE, np.int32)
         lens = np.zeros((G,), np.int32)
-        for g, r in enumerate(reqs):
+        slot_ids = np.full((G,), self.max_slots, np.int32)   # scratch row
+        for g, (slot, r) in enumerate(group):
             tokens[g, :plens[g]] = r.prompt
             tables[g] = r._table.padded(width)
             lens[g] = plens[g]
+            slot_ids[g] = slot
         samp = pack_sampling([r.sampling for r in reqs], pad_to=G)
         do_sample = any(not r.sampling.greedy for r in reqs)
         with self._scope():
             nxt, self.cache = self._prefill_batched(
                 self.params, self.cache, jnp.asarray(tokens),
-                jnp.asarray(tables), jnp.asarray(lens), samp, chunk=chunk,
+                jnp.asarray(tables), jnp.asarray(lens),
+                jnp.asarray(slot_ids), samp, chunk=chunk,
                 do_sample=do_sample)
         for g, r in enumerate(reqs):
             r.generated.append(int(nxt[g]))
@@ -345,8 +362,13 @@ class ServeEngine:
             r.done = True
 
     def _prefill_one(self, req: Request):
-        """Exact-length fallback (recurrent mixers need order-exact
-        prompt state); outputs are scattered into the paged layout."""
+        """Exact-length per-request prefill + eager scatter into the
+        paged layout.  No longer any arch's hot path: the chunked paged
+        prefill is order-exact for recurrent mixers too.  Kept as (a)
+        the ``prefill_mode="exact"`` DEBUG ORACLE — it reproduces the
+        chunked path token for token, which the tests assert — and (b)
+        the route for frontend archs, whose inputs aren't token
+        prompts (``supports_paged_prefill`` is False)."""
         toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
         samp = pack_sampling([req.sampling])
         with self._scope():

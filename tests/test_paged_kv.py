@@ -11,12 +11,11 @@ Three layers of guarantees, bottom-up:
    (length-masked reads).
 3. The differential theorem the engine stands on: batched paged decode
    == per-request sequential decode (the seed execution model),
-   token for token, across the zoo's layer types and datapaths.
-   Quantized archs pin the SC datapaths (``sc_int`` is bit-exact by
-   integer accumulation); recurrent archs run the unquantized twin —
-   LSQ fake-quant puts logits on a discrete grid where exact ties are
-   broken by float summation order (same convention as
-   test_substrate's grad-accum test).
+   token for token, across the zoo's layer types and datapaths —
+   recurrent mixers included, through the chunked state-carrying paged
+   prefill (prefill runs the per-token recurrence, so any chunk split
+   is bit-identical to the exact-length call; ``sc_int`` is bit-exact
+   by integer accumulation on every arch).
 """
 
 import os
@@ -30,10 +29,10 @@ import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
-from repro.configs import get_arch
+from repro.configs import LayerSpec, get_arch
 from repro.models import init_params
-from repro.serving import (PageAllocator, PageTable, ServeEngine,
-                           sequential_generate)
+from repro.serving import (PageAllocator, PageTable, SamplingParams,
+                           ServeEngine, sequential_generate)
 from repro.serving.paging import TRASH_PAGE, pad_pow2, pages_needed
 
 SCALE = dict(d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
@@ -42,11 +41,25 @@ SCALE = dict(d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
 CFG = get_arch("granite-3-2b").scaled(n_layers=2, **SCALE)
 PROMPTS = [[1, 2, 3], [4, 5, 6, 7], [8, 9], [10, 11, 12, 13, 14]]
 
+# the recurrent zoo, quantized (sc_int is bit-exact on these too now
+# that prefill is order-exact at every chunk split)
+RECURRENT = {
+    "mamba": get_arch("jamba-1.5-large-398b").scaled(
+        period=(LayerSpec("mamba", "dense"),), n_layers=2, **SCALE,
+        mamba_d_state=8),
+    "rwkv6": get_arch("rwkv6-7b").scaled(
+        n_layers=2, **{**SCALE, "n_kv_heads": 4}),
+    "jamba": get_arch("jamba-1.5-large-398b").scaled(
+        n_layers=8, **SCALE, mamba_d_state=8, n_experts=4,
+        n_experts_per_tok=2, moe_capacity_factor=2.0),
+}
 
-def _run_engine(params, cfg, prompts, max_new=5, **kw):
+
+def _run_engine(params, cfg, prompts, max_new=5, sampling=None, **kw):
     eng = ServeEngine(params, cfg, **kw)
-    for p in prompts:
-        eng.submit(p, max_new_tokens=max_new)
+    sps = sampling if sampling is not None else [None] * len(prompts)
+    for p, sp in zip(prompts, sps):
+        eng.submit(p, max_new_tokens=max_new, sampling=sp)
     done = eng.run_to_completion()
     assert len(done) == len(prompts)
     return [r.generated for r in sorted(done, key=lambda r: r.rid)]
@@ -265,24 +278,175 @@ def test_batched_equals_sequential_mixed_lengths_and_buckets():
     assert got == ref
 
 
-def test_batched_equals_sequential_recurrent_archs():
-    """rwkv6 (tmix/cmix state rows) and the jamba hybrid (mamba + attn +
-    MoE) through the exact-length prefill fallback.  Unquantized twin:
-    see module docstring."""
-    noq = {"quant": CFG.quant.with_mode("none")}
-    rwkv = get_arch("rwkv6-7b").scaled(
-        n_layers=2, **{**SCALE, "n_kv_heads": 4}, **noq)
-    jamba = get_arch("jamba-1.5-large-398b").scaled(
-        n_layers=8, **SCALE, mamba_d_state=8, n_experts=4,
-        n_experts_per_tok=2, moe_capacity_factor=2.0, **noq)
-    prompts = PROMPTS[:3]
-    for cfg in (rwkv, jamba):
+@pytest.mark.parametrize("datapath", ["qat", "sc_int", "sc_int_approx"])
+@pytest.mark.parametrize("arch", sorted(RECURRENT))
+def test_chunked_recurrent_batched_equals_sequential(arch, datapath):
+    """The tentpole differential: mamba, rwkv6 and the jamba hybrid now
+    prefill through the SAME batched chunked paged path as attention
+    (no exact-length fallback), and stay token-identical to the
+    sequential oracle on every datapath.  Holds because prefill runs
+    the per-token recurrence with carried state — any chunk split
+    replays the identical op sequence, so even sc_int's lattice ties
+    break the same way on both sides."""
+    cfg = RECURRENT[arch]
+    params = init_params(jax.random.key(0), cfg)
+    got = _run_engine(params, cfg, PROMPTS[:3], max_new=4, max_slots=2,
+                      max_len=32, page_size=8, datapath=datapath)
+    ref = sequential_generate(params, cfg, PROMPTS[:3], max_new_tokens=4,
+                              max_len=32, datapath=datapath)
+    assert got == ref, (arch, datapath)
+
+
+def test_chunked_recurrent_sampled_matches_sequential():
+    """Seeded stochastic decode over the chunked recurrent prefill: the
+    (seed, position) streams don't care how the prompt was chunked."""
+    sampling = [SamplingParams(temperature=0.9, top_p=0.9, seed=3 + i)
+                for i in range(3)]
+    for arch in ("rwkv6", "jamba"):
+        cfg = RECURRENT[arch]
         params = init_params(jax.random.key(0), cfg)
-        got = _run_engine(params, cfg, prompts, max_new=4, max_slots=2,
-                          max_len=32, page_size=8)
-        ref = sequential_generate(params, cfg, prompts, max_new_tokens=4,
-                                  max_len=32)
-        assert got == ref, cfg.name
+        got = _run_engine(params, cfg, PROMPTS[:3], max_new=4,
+                          sampling=sampling, max_slots=2, max_len=32,
+                          page_size=8)
+        ref = sequential_generate(params, cfg, PROMPTS[:3],
+                                  max_new_tokens=4, max_len=32,
+                                  sampling=sampling)
+        greedy = sequential_generate(params, cfg, PROMPTS[:3],
+                                     max_new_tokens=4, max_len=32)
+        assert got == ref, arch
+        assert got != greedy, f"{arch}: sampling degenerated to greedy"
+
+
+def test_chunked_equals_exact_prefill_oracle():
+    """``prefill_mode="exact"`` (the retired per-request exact-length
+    fallback, kept as a debug oracle) and the default chunked path
+    produce identical tokens — multi-chunk prompts included."""
+    prompts = [[(3 * i + j) % 64 for j in range(n)]
+               for i, n in enumerate([23, 1, 17, 9])]
+    for arch in ("mamba", "rwkv6"):
+        cfg = RECURRENT[arch]
+        params = init_params(jax.random.key(0), cfg)
+        kw = dict(max_new=4, max_slots=2, max_len=32, page_size=4,
+                  prefill_chunk=4)
+        chunked = _run_engine(params, cfg, prompts, **kw)
+        exact = _run_engine(params, cfg, prompts, prefill_mode="exact",
+                            **kw)
+        assert chunked == exact, arch
+
+
+def test_mamba_conv_tail_across_chunk_boundaries():
+    """PR 2's pad-then-crop fix covered one exact-length call; a prompt
+    split into chunks must reproduce the IDENTICAL mixer output at every
+    boundary (the carried conv tail supplies the k-1 pre-conv inputs the
+    next chunk's conv window needs).  Chunk sizes 1, page_size, and
+    prompt_len-1, compared bitwise — output, SSM state and tail."""
+    from repro.models.mamba import (mamba_init, mamba_prefill_chunk,
+                                    mamba_state_init)
+    cfg = RECURRENT["mamba"]
+    p = mamba_init(jax.random.key(3), cfg)
+    B, S = 2, 13                        # S coprime with every chunk size
+    x = jax.random.normal(jax.random.key(4), (B, S, cfg.d_model),
+                          jnp.float32)
+    y_ref, st_ref = mamba_prefill_chunk(p, x, cfg,
+                                        mamba_state_init(cfg, B))
+    page_size = 8
+    for csize in (1, page_size, S - 1):
+        st = mamba_state_init(cfg, B)
+        ys = []
+        for a in range(0, S, csize):
+            y, st = mamba_prefill_chunk(p, x[:, a:a + csize], cfg, st)
+            ys.append(y)
+        y_split = jnp.concatenate(ys, axis=1)
+        assert np.array_equal(np.asarray(y_split), np.asarray(y_ref)), \
+            csize
+        for k in ("h", "conv"):
+            assert np.array_equal(np.asarray(st[k]),
+                                  np.asarray(st_ref[k])), (csize, k)
+
+
+def _poison_pools(eng, keep):
+    """Set every KV pool position NOT in ``keep`` (a set of (page, off)
+    pairs) to a huge finite value, in every layer."""
+    periods = {}
+    for key, entry in eng.cache["periods"].items():
+        entry = dict(entry)
+        for name in ("k_pages", "v_pages"):
+            if name in entry:
+                pool = np.asarray(entry[name]).copy()
+                mask = np.ones(pool.shape[1:3], bool)   # (num_pages, page)
+                for pg, off in keep:
+                    mask[pg, off] = False
+                pool[:, mask] = 3e4
+                entry[name] = jnp.asarray(pool)
+        periods[key] = entry
+    eng.cache = {"periods": periods}
+
+
+@pytest.mark.parametrize("prefill_mode", ["chunked", "exact"])
+def test_padded_tail_kv_positions_never_attend(prefill_mode):
+    """The tail KV page holds non-prompt positions (zero-padded by the
+    exact path's ``_scatter_prefill``, garbage-written by the chunked
+    path), and padded table lanes point at the trash page.  None of
+    them may EVER contribute to attention, for any plen % page_size:
+    poison every non-prompt pool position with a huge finite value
+    before AND after prefill — a mask leak would blow the logits up and
+    flip tokens vs the oracle."""
+    params = init_params(jax.random.key(0), CFG)
+    page = 4
+    for plen in (1, 3, 4, 6, 8):        # covers every residue mod 4
+        # the second, shorter prompt pads its page table relative to the
+        # first inside the shared prefill bucket, so the chunked gather
+        # really reads (masked) trash-page rows during prefill
+        prompts = [[(2 * plen + j) % 64 for j in range(plen)], [9, 10]]
+        eng = ServeEngine(params, CFG, max_slots=2, max_len=16,
+                          page_size=page, prefill_mode=prefill_mode)
+        for p in prompts:
+            eng.submit(p, max_new_tokens=4)
+        _poison_pools(eng, keep=set())  # prefill must mask trash reads
+        eng._admit()
+        keep = {(r._table.pages[t // page], t % page)
+                for r in eng.slots if r is not None
+                for t in range(len(r.prompt))}
+        _poison_pools(eng, keep)        # decode must mask the tail pad
+        done = eng.run_to_completion()
+        got = [r.generated for r in sorted(done, key=lambda r: r.rid)]
+        ref = sequential_generate(params, CFG, prompts,
+                                  max_new_tokens=4, max_len=16)
+        assert got == ref, (prefill_mode, plen)
+
+
+def test_boundary_prompts_recurrent_match_sequential():
+    """The prompt-length boundary on the recurrent chunked path: a
+    prompt of max_len-1 tokens must emit exactly one token then stop,
+    max_len-2 exactly two — `_check_done` after prefill must agree with
+    sequential_generate's loop condition, same as the attention
+    configs."""
+    max_len = 16
+    prompts = [list(range(1, max_len - 1)),        # max_len - 2 tokens
+               list(range(1, max_len))]            # max_len - 1 tokens
+    for arch in ("mamba", "rwkv6"):
+        cfg = RECURRENT[arch]
+        params = init_params(jax.random.key(0), cfg)
+        got = _run_engine(params, cfg, prompts, max_new=8, max_slots=2,
+                          max_len=max_len, page_size=4)
+        ref = sequential_generate(params, cfg, prompts, max_new_tokens=8,
+                                  max_len=max_len)
+        assert got == ref, arch
+        assert [len(g) for g in got] == [2, 1], arch
+
+
+def test_recurrent_preemption_under_page_pressure():
+    """Preempting a request on the recurrent path requeues it through
+    the chunked prefill again (state rows rebuilt from zero); greedy
+    decode is deterministic so tokens still match the oracle."""
+    cfg = RECURRENT["jamba"]
+    params = init_params(jax.random.key(0), cfg)
+    prompts = [[1, 2, 3, 4, 5, 6, 7], [8, 9, 10, 11, 12, 13]]
+    got = _run_engine(params, cfg, prompts, max_new=12, max_slots=2,
+                      max_len=24, page_size=8, num_pages=5)
+    ref = sequential_generate(params, cfg, prompts, max_new_tokens=12,
+                              max_len=24)
+    assert got == ref
 
 
 def test_sharded_serving_subprocess():

@@ -21,7 +21,7 @@ fewer devices everything here skips.
 import jax
 import pytest
 
-from repro.configs import get_arch
+from repro.configs import LayerSpec, get_arch
 from repro.launch.mesh import make_serving_mesh, serving_rules
 from repro.models import init_params
 from repro.serving import (SamplingParams, ServeEngine,
@@ -41,6 +41,13 @@ ATTN_CFG = get_arch("granite-3-2b").scaled(n_layers=2, **SCALE)
 MOE_CFG = get_arch("dbrx-132b").scaled(
     n_layers=2, **SCALE, n_experts=4, n_experts_per_tok=2,
     moe_capacity_factor=2.0)
+# the hybrid: mamba (d_inner=128 shards 4-way) + attn + MoE in one
+# period — the union of everything the chunked prefill has to carry
+JAMBA_CFG = get_arch("jamba-1.5-large-398b").scaled(
+    n_layers=8, **SCALE, mamba_d_state=8, n_experts=4,
+    n_experts_per_tok=2, moe_capacity_factor=2.0)
+RWKV_CFG = get_arch("rwkv6-7b").scaled(n_layers=2, **SCALE,
+                                       rwkv_head_dim=16)
 PROMPTS = [[1, 2, 3], [4, 5, 6, 7], [8, 9]]
 
 
@@ -50,9 +57,10 @@ def _rules():
 
 
 def _engine_tokens(params, cfg, datapath, rules, max_new=4,
-                   sampling=None):
+                   sampling=None, prefill_mode="chunked"):
     eng = ServeEngine(params, cfg, max_slots=2, max_len=32, page_size=8,
-                      datapath=datapath, mesh_rules=rules)
+                      datapath=datapath, mesh_rules=rules,
+                      prefill_mode=prefill_mode)
     sps = sampling or [None] * len(PROMPTS)
     for p, sp in zip(PROMPTS, sps):
         eng.submit(p, max_new_tokens=max_new, sampling=sp)
@@ -139,18 +147,50 @@ def test_uneven_heads_degrade_to_replicated():
             sorted(done, key=lambda r: r.rid)] == ref
 
 
-def test_recurrent_arch_sharded_matches_sequential():
-    """rwkv6 takes the exact-length prefill fallback whose eager scatter
-    runs OUTSIDE the jit: under a mesh its output must be re-pinned to
-    the init-time cache layout (or the next decode step loses donation
-    and copies the whole cache).  Unquantized twin — same float-tie
-    convention as test_paged_kv's recurrent differential."""
-    cfg = get_arch("rwkv6-7b").scaled(
-        n_layers=2, **SCALE,
-        quant=get_arch("rwkv6-7b").quant.with_mode("none"))
-    params = init_params(jax.random.key(0), cfg)
-    got = _engine_tokens(params, cfg, "qat", _rules())
-    ref = sequential_generate(params, cfg, PROMPTS, max_new_tokens=4,
+@pytest.mark.parametrize("datapath", ["qat", "sc_int", "sc_int_approx"])
+def test_recurrent_chunked_mesh_on_equals_mesh_off(datapath):
+    """The tentpole's mesh third: the jamba hybrid (mamba + attn + MoE)
+    prefills through the batched chunked paged path UNDER the mesh —
+    the carried chunk state keeps the paged_cache_specs pins (channel
+    axes over "model", constrain_tree), so sharded == unsharded ==
+    sequential, token for token, on every datapath."""
+    params = init_params(jax.random.key(0), JAMBA_CFG)
+    sharded = _engine_tokens(params, JAMBA_CFG, datapath, _rules())
+    local = _engine_tokens(params, JAMBA_CFG, datapath, None)
+    ref = sequential_generate(params, JAMBA_CFG, PROMPTS,
+                              max_new_tokens=4, max_len=32,
+                              datapath=datapath)
+    assert sharded == local, datapath
+    assert local == ref, datapath
+
+
+def test_recurrent_sampled_mesh_on_equals_mesh_off():
+    """Seeded stochastic decode over the chunked recurrent prefill,
+    mesh-on vs mesh-off vs oracle (rwkv6: tmix + cmix state rows)."""
+    params = init_params(jax.random.key(0), RWKV_CFG)
+    sharded = _engine_tokens(params, RWKV_CFG, "qat", _rules(),
+                             sampling=SAMPLED)
+    local = _engine_tokens(params, RWKV_CFG, "qat", None,
+                           sampling=SAMPLED)
+    ref = sequential_generate(params, RWKV_CFG, PROMPTS,
+                              max_new_tokens=4, max_len=32,
+                              sampling=SAMPLED)
+    greedy = sequential_generate(params, RWKV_CFG, PROMPTS,
+                                 max_new_tokens=4, max_len=32)
+    assert sharded == local == ref
+    assert sharded != greedy, "sampling degenerated to greedy"
+
+
+def test_recurrent_exact_oracle_sharded_matches_sequential():
+    """prefill_mode="exact" (debug oracle): the per-request exact-length
+    prefill's eager scatter runs OUTSIDE the jit — under a mesh its
+    output must be re-pinned to the init-time cache layout (or the next
+    decode step loses donation and copies the whole cache).  Kept on
+    the retired path so the oracle stays trustworthy."""
+    params = init_params(jax.random.key(0), RWKV_CFG)
+    got = _engine_tokens(params, RWKV_CFG, "qat", _rules(),
+                         prefill_mode="exact")
+    ref = sequential_generate(params, RWKV_CFG, PROMPTS, max_new_tokens=4,
                               max_len=32)
     assert got == ref
 
