@@ -14,10 +14,15 @@ container the Pallas numbers are interpret-mode (correctness-path)
 timings, not TPU performance — the point is the relative shape: the
 approximate kernel touches ``width`` counts instead of sorting
 ``width * BSL`` bits.
+
+``--smoke`` also runs the ``block_r`` autotune sweep per (rows, width)
+shape (repro.kernels.autotune) and writes everything to
+``BENCH_approx_bsn.json`` at the repo root.
 """
 
 from __future__ import annotations
 
+import pathlib
 import time
 
 import jax
@@ -27,9 +32,13 @@ import numpy as np
 from repro.core import hwmodel, si
 from repro.core.bsn import (ApproxBSNSpec, StageSpec, SubSampleSpec,
                             default_approx_spec)
-from repro.kernels import dispatch, ops
+from repro.kernels import autotune, dispatch, ops
 
 from .bench_bsn_cost import measured_mse
+
+# artifact lands at the repo root regardless of cwd (committable,
+# comparable across PRs) — same policy as bench_serving.py
+ROOT = pathlib.Path(__file__).resolve().parents[1]
 
 # ResNet18 conv accumulation widths (3x3 kernels x in-channels)
 RESNET_LAYERS = {"3x3x64": 576, "3x3x128": 1152,
@@ -166,6 +175,19 @@ def kernel_sweep(rows_batch: int = 256) -> list[tuple]:
     return out
 
 
+def autotune_sweep(smoke: bool = False) -> dict:
+    """Row-block autotune per (rows, width) shape: the winners land in
+    the artifact next to the timing rows, so successive PRs compare
+    tile choices, not just end-to-end microseconds."""
+    iters = 3 if smoke else 10
+    out = {}
+    for rows_b, width in ((64, 128), (64, 512), (256, 1152)):
+        spec = default_approx_spec(width, IN_BSL)
+        out[f"autotune_r{rows_b}_w{width}"] = autotune.autotune_approx_bsn(
+            rows_b, spec, block_rs=(64, 128, 256), iters=iters)
+    return out
+
+
 def main() -> None:
     import argparse
     import json
@@ -173,13 +195,15 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="kernel sweep only (fast); write "
                          "BENCH_approx_bsn.json")
-    ap.add_argument("--out", default="BENCH_approx_bsn.json")
+    ap.add_argument("--out", default=str(ROOT / "BENCH_approx_bsn.json"))
     args = ap.parse_args()
     rows = kernel_sweep(rows_batch=64) if args.smoke else run()
     if args.smoke:
+        results = {n: {"us_per_call": us, "derived": d}
+                   for n, us, d in rows}
+        results.update(autotune_sweep(smoke=True))
         with open(args.out, "w") as f:
-            json.dump({n: {"us_per_call": us, "derived": d}
-                       for n, us, d in rows}, f, indent=2, sort_keys=True)
+            json.dump(results, f, indent=2, sort_keys=True)
         print(f"# wrote {args.out}")
     for r in rows:
         print(",".join(str(x) for x in r))

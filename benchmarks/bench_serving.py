@@ -17,7 +17,12 @@ the 8-way speedup, plus seeded-sampled vs greedy decode throughput —
 the cost of the in-jit top-k/top-p filter and categorical draw — plus
 recurrent prefill tokens/sec: mamba/rwkv6 through the batched chunked
 paged path vs the retired exact-length per-request fallback;
-``--recurrent`` runs just that slice, the CI matrix smoke); ``--sharded``
+``--recurrent`` runs just that slice, the CI matrix smoke — plus the
+paged-attention kernel differential: decode tokens/sec with the
+attention backend pinned to the Pallas kernel vs the XLA gather
+reference, and per-shape autotune winners from repro.kernels.autotune;
+``--paged-kernel`` runs just that slice).  The artifact is written to
+the REPO ROOT so it is committable.  ``--sharded``
 additionally measures the mesh-sharded engine against the unsharded one
 on the same prompts and writes ``BENCH_serving_sharded.json``.  On
 forced host devices the sharded path is expected to be SLOWER (every
@@ -29,6 +34,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import pathlib
 import time
 
 import jax
@@ -36,9 +42,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import LayerSpec, get_arch
+from repro.kernels import autotune
 from repro.models import decode_step, init_params, prefill
 from repro.serving import SamplingParams, ServeEngine
 from repro.serving.engine import _pad_prefill_cache
+
+# bench artifacts land at the REPO ROOT regardless of cwd, so the smoke
+# JSONs are stable, committable and comparable across PRs (they used to
+# exist only as CI artifacts — the perf trajectory was empty)
+ROOT = pathlib.Path(__file__).resolve().parents[1]
 
 MAX_LEN = 64
 PAGE = 16
@@ -69,10 +81,11 @@ MIXES = {
 
 
 def _engine_tps(params, n_req, prompts_fn, max_new, cfg=None,
-                rules=None, sampled=False) -> float:
+                rules=None, sampled=False, attn_backend=None) -> float:
     eng = ServeEngine(params, cfg if cfg is not None else CFG,
                       max_slots=min(n_req, 8), max_len=MAX_LEN,
-                      page_size=PAGE, mesh_rules=rules)
+                      page_size=PAGE, mesh_rules=rules,
+                      attn_backend=attn_backend)
     # seeded stochastic decode (vs the default greedy): same jitted step,
     # plus the in-jit filter + categorical draw per token
     sps = [SamplingParams(temperature=0.8, top_p=0.9, top_k=32, seed=i)
@@ -154,6 +167,51 @@ def run_recurrent(smoke: bool = False):
     return rows, results
 
 
+def run_paged(smoke: bool = False):
+    """Paged-attention kernel vs the XLA gather/scatter reference:
+    engine decode tokens/sec with the attention backend pinned each way,
+    plus the per-shape autotune winners (split-K width for decode,
+    q-block rows for chunked prefill).  On this CPU container the
+    kernel leg runs the Pallas interpreter, so kernel_vs_xla tracks
+    dispatch + interpreter overhead (expected << 1); on a TPU the same
+    rows time Mosaic.  The schema is stable either way — that is what
+    the root-level artifact is for."""
+    params = init_params(jax.random.key(0), CFG)
+    n_req, max_new = 8, (8 if smoke else 16)
+    rows, results = [], {}
+    tps_k = _engine_tps(params, n_req, MIXES["uniform8"], max_new,
+                        attn_backend="pallas-interpret")
+    tps_r = _engine_tps(params, n_req, MIXES["uniform8"], max_new,
+                        attn_backend="reference")
+    key = "paged_attn_decode_uniform8_n8"
+    results[key] = {"kernel_tps": tps_k, "xla_gather_tps": tps_r,
+                    "kernel_vs_xla": tps_k / tps_r,
+                    "kernel_backend": "pallas-interpret"}
+    rows.append((key, 1e6 / tps_k,
+                 f"kernel_tps={tps_k:.1f} xla_gather_tps={tps_r:.1f} "
+                 f"kernel_vs_xla={tps_k / tps_r:.2f}x"))
+    # autotune sweeps at the serving shapes (and one longer-context
+    # decode shape where split-K has room to matter)
+    iters = 3 if smoke else 10
+    hkv, gq = CFG.n_kv_heads, CFG.n_heads // CFG.n_kv_heads
+    dh = CFG.d_model // CFG.n_heads
+    tune = {
+        "decode_serving": autotune.autotune_paged_decode(
+            8, hkv, gq, dh, PAGE, MAX_LEN // PAGE, iters=iters),
+        "decode_long": autotune.autotune_paged_decode(
+            8, hkv, gq, dh, PAGE, 16, splits=(1, 2, 4, 8), iters=iters),
+        "prefill_chunk": autotune.autotune_paged_prefill(
+            4, 32, hkv, gq, dh, PAGE, 32, block_qs=(8, 16, 32),
+            iters=iters),
+    }
+    results["paged_attn_autotune"] = tune
+    for name, t in tune.items():
+        rows.append((f"paged_autotune_{name}",
+                     t["us_per_call"][t["winner"]],
+                     f"winner={t['winner']}"))
+    return rows, results
+
+
 def run(smoke: bool = False) -> list[tuple]:
     params = init_params(jax.random.key(0), CFG)
     max_new = 8 if smoke else 16
@@ -183,6 +241,10 @@ def run(smoke: bool = False) -> list[tuple]:
     rrows, rresults = run_recurrent(smoke=smoke)
     rows += rrows
     results.update(rresults)
+    # ...and so do the paged-kernel differential + autotune winners
+    prows, presults = run_paged(smoke=smoke)
+    rows += prows
+    results.update(presults)
     return rows if not smoke else (rows, results)
 
 
@@ -237,20 +299,27 @@ def main() -> None:
                     help="recurrent prefill only: mamba + rwkv6 through "
                          "the engine, chunked-paged vs the exact "
                          "fallback (the CI matrix smoke)")
+    ap.add_argument("--paged-kernel", action="store_true",
+                    help="paged-attention kernel slice only: kernel vs "
+                         "XLA-gather decode tokens/sec + autotune "
+                         "sweeps (the CI matrix smoke)")
     ap.add_argument("--out", default=None)
     ap.add_argument("--min-speedup", type=float, default=0.0,
                     help="fail unless batched/sequential >= this at every "
                          "measured point (CI gate; local bar is 3x at 8 "
                          "slots, CI uses margin for runner noise)")
     args = ap.parse_args()
-    if args.sharded and args.recurrent:
-        ap.error("--sharded and --recurrent are mutually exclusive")
-    if args.recurrent and (args.out or args.min_speedup):
-        ap.error("--recurrent ignores --out/--min-speedup; run the full "
-                 "--smoke to record/gate")
+    if sum((args.sharded, args.recurrent, args.paged_kernel)) > 1:
+        ap.error("--sharded / --recurrent / --paged-kernel are "
+                 "mutually exclusive")
+    if (args.recurrent or args.paged_kernel) \
+            and (args.out or args.min_speedup):
+        ap.error("--recurrent/--paged-kernel ignore --out/--min-speedup; "
+                 "run the full --smoke to record/gate")
     if args.out is None:
-        args.out = "BENCH_serving_sharded.json" if args.sharded \
+        name = "BENCH_serving_sharded.json" if args.sharded \
             else "BENCH_serving.json"
+        args.out = str(ROOT / name)
     if args.sharded:
         rows, results = run_sharded(smoke=args.smoke)
         with open(args.out, "w") as f:
@@ -260,11 +329,12 @@ def main() -> None:
         for n, us, d in rows:
             print(f"{n},{us:.1f},{d}")
         return
-    if args.recurrent:
-        # standalone recurrent-serving smoke (the CI matrix exercises
-        # the chunked path on pinned AND latest jax); the full --smoke
-        # run is what records these numbers into BENCH_serving.json
-        rows, _ = run_recurrent(smoke=args.smoke)
+    if args.recurrent or args.paged_kernel:
+        # standalone CI-matrix smokes (exercised on pinned AND latest
+        # jax); the full --smoke run is what records these numbers into
+        # BENCH_serving.json
+        runner = run_paged if args.paged_kernel else run_recurrent
+        rows, _ = runner(smoke=args.smoke)
         print("name,us_per_call,derived")
         for n, us, d in rows:
             print(f"{n},{us:.1f},{d}")

@@ -9,20 +9,31 @@ approx_bsn      — fused approximate progressive-sorting BSN (Fig 10b)
                   plus the chunked temporal-reuse variant (Fig 12); the
                   paper's proposed hot path.
 dispatch        — backend selection (pallas / pallas-interpret /
-                  reference) for the approximate adder; see README.md.
+                  reference) for the approximate adder and the paged
+                  attention; see README.md.
 flash_attention — fused online-softmax attention (serving path),
                   motivated by the §Perf memory-term attribution.
+paged_attention — flash-decoding paged decode + chunked paged prefill
+                  reading KV pages through the page table (the
+                  ServeEngine hot path; ROADMAP's raw-speed lever).
+autotune        — block-size sweeps (split-K width, q blocks, BSN row
+                  blocks) recorded into the root BENCH JSONs.
 """
 
 # NOTE: dispatch.approx_bsn is deliberately NOT re-exported at package
 # level — the name would shadow the kernels.approx_bsn submodule.  Call
 # dispatch.approx_bsn or the core.bsn.approx_bsn front door instead.
-from . import dispatch, ops, ref
+# Ditto dispatch.paged_attn_* vs the kernels.paged_attention submodule.
+from . import autotune, dispatch, ops, ref
 from .approx_bsn import approx_bsn_pallas, approx_bsn_temporal_pallas
-from .dispatch import backend_scope
+from .dispatch import attn_backend_scope, backend_scope
 from .flash_attention import flash_attention_pallas
 from .ops import bsn_sort, ternary_matmul
+from .paged_attention import (paged_attn_decode_pallas,
+                              paged_attn_prefill_pallas)
 
-__all__ = ["dispatch", "ops", "ref", "bsn_sort", "ternary_matmul",
-           "approx_bsn_pallas", "approx_bsn_temporal_pallas",
-           "backend_scope", "flash_attention_pallas"]
+__all__ = ["autotune", "dispatch", "ops", "ref", "bsn_sort",
+           "ternary_matmul", "approx_bsn_pallas",
+           "approx_bsn_temporal_pallas", "backend_scope",
+           "attn_backend_scope", "flash_attention_pallas",
+           "paged_attn_decode_pallas", "paged_attn_prefill_pallas"]

@@ -1,21 +1,26 @@
 """Kernel dispatch: pick pallas / pallas-interpret / reference per call.
 
-Single policy point for how the approximate-BSN adder executes:
+Single policy point for how the approximate-BSN adder AND the paged
+attention execute:
 
 * ``"pallas"``            — compiled Mosaic kernel (real TPU).
 * ``"pallas-interpret"``  — same kernel through the Pallas interpreter;
   bit-for-bit the compiled semantics, runs anywhere.  This is what the
   differential tests and this CPU container use.
-* ``"reference"``         — the pure-JAX count oracle in core/bsn.py
-  (also the right answer for tiny shapes where a pallas_call is all
+* ``"reference"``         — the pure-JAX oracle (core/bsn.py counts for
+  the BSN; the XLA gather/scatter paged attention in kernels/ref.py —
+  also the right answer for tiny shapes where a pallas_call is all
   overhead).
 
 Resolution order for every call: explicit ``backend=`` argument, then an
-active :func:`backend_scope` / :func:`set_default_backend` override, then
-auto (TPU -> ``pallas``; kernel-worthy row count elsewhere ->
-``pallas-interpret``; otherwise ``reference``).  The decision happens at
-Python trace time, so a scope must wrap the *first* (tracing) call of a
-jitted function — ServeEngine does exactly that.
+active scope / process default (:func:`backend_scope` for the BSN,
+:func:`attn_backend_scope` for paged attention — separate knobs because
+an engine may want the BSN circuit pinned while attention autotunes),
+then auto (TPU + kernel-worthy row count -> ``pallas``; kernel-worthy
+row count elsewhere -> ``pallas-interpret``; otherwise ``reference``).
+The decision happens at Python trace time, so a scope must wrap the
+*first* (tracing) call of a jitted function — ServeEngine does exactly
+that.
 
 ``core.bsn.approx_bsn`` forwards here lazily, so library users reach the
 kernel without importing repro.kernels themselves.
@@ -33,11 +38,15 @@ import numpy as np
 from repro.core.bsn import (ApproxBSNSpec, approx_bsn_counts,
                             spatial_temporal_counts)
 
+from . import ref
 from .approx_bsn import approx_bsn_pallas, approx_bsn_temporal_pallas
+from .paged_attention import (paged_attn_decode_pallas,
+                              paged_attn_prefill_pallas)
 
 __all__ = ["BACKENDS", "select_backend", "set_default_backend",
            "get_default_backend", "backend_scope", "approx_bsn",
-           "spec_stages"]
+           "spec_stages", "attn_backend_scope", "set_attn_backend",
+           "get_attn_backend", "paged_attn_decode", "paged_attn_prefill"]
 
 BACKENDS = ("pallas", "pallas-interpret", "reference")
 
@@ -73,19 +82,27 @@ def backend_scope(backend: str | None) -> Iterator[None]:
 
 
 def select_backend(rows: int, *, backend: str | None = None,
-                   min_rows_for_kernel: int = 8) -> str:
-    """Resolve the backend for a call over ``rows`` independent codes."""
+                   min_rows_for_kernel: int = 8,
+                   default: str | None = None) -> str:
+    """Resolve the backend for a call over ``rows`` independent codes.
+
+    The row threshold applies on EVERY auto-selected backend: below it a
+    pallas_call is all overhead (and ``rows == 0`` is a degenerate grid),
+    so tiny shapes take the reference even on TPU.  ``default`` lets a
+    subsystem supply its own scope value (attention passes the attn
+    scope; the BSN path passes nothing and uses the module default).
+    """
     if backend is None:
-        backend = _default_backend
+        backend = _default_backend if default is None else default
     if backend is not None:
         if backend not in BACKENDS:
             raise ValueError(f"unknown backend {backend!r}")
         return backend
+    if rows < min_rows_for_kernel:
+        return "reference"
     if jax.default_backend() == "tpu":
         return "pallas"
-    if rows >= min_rows_for_kernel:
-        return "pallas-interpret"
-    return "reference"
+    return "pallas-interpret"
 
 
 def spec_stages(spec: ApproxBSNSpec) -> tuple[tuple[int, int, int], ...]:
@@ -111,6 +128,11 @@ def approx_bsn(counts: jax.Array, spec: ApproxBSNSpec, *, cycles: int = 1,
     rows = int(np.prod(batch)) if batch else 1
     chosen = select_backend(rows, backend=backend,
                             min_rows_for_kernel=min_rows_for_kernel)
+    if rows == 0:
+        # zero-size leading batch dim: a pallas_call over 0 rows is a
+        # degenerate grid — the reference returns the empty result with
+        # the right trailing shape/dtype regardless of requested backend
+        chosen = "reference"
 
     if chosen == "reference":
         if cycles == 1:
@@ -130,3 +152,81 @@ def approx_bsn(counts: jax.Array, spec: ApproxBSNSpec, *, cycles: int = 1,
         out = approx_bsn_temporal_pallas(x2, cycles=cycles, **kw)
     out = out[:rows]
     return out.reshape(batch) if batch else out[0]
+
+
+# ---------------------------------------------------------------------------
+# paged attention (serving decode / prefill hot path)
+# ---------------------------------------------------------------------------
+
+_attn_backend: str | None = None
+
+
+def set_attn_backend(backend: str | None) -> None:
+    """Process-wide paged-attention override; ``None`` restores auto."""
+    global _attn_backend
+    if backend is not None and backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}, want one of "
+                         f"{BACKENDS} or None")
+    _attn_backend = backend
+
+
+def get_attn_backend() -> str | None:
+    return _attn_backend
+
+
+@contextlib.contextmanager
+def attn_backend_scope(backend: str | None) -> Iterator[None]:
+    """Pin the paged-attention backend for traced calls (``None`` scopes
+    are no-ops rather than resets, so nested engines compose).  Like
+    :func:`backend_scope` this must wrap the first (tracing) call —
+    ``ServeEngine(attn_backend=...)`` does."""
+    if backend is None:
+        yield
+        return
+    prev = _attn_backend
+    set_attn_backend(backend)
+    try:
+        yield
+    finally:
+        set_attn_backend(prev)
+
+
+def paged_attn_decode(q: jax.Array, k_pages: jax.Array,
+                      v_pages: jax.Array, page_tables: jax.Array,
+                      lengths: jax.Array, *, backend: str | None = None,
+                      num_splits: int = 1,
+                      min_rows_for_kernel: int = 8) -> jax.Array:
+    """Batched one-token paged decode: (S, Hkv, G, D) queries against the
+    (N, page, Hkv, D) pools through (S, maxp) tables, masked by
+    ``lengths``.  Flash-decoding Pallas kernel on the kernel backends,
+    XLA gather oracle (kernels/ref.py) on ``"reference"``."""
+    S, Hkv, G, _ = q.shape
+    chosen = select_backend(S * Hkv * G, backend=backend,
+                            min_rows_for_kernel=min_rows_for_kernel,
+                            default=_attn_backend)
+    if chosen == "reference":
+        return ref.paged_attn_decode_ref(q, k_pages, v_pages,
+                                         page_tables, lengths)
+    return paged_attn_decode_pallas(q, k_pages, v_pages, page_tables,
+                                    lengths, num_splits=num_splits,
+                                    interpret=chosen == "pallas-interpret")
+
+
+def paged_attn_prefill(q: jax.Array, k_pages: jax.Array,
+                       v_pages: jax.Array, page_tables: jax.Array,
+                       start: int, *, backend: str | None = None,
+                       block_q: int = 32,
+                       min_rows_for_kernel: int = 8) -> jax.Array:
+    """One chunk of paged prefill: (G, C, Hkv, Gq, D) queries at
+    positions ``[start, start+C)`` against every page written so far,
+    causal.  Same backend chain as :func:`paged_attn_decode`."""
+    G, C, Hkv, Gq, _ = q.shape
+    chosen = select_backend(G * C * Hkv * Gq, backend=backend,
+                            min_rows_for_kernel=min_rows_for_kernel,
+                            default=_attn_backend)
+    if chosen == "reference":
+        return ref.paged_attn_prefill_ref(q, k_pages, v_pages,
+                                          page_tables, start)
+    return paged_attn_prefill_pallas(q, k_pages, v_pages, page_tables,
+                                     start=start, block_q=block_q,
+                                     interpret=chosen == "pallas-interpret")

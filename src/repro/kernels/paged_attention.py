@@ -1,0 +1,275 @@
+"""Pallas TPU kernels: flash-decoding paged attention (decode + prefill).
+
+The serving engine keeps KV in a flat pool of fixed-size pages
+(serving/paging.py); until now attention over that layout was an
+XLA-level gather — ``jnp.take`` materializes every slot's full
+``maxp * page`` KV window per decode step (ROADMAP names this the
+single biggest raw-speed lever on the decode hot path).  These kernels
+instead read the pages *directly through the page table*: the tables
+and per-slot lengths ride in as scalar-prefetch operands
+(:class:`pltpu.PrefetchScalarGridSpec`), so each grid step's KV
+BlockSpec index map resolves ``page_tables[slot, page_idx]`` in SMEM
+and Mosaic DMAs exactly one physical page into VMEM — HBM traffic is
+q + the live pages + o, never the gathered window.
+
+Decode (`paged_attn_decode_pallas`) is flash-decoding shaped:
+
+* grid ``(S, Hkv, num_splits, pages_per_split)`` — slots and KV heads
+  are parallel; the page axis is split-K.  Each program attends the
+  slot's G grouped q heads (GQA: all q heads sharing a KV head ride in
+  one program, amortizing the page loads) against one page.
+* within a split, pages merge by the online-softmax ``(m, l, acc)``
+  recurrence accumulated in revisited output blocks; across splits the
+  partials merge in one tiny XLA log-sum-exp combine (the flash-
+  decoding merge — splits are embarrassingly parallel on the grid).
+* per-slot ``lengths`` masking: position ``t`` is live iff
+  ``t <= lengths[slot]`` (the just-scattered token sits AT ``lengths``).
+  Pages wholly past the length are skipped (``pl.when``), partially
+  covered pages mask per position, and padded page-table lanes (which
+  point at the reserved trash page) land beyond the length by
+  construction — trash never contributes, which the poison tests prove.
+
+Prefill (`paged_attn_prefill_pallas`) covers the chunk-aligned causal
+window of ``attn_prefill_paged``: q rows are chunk positions
+``[start, start + C)``, KV is every page written so far (pages
+``[0, (start + C) / page)``), masked by ``k_pos <= q_pos``.  Blocks of
+``block_q`` rows carry ``(m, l, acc)`` in VMEM scratch across the page
+loop and normalize on the last page; future pages are skipped per
+q-block (the causal early-exit).
+
+Layout notes for real TPUs: the accumulator blocks put the (small) GQA
+group width G in the lane dimension, so Mosaic pads tiles for the tiny
+serving configs exercised here — fine for correctness-first; the
+autotune sweep (kernels/autotune.py) picks ``num_splits`` / ``block_q``
+per shape.  Interpret mode (`interpret=True`) is bit-for-bit the
+compiled semantics and is what CPU CI runs.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["paged_attn_decode_pallas", "paged_attn_prefill_pallas"]
+
+_NEG = -1e30
+
+
+# ---------------------------------------------------------------------------
+# decode: one query row per slot, split-K over pages
+# ---------------------------------------------------------------------------
+
+def _decode_kernel(pt_ref, len_ref, q_ref, k_ref, v_ref,
+                   m_ref, l_ref, acc_ref, *, page: int, pps: int,
+                   scale: float):
+    s = pl.program_id(0)
+    sp = pl.program_id(2)
+    p = pl.program_id(3)
+
+    @pl.when(p == 0)
+    def _init():                                    # fresh (s, h, split)
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[s]
+    base = (sp * pps + p) * page                    # first position in page
+
+    @pl.when(base <= length)                        # page holds live tokens
+    def _accumulate():
+        q = q_ref[0, 0].astype(jnp.float32)         # (G, D)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)   # (page, D)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        logits = jnp.dot(q, k.T) / scale            # (G, page)
+        pos = base + jax.lax.broadcasted_iota(jnp.int32, (1, page), 1)
+        live = pos <= length                        # (1, page)
+        logits = jnp.where(live, logits, _NEG)
+        m_prev = m_ref[0, 0, 0]                     # (G,)
+        new_m = jnp.maximum(m_prev, jnp.max(logits, axis=-1))
+        w = jnp.where(live, jnp.exp(logits - new_m[:, None]), 0.0)
+        corr = jnp.exp(m_prev - new_m)
+        m_ref[0, 0, 0] = new_m
+        l_ref[0, 0, 0] = l_ref[0, 0, 0] * corr + jnp.sum(w, axis=-1)
+        acc_ref[0, 0, 0] = (acc_ref[0, 0, 0] * corr[:, None]
+                            + jnp.dot(w, v))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("num_splits", "interpret"))
+def paged_attn_decode_pallas(q: jax.Array, k_pages: jax.Array,
+                             v_pages: jax.Array, page_tables: jax.Array,
+                             lengths: jax.Array, *, num_splits: int = 1,
+                             interpret: bool = False) -> jax.Array:
+    """Batched one-token paged decode.
+
+    q: (S, Hkv, G, D) grouped queries; k_pages/v_pages: (N, page, Hkv, D)
+    pools (already holding the new token at position ``lengths``);
+    page_tables: (S, maxp) int32; lengths: (S,) int32.  Returns the
+    attention context (S, Hkv, G, D) in q.dtype.
+    """
+    S, Hkv, G, D = q.shape
+    page = k_pages.shape[1]
+    maxp = page_tables.shape[1]
+    num_splits = max(1, min(num_splits, maxp))
+    pps = -(-maxp // num_splits)                    # pages per split
+    if num_splits * pps != maxp:
+        # pad table lanes with the trash page: they sit past ``lengths``
+        # (which is < maxp*page by construction) so masking kills them
+        page_tables = jnp.pad(page_tables,
+                              ((0, 0), (0, num_splits * pps - maxp)))
+
+    kernel = functools.partial(_decode_kernel, page=page, pps=pps,
+                               scale=math.sqrt(D))
+
+    def kv_index(s, h, sp, p, pt, ln):
+        del ln
+        return (pt[s, sp * pps + p], 0, h, 0)
+
+    m, l, acc = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(S, Hkv, num_splits, pps),
+            in_specs=[
+                pl.BlockSpec((1, 1, G, D),
+                             lambda s, h, sp, p, pt, ln: (s, h, 0, 0)),
+                pl.BlockSpec((1, page, 1, D), kv_index),
+                pl.BlockSpec((1, page, 1, D), kv_index),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, 1, 1, G),
+                             lambda s, h, sp, p, pt, ln: (s, h, sp, 0)),
+                pl.BlockSpec((1, 1, 1, G),
+                             lambda s, h, sp, p, pt, ln: (s, h, sp, 0)),
+                pl.BlockSpec((1, 1, 1, G, D),
+                             lambda s, h, sp, p, pt, ln: (s, h, sp, 0, 0)),
+            ],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((S, Hkv, num_splits, G), jnp.float32),
+            jax.ShapeDtypeStruct((S, Hkv, num_splits, G), jnp.float32),
+            jax.ShapeDtypeStruct((S, Hkv, num_splits, G, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(page_tables, lengths, q, k_pages, v_pages)
+
+    # flash-decoding LSE merge across splits (exact: splits with no live
+    # pages carry m=-1e30, l=0 and weigh zero)
+    m_star = jnp.max(m, axis=2)                       # (S, Hkv, G)
+    alpha = jnp.exp(m - m_star[:, :, None])           # (S, Hkv, splits, G)
+    l_tot = jnp.sum(l * alpha, axis=2)
+    o = jnp.sum(acc * alpha[..., None], axis=2)
+    o = o / jnp.maximum(l_tot, 1e-30)[..., None]
+    return o.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# prefill: chunk-aligned causal window over the pages written so far
+# ---------------------------------------------------------------------------
+
+def _prefill_kernel(pt_ref, q_ref, k_ref, v_ref, o_ref,
+                    m_sc, l_sc, acc_sc, *, bq: int, page: int, n_pg: int,
+                    start: int, scale: float):
+    qi = pl.program_id(1)
+    pg = pl.program_id(2)
+
+    @pl.when(pg == 0)
+    def _init():
+        m_sc[...] = jnp.full_like(m_sc, _NEG)
+        l_sc[...] = jnp.zeros_like(l_sc)
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+
+    q_hi = start + (qi + 1) * bq - 1                # last q position
+
+    @pl.when(pg * page <= q_hi)                     # causal early-exit
+    def _accumulate():
+        q = q_ref[0].astype(jnp.float32)            # (bq, D)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)   # (page, D)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        logits = jnp.dot(q, k.T) / scale            # (bq, page)
+        q_pos = start + qi * bq + jax.lax.broadcasted_iota(
+            jnp.int32, (bq, page), 0)
+        k_pos = pg * page + jax.lax.broadcasted_iota(
+            jnp.int32, (bq, page), 1)
+        causal = k_pos <= q_pos
+        logits = jnp.where(causal, logits, _NEG)
+        m_prev = m_sc[:, 0]                         # (bq,)
+        new_m = jnp.maximum(m_prev, jnp.max(logits, axis=-1))
+        w = jnp.where(causal, jnp.exp(logits - new_m[:, None]), 0.0)
+        corr = jnp.exp(m_prev - new_m)
+        m_sc[:, 0] = new_m
+        l_sc[:, 0] = l_sc[:, 0] * corr + jnp.sum(w, axis=-1)
+        acc_sc[...] = acc_sc[...] * corr[:, None] + jnp.dot(w, v)
+
+    @pl.when(pg == n_pg - 1)
+    def _finalize():
+        o_ref[0] = (acc_sc[...] /
+                    jnp.maximum(l_sc[:, 0], 1e-30)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("start", "block_q", "interpret"))
+def paged_attn_prefill_pallas(q: jax.Array, k_pages: jax.Array,
+                              v_pages: jax.Array, page_tables: jax.Array,
+                              *, start: int, block_q: int = 32,
+                              interpret: bool = False) -> jax.Array:
+    """One prefill chunk attending over the paged cache.
+
+    q: (G, C, Hkv, Gq, D) — chunk ``[start, start + C)`` of each request
+    in the admission group, C a multiple of the page size and ``start``
+    chunk-aligned (both static); pools: (N, page, Hkv, D), already
+    holding the chunk's whole-page K/V scatter; page_tables: (G, maxp).
+    Returns the context (G, C, Hkv, Gq, D) in q.dtype.  The causal mask
+    matches the reference exactly: ``k_pos <= start + q_row``.
+    """
+    G, C, Hkv, Gq, D = q.shape
+    page = k_pages.shape[1]
+    assert C % page == 0 and start % page == 0, (C, page, start)
+    Hq = Hkv * Gq
+    n_pg = (start + C) // page                      # pages seen so far
+    bq = min(block_q, C)
+    if C % bq:
+        bq = math.gcd(C, bq)
+
+    # head-major (G*Hq, C, D): program bh serves q head bh % Hq of
+    # request bh // Hq; its KV head is (bh % Hq) // Gq (GQA grouping as
+    # in flash_attention's kv index map)
+    qh = jnp.moveaxis(q.reshape(G, C, Hq, D), 2, 1).reshape(G * Hq, C, D)
+
+    kernel = functools.partial(_prefill_kernel, bq=bq, page=page,
+                               n_pg=n_pg, start=start,
+                               scale=math.sqrt(D))
+
+    def kv_index(bh, qi, pg, pt):
+        return (pt[bh // Hq, pg], 0, (bh % Hq) // Gq, 0)
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(G * Hq, C // bq, n_pg),
+            in_specs=[
+                pl.BlockSpec((1, bq, D),
+                             lambda bh, qi, pg, pt: (bh, qi, 0)),
+                pl.BlockSpec((1, page, 1, D), kv_index),
+                pl.BlockSpec((1, page, 1, D), kv_index),
+            ],
+            out_specs=pl.BlockSpec((1, bq, D),
+                                   lambda bh, qi, pg, pt: (bh, qi, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((bq, 1), jnp.float32),
+                pltpu.VMEM((bq, 1), jnp.float32),
+                pltpu.VMEM((bq, D), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((G * Hq, C, D), q.dtype),
+        interpret=interpret,
+    )(page_tables, qh, k_pages, v_pages)
+    out = jnp.moveaxis(out.reshape(G, Hq, C, D), 1, 2)
+    return out.reshape(G, C, Hkv, Gq, D)

@@ -7,10 +7,14 @@ the chain  Pallas kernel == this oracle == the silicon datapath  is closed.
 
 from __future__ import annotations
 
+import math
+
 import jax
 import jax.numpy as jnp
 
-__all__ = ["ternary_matmul_ref", "bsn_sort_ref", "si_epilogue_ref"]
+__all__ = ["ternary_matmul_ref", "bsn_sort_ref", "si_epilogue_ref",
+           "gather_pages", "paged_attn_decode_ref",
+           "paged_attn_prefill_ref"]
 
 
 def si_epilogue_ref(sum_q: jax.Array, thresholds_q: jax.Array) -> jax.Array:
@@ -46,6 +50,73 @@ def bsn_sort_ref(bits: jax.Array) -> jax.Array:
     return jnp.sort(bits, axis=-1)[..., ::-1]
 
 
+def gather_pages(pages: jax.Array, page_tables: jax.Array) -> jax.Array:
+    """(N, page, H, Dh) pool + (S, maxp) tables -> (S, maxp*page, H, Dh)."""
+    S, maxp = page_tables.shape
+    _, page, H, Dh = pages.shape
+    g = jnp.take(pages, page_tables.reshape(-1), axis=0)
+    return g.reshape(S, maxp * page, H, Dh)
+
+
+def paged_attn_decode_ref(q: jax.Array, k_pages: jax.Array,
+                          v_pages: jax.Array, page_tables: jax.Array,
+                          lengths: jax.Array, *, pin_logits=None
+                          ) -> jax.Array:
+    """XLA gather/scatter paged decode — the paged-kernel ground truth.
+
+    q: (S, Hkv, G, D); pools: (N, page, Hkv, D) already holding the new
+    token at position ``lengths``; page_tables: (S, maxp) int32;
+    lengths: (S,) int32.  Gathers each slot's full ``maxp*page`` KV
+    window, masks positions past ``lengths`` and softmaxes — positions
+    in padded table lanes point at the trash page but sit past the
+    length, so they mask out identically to the kernel.  ``pin_logits``
+    is a hook for the mesh path's sharding constraint (models/attention
+    pins the KV-head axis to "model" there).  Returns (S, Hkv, G, D)
+    in q.dtype.
+    """
+    S, Hkv, G, D = q.shape
+    kg = gather_pages(k_pages, page_tables)       # (S, T, Hkv, Dh)
+    vg = gather_pages(v_pages, page_tables)
+    T = kg.shape[1]
+    logits = jnp.einsum("shgd,sthd->shgt", q.astype(jnp.float32),
+                        kg.astype(jnp.float32)) / math.sqrt(D)
+    if pin_logits is not None:
+        logits = pin_logits(logits)
+    valid = (jnp.arange(T)[None, :] <= lengths[:, None])    # (S, T)
+    logits = jnp.where(valid[:, None, None, :], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("shgt,sthd->shgd", w, vg.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+def paged_attn_prefill_ref(q: jax.Array, k_pages: jax.Array,
+                           v_pages: jax.Array, page_tables: jax.Array,
+                           start: int, *, pin_logits=None) -> jax.Array:
+    """XLA gather paged prefill — chunk ``[start, start+C)`` attends over
+    every page written so far under the causal mask.
+
+    q: (G, C, Hkv, Gq, D); pools: (N, page, Hkv, D) already holding the
+    chunk's whole-page K/V scatter; page_tables: (G, maxp).  Returns
+    (G, C, Hkv, Gq, D) in q.dtype.
+    """
+    G, C, Hkv, Gq, D = q.shape
+    page = k_pages.shape[1]
+    seen = page_tables[:, :(start + C) // page]   # pages <= this chunk
+    kg = gather_pages(k_pages, seen)              # (G, T, Hkv, Dh)
+    vg = gather_pages(v_pages, seen)
+    T = kg.shape[1]
+    logits = jnp.einsum("sqhgd,sthd->shgqt", q.astype(jnp.float32),
+                        kg.astype(jnp.float32)) / math.sqrt(D)
+    if pin_logits is not None:
+        logits = pin_logits(logits)
+    causal = (jnp.arange(T)[None, :] <=
+              (start + jnp.arange(C))[:, None])   # (C, T)
+    logits = jnp.where(causal[None, None, None, :, :], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("shgqt,sthd->sqhgd", w, vg.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
 def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
                         causal: bool = True) -> jax.Array:
     """Plain softmax attention oracle with GQA broadcast.
@@ -56,7 +127,7 @@ def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
     g = Hq // Hkv
     qg = q.reshape(B, S, Hkv, g, D).astype(jnp.float32)
     logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg,
-                        k.astype(jnp.float32)) / jnp.sqrt(float(D))
+                        k.astype(jnp.float32)) / math.sqrt(D)
     if causal:
         mask = jnp.tril(jnp.ones((S, S), bool))
         logits = jnp.where(mask[None, None, None], logits, -1e30)

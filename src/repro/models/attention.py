@@ -21,6 +21,8 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 from repro.distributed.sharding import constrain, current_rules
+from repro.kernels import dispatch as kernel_dispatch
+from repro.kernels import ref as kernel_ref
 from .common import (DATA, MODEL, apply_rope, dense_apply, dense_init,
                      dense_spec, norm_apply, norm_init, norm_spec)
 
@@ -241,20 +243,21 @@ def attn_decode(p: dict, x: jax.Array, cfg: ModelConfig,
 #
 # The serving engine stores KV in a flat pool of fixed-size pages shared
 # by every request (serving/paging.py owns the allocation); the two
-# functions below are the batched gather/scatter attention over that
-# layout.  Per slot ``s`` position ``t`` lives at physical page
+# functions below scatter the new K/V into the pools and attend over
+# that layout.  Per slot ``s`` position ``t`` lives at physical page
 # ``page_tables[s, t // page]`` offset ``t % page``.  Page-table padding
 # points at the reserved trash page (writes land there harmlessly; reads
 # are masked by ``lengths``), so no cross-request leakage is possible by
 # construction.
-
-
-def _gather_pages(pages: jax.Array, page_tables: jax.Array) -> jax.Array:
-    """(N, page, H, Dh) pool + (S, maxp) tables -> (S, maxp*page, H, Dh)."""
-    S, maxp = page_tables.shape
-    _, page, H, Dh = pages.shape
-    g = jnp.take(pages, page_tables.reshape(-1), axis=0)
-    return g.reshape(S, maxp * page, H, Dh)
+#
+# The attention math itself routes through kernels/dispatch.py: the
+# flash-decoding Pallas kernel (kernels/paged_attention.py) reads pages
+# directly through the table, with the XLA gather/scatter path
+# (kernels/ref.py) as the reference oracle.  Under active mesh rules the
+# constrained reference always serves: the kernel is a single-device
+# program, and the serving contract keeps KV heads device-local over
+# "model", so the per-device work IS the unsharded math — mesh-on is
+# token-identical to the kernel path (tests/test_sharded_serving.py).
 
 
 def attn_decode_paged(p: dict, x: jax.Array, cfg: ModelConfig,
@@ -286,17 +289,16 @@ def attn_decode_paged(p: dict, x: jax.Array, cfg: ModelConfig,
     k_pages = constrain(k_pages, None, None, "model", None)
     v_pages = constrain(v_pages, None, None, "model", None)
 
-    kg = _gather_pages(k_pages, page_tables)                # (S, T, Hkv, Dh)
-    vg = _gather_pages(v_pages, page_tables)
-    T = kg.shape[1]
     qg = q.reshape(S, hkv, g, dh)
-    logits = jnp.einsum("shgd,sthd->shgt", qg.astype(jnp.float32),
-                        kg.astype(jnp.float32)) / math.sqrt(dh)
-    logits = constrain(logits, None, "model", None, None)
-    valid = (jnp.arange(T)[None, :] <= lengths[:, None])    # (S, T)
-    logits = jnp.where(valid[:, None, None, :], logits, -1e30)
-    w = jax.nn.softmax(logits, axis=-1)
-    o = jnp.einsum("shgt,sthd->shgd", w, vg.astype(jnp.float32))
+    if current_rules() is not None:
+        # mesh path: the constrained XLA reference (KV-head axis stays
+        # "model"-sharded through the logits; see module comment above)
+        o = kernel_ref.paged_attn_decode_ref(
+            qg, k_pages, v_pages, page_tables, lengths,
+            pin_logits=lambda lg: constrain(lg, None, "model", None, None))
+    else:
+        o = kernel_dispatch.paged_attn_decode(qg, k_pages, v_pages,
+                                              page_tables, lengths)
     o = o.reshape(S, 1, hq * dh).astype(x.dtype)
     # gather the head-sharded context BEFORE wo: the serving wo is
     # column-parallel, so its hq*dh contraction must be device-local
@@ -341,19 +343,15 @@ def attn_prefill_paged(p: dict, x: jax.Array, cfg: ModelConfig,
     k_pages = constrain(k_pages, None, None, "model", None)
     v_pages = constrain(v_pages, None, None, "model", None)
 
-    seen = page_tables[:, :p0 + npg]                        # pages <= chunk
-    kg = _gather_pages(k_pages, seen)                       # (G, T, Hkv, Dh)
-    vg = _gather_pages(v_pages, seen)
-    T = kg.shape[1]
     qg = q.reshape(G, C, hkv, g, dh)
-    logits = jnp.einsum("sqhgd,sthd->shgqt", qg.astype(jnp.float32),
-                        kg.astype(jnp.float32)) / math.sqrt(dh)
-    logits = constrain(logits, None, "model", None, None, None)
-    causal = (jnp.arange(T)[None, :] <=
-              (start + jnp.arange(C))[:, None])             # (C, T)
-    logits = jnp.where(causal[None, None, None, :, :], logits, -1e30)
-    w = jax.nn.softmax(logits, axis=-1)
-    o = jnp.einsum("shgqt,sthd->sqhgd", w, vg.astype(jnp.float32))
+    if current_rules() is not None:
+        o = kernel_ref.paged_attn_prefill_ref(
+            qg, k_pages, v_pages, page_tables, start,
+            pin_logits=lambda lg: constrain(lg, None, "model",
+                                            None, None, None))
+    else:
+        o = kernel_dispatch.paged_attn_prefill(qg, k_pages, v_pages,
+                                               page_tables, start)
     o = o.reshape(G, C, hq * dh).astype(x.dtype)
     o = constrain(o, None, None, None)      # see attn_decode_paged
     y = dense_apply(p["wo"], o, cfg.quant)

@@ -575,6 +575,10 @@ def paged_decode_step(params: dict, cache: dict, tokens: jax.Array,
     page_tables: (S, maxp) int32.  Padded lanes carry slot_id ==
     max_slots (scratch row), length 0 and trash-page tables.  Returns
     (logits (S, V), new cache); retraces only when S or maxp change.
+
+    Attention inside runs the flash-decoding paged Pallas kernel via
+    kernels/dispatch (``attn_backend_scope`` pins it; the XLA gather is
+    the reference oracle, and the only path under active mesh rules).
     """
     assert not cfg.is_encoder, "encoder archs have no decode step"
     x = jnp.take(params["embed"]["table"], tokens[:, None], axis=0)  # (S,1,D)
@@ -654,7 +658,9 @@ def paged_prefill(params: dict, cache: dict, tokens: jax.Array,
     the scratch row) — required when the period holds recurrent state.
     Each chunk runs the full period scan then dies — peak logits cost is
     (G, chunk, V) never (G, L, V).  Attention positions scatter the
-    chunk's K/V as whole pages and attend over the pages written so far;
+    chunk's K/V as whole pages and attend over the pages written so far
+    (the chunked paged-prefill Pallas kernel via kernels/dispatch, same
+    backend chain as decode);
     recurrent positions consume the carried state (conv tail + SSM/WKV
     state + token shifts, zeros before the first chunk) and emit the
     updated carry, with right-padded positions masked so each lane's

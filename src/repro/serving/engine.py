@@ -68,6 +68,17 @@ BSN adder, which dispatches to the fused Pallas kernel via
 kernels/dispatch.  As in v1, every traced entry point runs inside
 ``backend_scope(bsn_backend)`` — dispatch decisions are made at trace
 time, so the scope must surround the *first* (tracing) call.
+
+Attention backend: paged decode and chunked prefill route their
+attention through the same dispatch module — ``attn_backend=None``
+(auto) serves the flash-decoding Pallas kernel
+(kernels/paged_attention.py; interpret mode off-TPU), ``"reference"``
+pins the XLA gather/scatter oracle.  ``attn_backend_scope`` wraps the
+traced calls exactly like the BSN scope.  Under ``mesh_rules`` the
+engine always serves the constrained reference (the kernel is a
+single-device program; KV heads stay device-local over "model", so
+mesh-on output is token-identical to the kernel path) and pinning a
+pallas backend is rejected.
 """
 
 from __future__ import annotations
@@ -131,7 +142,8 @@ class ServeEngine:
                  page_size: int = 16, num_pages: int | None = None,
                  prefill_chunk: int = 64, datapath: str = "qat",
                  mesh_rules: MeshRules | None = None,
-                 prefill_mode: str = "chunked"):
+                 prefill_mode: str = "chunked",
+                 attn_backend: str | None = None):
         assert not cfg.is_encoder, "encoders are served via forward()"
         if prefill_mode not in ("chunked", "exact"):
             raise ValueError(f"prefill_mode must be 'chunked' or 'exact' "
@@ -145,7 +157,20 @@ class ServeEngine:
         if page_size < 1 or page_size & (page_size - 1):
             raise ValueError(f"page_size must be a power of two, "
                              f"got {page_size}")
+        if attn_backend is not None \
+                and attn_backend not in kernel_dispatch.BACKENDS:
+            raise ValueError(f"attn_backend must be one of "
+                             f"{kernel_dispatch.BACKENDS} or None (auto), "
+                             f"got {attn_backend!r}")
+        if mesh_rules is not None and attn_backend not in (None,
+                                                           "reference"):
+            raise ValueError(
+                "mesh-sharded serving runs the constrained reference "
+                "attention (the paged Pallas kernel is a single-device "
+                f"program) — drop attn_backend={attn_backend!r} or the "
+                "mesh_rules")
         self.bsn_backend = bsn_backend
+        self.attn_backend = attn_backend
         self.cfg = _cfg_for_datapath(cfg, datapath)
         self.datapath = datapath
         self.max_slots, self.max_len = max_slots, max_len
@@ -251,10 +276,12 @@ class ServeEngine:
 
     @contextlib.contextmanager
     def _scope(self):
-        """Every traced call runs here: BSN backend dispatch happens at
-        trace time, and the mesh rules must be active so logical-axis
-        constraints resolve (both are no-ops when unset)."""
-        with kernel_dispatch.backend_scope(self.bsn_backend):
+        """Every traced call runs here: BSN and paged-attention backend
+        dispatch happens at trace time, and the mesh rules must be
+        active so logical-axis constraints resolve (all are no-ops when
+        unset)."""
+        with kernel_dispatch.backend_scope(self.bsn_backend), \
+                kernel_dispatch.attn_backend_scope(self.attn_backend):
             if self.rules is None:
                 yield
             else:

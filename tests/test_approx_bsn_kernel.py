@@ -161,9 +161,13 @@ def test_select_backend_policy(monkeypatch):
     monkeypatch.setattr(jax, "default_backend", lambda: "cpu")
     assert dispatch.select_backend(64) == "pallas-interpret"
     assert dispatch.select_backend(2) == "reference"
-    # auto on TPU: always the compiled kernel
+    # auto on TPU: compiled kernel for kernel-worthy row counts, but the
+    # row threshold holds there too — a tiny pallas_call is all overhead
+    # (regression: this used to return "pallas" unconditionally)
     monkeypatch.setattr(jax, "default_backend", lambda: "tpu")
-    assert dispatch.select_backend(2) == "pallas"
+    assert dispatch.select_backend(64) == "pallas"
+    assert dispatch.select_backend(2) == "reference"
+    assert dispatch.select_backend(2, min_rows_for_kernel=1) == "pallas"
     monkeypatch.setattr(jax, "default_backend", lambda: "cpu")
     # scope override + restoration
     with dispatch.backend_scope("reference"):

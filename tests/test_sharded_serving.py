@@ -195,6 +195,40 @@ def test_recurrent_exact_oracle_sharded_matches_sequential():
     assert got == ref
 
 
+@pytest.mark.parametrize("datapath", ["qat", "sc_int", "sc_int_approx"])
+def test_kernel_attention_mesh_on_equals_mesh_off(datapath):
+    """The paged-attention kernel third: mesh-on decode (which always
+    serves the constrained XLA reference — the kernel is a single-device
+    program) is token-identical to the mesh-off engine pinned to the
+    interpret-mode Pallas kernel.  This is the cross-arithmetic leg of
+    the differential: flash-decoding online-softmax vs gathered full
+    softmax, same tokens."""
+    params = init_params(jax.random.key(0), ATTN_CFG)
+    sharded = _engine_tokens(params, ATTN_CFG, datapath, _rules())
+    eng = ServeEngine(params, ATTN_CFG, max_slots=2, max_len=32,
+                      page_size=8, datapath=datapath,
+                      attn_backend="pallas-interpret")
+    for p in PROMPTS:
+        eng.submit(p, max_new_tokens=4)
+    done = eng.run_to_completion()
+    kernel = [r.generated for r in sorted(done, key=lambda r: r.rid)]
+    assert sharded == kernel, datapath
+    ref = sequential_generate(params, ATTN_CFG, PROMPTS, max_new_tokens=4,
+                              max_len=32, datapath=datapath)
+    assert kernel == ref, datapath
+
+
+def test_mesh_engine_rejects_pinned_pallas_attention():
+    """Pinning a pallas attention backend under mesh rules is a
+    contradiction (the kernel is single-device) and must fail loudly,
+    not silently serve something else."""
+    params = init_params(jax.random.key(0), ATTN_CFG)
+    with pytest.raises(ValueError):
+        ServeEngine(params, ATTN_CFG, max_slots=2, max_len=32,
+                    page_size=8, mesh_rules=_rules(),
+                    attn_backend="pallas-interpret")
+
+
 def test_degenerate_mesh_equals_no_mesh():
     """A (1, 1) mesh is behaviorally identical to mesh_rules=None."""
     params = init_params(jax.random.key(0), ATTN_CFG)
