@@ -21,7 +21,11 @@ paged path vs the retired exact-length per-request fallback;
 paged-attention kernel differential: decode tokens/sec with the
 attention backend pinned to the Pallas kernel vs the XLA gather
 reference, and per-shape autotune winners from repro.kernels.autotune;
-``--paged-kernel`` runs just that slice).  The artifact is written to
+``--paged-kernel`` runs just that slice — plus the compressed KV pool
+slice: decode tokens/sec and analytic slots-per-GiB per ``kv_format``
+(fp / int8 / sc), with batched==sequential token-identity and the
+int8 >= 2x-capacity gate asserted inline; ``--kv-format`` runs just
+that slice).  The artifact is written to
 the REPO ROOT so it is committable.  ``--sharded``
 additionally measures the mesh-sharded engine against the unsharded one
 on the same prompts and writes ``BENCH_serving_sharded.json``.  On
@@ -81,11 +85,13 @@ MIXES = {
 
 
 def _engine_tps(params, n_req, prompts_fn, max_new, cfg=None,
-                rules=None, sampled=False, attn_backend=None) -> float:
+                rules=None, sampled=False, attn_backend=None,
+                datapath="qat", kv_format="fp") -> float:
     eng = ServeEngine(params, cfg if cfg is not None else CFG,
                       max_slots=min(n_req, 8), max_len=MAX_LEN,
                       page_size=PAGE, mesh_rules=rules,
-                      attn_backend=attn_backend)
+                      attn_backend=attn_backend, datapath=datapath,
+                      kv_format=kv_format)
     # seeded stochastic decode (vs the default greedy): same jitted step,
     # plus the in-jit filter + categorical draw per token
     sps = [SamplingParams(temperature=0.8, top_p=0.9, top_k=32, seed=i)
@@ -212,6 +218,60 @@ def run_paged(smoke: bool = False):
     return rows, results
 
 
+def run_kv_formats(smoke: bool = False):
+    """Compressed KV pools: decode tokens/sec + slots-per-GiB per
+    ``kv_format``.  Every format runs datapath="sc_int" so "sc" is a
+    legal pairing and the comparison isolates the cache format.  Before
+    timing, each format's engine is checked token-identical to its
+    same-format B=1 sequential oracle, and the sc round-trip error is
+    checked against its analytic bound — a perf number can never ship
+    for a wrong-token configuration.  The capacity gate (int8 >= 2x fp
+    slots at unchanged page_size) is asserted here as in the tests."""
+    from repro.core.kv_quant import (KV_FORMATS, kv_dequant,
+                                     kv_error_bound, kv_quant)
+    from repro.serving import sequential_generate, slots_per_gib
+    params = init_params(jax.random.key(0), CFG)
+    n_req, max_new = 8, (8 if smoke else 16)
+    hkv, dh = CFG.n_kv_heads, CFG.d_model // CFG.n_heads
+    # sc accuracy: the cache round-trip honors |err| <= alpha_r / 2
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(
+        (64, hkv, dh)), jnp.float32)
+    qd = kv_quant(x, "sc")
+    err = jnp.abs(kv_dequant(qd["q"], qd["scale"], qd["resid"],
+                             fmt="sc") - x)
+    bound = kv_error_bound(qd["scale"], "sc")[..., None]
+    assert bool(jnp.all(err <= bound * (1 + 1e-6))), "sc bound violated"
+    rows, results = [], {}
+    spg = {f: slots_per_gib(MAX_LEN, PAGE, hkv, dh, f,
+                            n_layers=CFG.n_layers) for f in KV_FORMATS}
+    assert spg["int8"] >= 2.0 * spg["fp"], \
+        f"int8 capacity gate: {spg['int8'] / spg['fp']:.2f}x < 2x"
+    prompts = MIXES["uniform8"](3)
+    for fmt in KV_FORMATS:
+        eng = ServeEngine(params, CFG, max_slots=2, max_len=MAX_LEN,
+                          page_size=PAGE, datapath="sc_int",
+                          kv_format=fmt)
+        for p in prompts:
+            eng.submit(p, max_new_tokens=4)
+        got = [r.generated for r in sorted(eng.run_to_completion(),
+                                           key=lambda r: r.rid)]
+        want = sequential_generate(params, CFG, prompts,
+                                   max_new_tokens=4, max_len=MAX_LEN,
+                                   datapath="sc_int", kv_format=fmt)
+        assert got == want, f"{fmt}: batched != sequential"
+        tps = _engine_tps(params, n_req, MIXES["uniform8"], max_new,
+                          datapath="sc_int", kv_format=fmt)
+        key = f"serving_kv_{fmt}_uniform8_n8"
+        results[key] = {"decode_tps": tps,
+                        "slots_per_gib": spg[fmt],
+                        "slots_vs_fp": spg[fmt] / spg["fp"]}
+        rows.append((key, 1e6 / tps,
+                     f"decode_tps={tps:.1f} "
+                     f"slots_per_gib={spg[fmt]:.0f} "
+                     f"slots_vs_fp={spg[fmt] / spg['fp']:.2f}x"))
+    return rows, results
+
+
 def run(smoke: bool = False) -> list[tuple]:
     params = init_params(jax.random.key(0), CFG)
     max_new = 8 if smoke else 16
@@ -245,6 +305,10 @@ def run(smoke: bool = False) -> list[tuple]:
     prows, presults = run_paged(smoke=smoke)
     rows += prows
     results.update(presults)
+    # ...and the per-kv_format decode throughput + capacity accounting
+    krows, kresults = run_kv_formats(smoke=smoke)
+    rows += krows
+    results.update(kresults)
     return rows if not smoke else (rows, results)
 
 
@@ -303,19 +367,26 @@ def main() -> None:
                     help="paged-attention kernel slice only: kernel vs "
                          "XLA-gather decode tokens/sec + autotune "
                          "sweeps (the CI matrix smoke)")
+    ap.add_argument("--kv-format", action="store_true",
+                    help="compressed KV pool slice only: per-kv_format "
+                         "decode tokens/sec + slots-per-GiB, with the "
+                         "batched==sequential and int8>=2x capacity "
+                         "asserts (the CI matrix smoke)")
     ap.add_argument("--out", default=None)
     ap.add_argument("--min-speedup", type=float, default=0.0,
                     help="fail unless batched/sequential >= this at every "
                          "measured point (CI gate; local bar is 3x at 8 "
                          "slots, CI uses margin for runner noise)")
     args = ap.parse_args()
-    if sum((args.sharded, args.recurrent, args.paged_kernel)) > 1:
-        ap.error("--sharded / --recurrent / --paged-kernel are "
-                 "mutually exclusive")
-    if (args.recurrent or args.paged_kernel) \
+    if sum((args.sharded, args.recurrent, args.paged_kernel,
+            args.kv_format)) > 1:
+        ap.error("--sharded / --recurrent / --paged-kernel / --kv-format "
+                 "are mutually exclusive")
+    if (args.recurrent or args.paged_kernel or args.kv_format) \
             and (args.out or args.min_speedup):
-        ap.error("--recurrent/--paged-kernel ignore --out/--min-speedup; "
-                 "run the full --smoke to record/gate")
+        ap.error("--recurrent/--paged-kernel/--kv-format ignore "
+                 "--out/--min-speedup; run the full --smoke to "
+                 "record/gate")
     if args.out is None:
         name = "BENCH_serving_sharded.json" if args.sharded \
             else "BENCH_serving.json"
@@ -329,11 +400,12 @@ def main() -> None:
         for n, us, d in rows:
             print(f"{n},{us:.1f},{d}")
         return
-    if args.recurrent or args.paged_kernel:
+    if args.recurrent or args.paged_kernel or args.kv_format:
         # standalone CI-matrix smokes (exercised on pinned AND latest
         # jax); the full --smoke run is what records these numbers into
         # BENCH_serving.json
-        runner = run_paged if args.paged_kernel else run_recurrent
+        runner = (run_paged if args.paged_kernel else
+                  run_kv_formats if args.kv_format else run_recurrent)
         rows, _ = runner(smoke=args.smoke)
         print("name,us_per_call,derived")
         for n, us, d in rows:

@@ -33,7 +33,8 @@ from repro.core import si
 from repro.core.coding import quantize_levels
 from repro.kernels import ops
 from repro.models import init_params
-from repro.serving import SamplingParams, ServeEngine, sequential_generate
+from repro.serving import (EngineConfig, SamplingParams, ServeEngine,
+                           sequential_generate)
 
 SPEC = QatSpec(weight_bsl=2, act_bsl=8, resid_bsl=None)
 ACT_BSL = 8
@@ -85,8 +86,12 @@ def serve_lm_engine(smoke: bool = False):
     prompts = [[(3 * i + j) % 64 for j in range(4 + i)]
                for i in range(n_req)]
 
-    eng = ServeEngine(params, cfg, max_slots=4, max_len=64, page_size=16,
-                      datapath="sc_int")
+    # EngineConfig is the typed construction surface: every serving knob
+    # in one validated dataclass (kv_format="int8" halves-and-more the
+    # KV pool bytes; see serving/README.md "KV pool formats")
+    config = EngineConfig(max_slots=4, max_len=64, page_size=16,
+                          datapath="sc_int", kv_format="int8").validate()
+    eng = ServeEngine.from_config(params, cfg, config)
     for p in prompts:
         eng.submit(p, max_new_tokens=max_new)
     t0 = time.time()
@@ -96,10 +101,12 @@ def serve_lm_engine(smoke: bool = False):
     print(f"[serve_sc] engine v2: {len(done)} requests through 4 slots, "
           f"{toks} tokens in {dt * 1e3:.0f} ms "
           f"({toks / dt:.0f} tok/s incl. compile), paged KV "
-          f"({eng.page_size}-token pages), int8 x ternary datapath")
+          f"({eng.page_size}-token pages, {config.kv_format} pool), "
+          f"int8 x ternary datapath")
 
     ref = sequential_generate(params, cfg, prompts, max_new_tokens=max_new,
-                              max_len=64, datapath="sc_int")
+                              max_len=64, datapath="sc_int",
+                              kv_format=config.kv_format)
     got = [r.generated for r in sorted(done, key=lambda r: r.rid)]
     assert got == ref, "batched decode diverged from the sequential oracle"
     print("[serve_sc] OK: batched continuous-batching output is "
@@ -110,18 +117,19 @@ def serve_lm_engine(smoke: bool = False):
     # because the draw streams are keyed by (seed, position) only
     sps = [SamplingParams(temperature=0.8, top_p=0.9, seed=17 + i)
            for i in range(len(prompts))]
-    eng = ServeEngine(params, cfg, max_slots=4, max_len=64, page_size=16,
-                      datapath="sc_int")
+    eng = ServeEngine.from_config(params, cfg, config)
     for p, sp in zip(prompts, sps):
         eng.submit(p, max_new_tokens=max_new, sampling=sp)
     done = eng.run_to_completion()
     got = [r.generated for r in sorted(done, key=lambda r: r.rid)]
     ref = sequential_generate(params, cfg, prompts, max_new_tokens=max_new,
-                              max_len=64, datapath="sc_int", sampling=sps)
+                              max_len=64, datapath="sc_int", sampling=sps,
+                              kv_format=config.kv_format)
     assert got == ref, "sampled decode diverged from the sequential oracle"
     assert got != sequential_generate(
         params, cfg, prompts, max_new_tokens=max_new, max_len=64,
-        datapath="sc_int"), "sampling degenerated to greedy"
+        datapath="sc_int", kv_format=config.kv_format), \
+        "sampling degenerated to greedy"
     print("[serve_sc] OK: seeded sampled decode (temperature=0.8, "
           "top_p=0.9) reproduces the sequential oracle token-for-token")
 

@@ -1,0 +1,136 @@
+"""Compressed storage formats for the paged KV cache (serving pools).
+
+The serving engine's page pools (serving/paging.py layout, models/
+transformer.init_paged_cache shapes) can hold K/V in three formats:
+
+* ``"fp"``    — pages in the compute dtype (the original layout).
+* ``"int8"``  — pages as int8 *levels* with an f32 scale per cached
+  position per KV head (the scale pool rides a parallel
+  ``(num_pages, page, Hkv)`` pool).  ``alpha = amax / 127`` over each
+  head's ``Dh`` vector, value ``= alpha * level`` — the inference-time
+  quantizer of :func:`repro.core.coding.quantize_levels` at BSL 254.
+* ``"sc"``    — the paper's deterministic thermometer coding with the
+  pow2-rescaled high-precision residual correction (paper §III,
+  :mod:`repro.core.coding` / :mod:`repro.core.residual`): a coarse
+  BSL-16 code (levels −8..+8 at ``alpha_c = amax / 8``) plus a BSL-16
+  residual code at ``alpha_r = alpha_c * 2**-SC_SHIFT``; the dequantized
+  value is ``alpha_r * residual_add_q(resid, code, SC_SHIFT)`` — the
+  residual re-joins the coarse stream through the same pow2 re-scaling
+  block the SC datapath uses, so the cache lives on the SC number
+  system end to end.
+
+Scales are PER POSITION PER HEAD (one f32 per cached ``Dh`` vector),
+not per page: decode appends one token at a time, and a per-page scale
+would force whole-page requantization whenever a new token's amax
+exceeded the page's old scale.  Per-position scales make every write
+independent — quantize-on-scatter never touches previously written
+positions, which is what keeps batched and sequential serving
+bit-identical within a format.
+
+Error contracts (enforced by tests/test_kv_format.py):
+
+* int8: ``|x - dequant| <= scale / 2``             (= amax / 254)
+* sc:   ``|x - dequant| <= scale * 2**-SC_SHIFT / 2``  (= amax / 256)
+* the residual scale ratio is exactly ``2**-SC_SHIFT``
+  (``pow2_exponent(alpha_r, alpha_c) == SC_SHIFT``), and the residual
+  never clips: ``|r| <= alpha_c / 2 = (BSL/2) * alpha_r`` exactly.
+* zero round-trips exactly in every format (all-zero pools — the trash
+  page, unwritten positions — dequantize to 0).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .coding import quantize_levels
+from .residual import residual_add_q
+
+__all__ = ["KV_FORMATS", "INT8_BSL", "SC_COARSE_BSL", "SC_RESID_BSL",
+           "SC_SHIFT", "kv_quant", "kv_dequant", "kv_error_bound",
+           "kv_format_of", "check_kv_format"]
+
+KV_FORMATS = ("fp", "int8", "sc")
+
+INT8_BSL = 254                # levels -127..+127 fill the int8 range
+SC_COARSE_BSL = 16            # paper's high-precision BSL: levels -8..+8
+SC_RESID_BSL = 16
+SC_SHIFT = 4                  # alpha_resid = alpha_coarse * 2**-SC_SHIFT
+
+
+def check_kv_format(fmt: str) -> str:
+    if fmt not in KV_FORMATS:
+        raise ValueError(f"kv_format must be one of {KV_FORMATS}, "
+                         f"got {fmt!r}")
+    return fmt
+
+
+def kv_format_of(entry: dict) -> str:
+    """Infer the storage format from a pool-dict's keys (the pools are
+    self-describing: presence of the scale / residual leaves IS the
+    format, so no config threading through the model stack)."""
+    if "k_resid" in entry:
+        return "sc"
+    if "k_scale" in entry:
+        return "int8"
+    return "fp"
+
+
+def _amax_scale(x: jax.Array, half: int) -> jax.Array:
+    """Per-(…, head) scale over the trailing Dh axis: amax / half, floored
+    away from zero so all-zero vectors quantize to exact zeros."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    return jnp.maximum(amax / half, jnp.finfo(jnp.float32).tiny)
+
+
+def kv_quant(x: jax.Array, fmt: str) -> dict:
+    """Quantize a K or V tensor ``(..., H, Dh)`` for pool storage.
+
+    Returns ``{"q": int8 levels, "scale": f32 (..., H)}`` for int8,
+    plus ``"resid"`` (int8 levels) for sc; ``{"q": x}`` unchanged for fp.
+    """
+    check_kv_format(fmt)
+    if fmt == "fp":
+        return {"q": x}
+    if fmt == "int8":
+        scale = _amax_scale(x, INT8_BSL // 2)
+        q = quantize_levels(x.astype(jnp.float32), scale[..., None],
+                            INT8_BSL)
+        return {"q": q.astype(jnp.int8), "scale": scale}
+    # sc: coarse thermometer code + pow2-rescaled residual
+    scale = _amax_scale(x, SC_COARSE_BSL // 2)          # alpha_c
+    xf = x.astype(jnp.float32)
+    code = quantize_levels(xf, scale[..., None], SC_COARSE_BSL)
+    alpha_r = scale * (2.0 ** -SC_SHIFT)
+    r = xf - scale[..., None] * code.astype(jnp.float32)
+    resid = quantize_levels(r, alpha_r[..., None], SC_RESID_BSL)
+    return {"q": code.astype(jnp.int8), "scale": scale,
+            "resid": resid.astype(jnp.int8)}
+
+
+def kv_dequant(q: jax.Array, scale: jax.Array | None = None,
+               resid: jax.Array | None = None, *, fmt: str,
+               dtype=jnp.float32) -> jax.Array:
+    """Pool storage -> float.  ``scale`` broadcasts over the trailing Dh
+    axis (``scale.shape == q.shape[:-1]``)."""
+    check_kv_format(fmt)
+    if fmt == "fp":
+        return q.astype(dtype)
+    if fmt == "int8":
+        return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+    # sc: the residual re-scaling block — resid levels join the coarse
+    # code at 2**SC_SHIFT coarse-levels-per-resid-level, then one scale
+    # (alpha_r) maps the fused sum back to value domain
+    fused = residual_add_q(resid, q, SC_SHIFT)          # q*2^s + resid
+    alpha_r = scale * (2.0 ** -SC_SHIFT)
+    return (fused.astype(jnp.float32) * alpha_r[..., None]).astype(dtype)
+
+
+def kv_error_bound(scale: jax.Array, fmt: str) -> jax.Array:
+    """Elementwise absolute round-trip error bound per stored value."""
+    check_kv_format(fmt)
+    if fmt == "fp":
+        return jnp.zeros_like(scale)
+    if fmt == "int8":
+        return scale * 0.5
+    return scale * (2.0 ** -SC_SHIFT) * 0.5

@@ -23,6 +23,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.kv_quant import check_kv_format, kv_quant
+
 from .approx_bsn import approx_bsn_pallas
 from .paged_attention import (paged_attn_decode_pallas,
                               paged_attn_prefill_pallas)
@@ -61,22 +63,39 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def _paged_case(seed, S, Hkv, D, page, maxp):
+def _paged_case(seed, S, Hkv, D, page, maxp, kv_format="fp"):
+    """Synthetic pools + tables for one paged shape.  For compressed
+    formats the float pools are quantized positionwise, yielding the
+    code pages and the aux (scale / residual) operand dict the kernels
+    take — so the sweep times the fused-dequant kernel, not a float
+    stand-in."""
+    check_kv_format(kv_format)
     rng = np.random.default_rng(seed)
     n = S * maxp + 1
-    kp = jnp.asarray(rng.standard_normal((n, page, Hkv, D)), jnp.float32)
-    vp = jnp.asarray(rng.standard_normal((n, page, Hkv, D)), jnp.float32)
+    kf = jnp.asarray(rng.standard_normal((n, page, Hkv, D)), jnp.float32)
+    vf = jnp.asarray(rng.standard_normal((n, page, Hkv, D)), jnp.float32)
+    aux = {}
+    if kv_format == "fp":
+        kp, vp = kf, vf
+    else:
+        kq, vq = kv_quant(kf, kv_format), kv_quant(vf, kv_format)
+        kp, vp = kq["q"], vq["q"]
+        aux = {"k_scale": kq["scale"], "v_scale": vq["scale"]}
+        if kv_format == "sc":
+            aux |= {"k_resid": kq["resid"], "v_resid": vq["resid"]}
     tables = np.zeros((S, maxp), np.int32)
     for s in range(S):
         tables[s] = 1 + s * maxp + rng.permutation(maxp)
-    return rng, kp, vp, jnp.asarray(tables)
+    return rng, kp, vp, jnp.asarray(tables), aux
 
 
 def autotune_paged_decode(S: int, Hkv: int, G: int, D: int, page: int,
                           maxp: int, *, splits=(1, 2, 4),
+                          kv_format: str = "fp",
                           iters: int = 10) -> dict:
     """Sweep the flash-decoding split-K width for one decode shape."""
-    rng, kp, vp, tables = _paged_case(0, S, Hkv, D, page, maxp)
+    rng, kp, vp, tables, aux = _paged_case(0, S, Hkv, D, page, maxp,
+                                           kv_format)
     q = jnp.asarray(rng.standard_normal((S, Hkv, G, D)), jnp.float32)
     lengths = jnp.asarray(rng.integers(0, maxp * page, S), jnp.int32)
     interp = _interpret()
@@ -84,34 +103,37 @@ def autotune_paged_decode(S: int, Hkv: int, G: int, D: int, page: int,
     def build(num_splits):
         return lambda: paged_attn_decode_pallas(
             q, kp, vp, tables, lengths, num_splits=num_splits,
-            interpret=interp)
+            interpret=interp, kv_format=kv_format, **aux)
 
     cands = {f"num_splits={s}": {"num_splits": s}
              for s in splits if s <= maxp}
     out = sweep(build, cands, iters=iters)
-    out["shape"] = dict(S=S, Hkv=Hkv, G=G, D=D, page=page, maxp=maxp)
+    out["shape"] = dict(S=S, Hkv=Hkv, G=G, D=D, page=page, maxp=maxp,
+                        kv_format=kv_format)
     return out
 
 
 def autotune_paged_prefill(G: int, C: int, Hkv: int, Gq: int, D: int,
                            page: int, start: int, *,
                            block_qs=(8, 16, 32),
+                           kv_format: str = "fp",
                            iters: int = 10) -> dict:
     """Sweep the q-block rows for one chunked-prefill shape."""
     maxp = (start + C) // page
-    rng, kp, vp, tables = _paged_case(1, G, Hkv, D, page, maxp)
+    rng, kp, vp, tables, aux = _paged_case(1, G, Hkv, D, page, maxp,
+                                           kv_format)
     q = jnp.asarray(rng.standard_normal((G, C, Hkv, Gq, D)), jnp.float32)
     interp = _interpret()
 
     def build(block_q):
         return lambda: paged_attn_prefill_pallas(
             q, kp, vp, tables, start=start, block_q=block_q,
-            interpret=interp)
+            interpret=interp, kv_format=kv_format, **aux)
 
     cands = {f"block_q={b}": {"block_q": b} for b in block_qs if b <= C}
     out = sweep(build, cands, iters=iters)
     out["shape"] = dict(G=G, C=C, Hkv=Hkv, Gq=Gq, D=D, page=page,
-                        start=start)
+                        start=start, kv_format=kv_format)
     return out
 
 

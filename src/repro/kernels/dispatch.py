@@ -195,38 +195,52 @@ def paged_attn_decode(q: jax.Array, k_pages: jax.Array,
                       v_pages: jax.Array, page_tables: jax.Array,
                       lengths: jax.Array, *, backend: str | None = None,
                       num_splits: int = 1,
-                      min_rows_for_kernel: int = 8) -> jax.Array:
+                      min_rows_for_kernel: int = 8,
+                      kv_format: str = "fp",
+                      kv_aux: dict | None = None) -> jax.Array:
     """Batched one-token paged decode: (S, Hkv, G, D) queries against the
     (N, page, Hkv, D) pools through (S, maxp) tables, masked by
     ``lengths``.  Flash-decoding Pallas kernel on the kernel backends,
-    XLA gather oracle (kernels/ref.py) on ``"reference"``."""
+    XLA gather oracle (kernels/ref.py) on ``"reference"``.  Compressed
+    pools (``kv_format`` "int8"/"sc") pass the parallel scale/residual
+    pools in ``kv_aux`` (keys ``k_scale``/``v_scale``[/``k_resid``/
+    ``v_resid``]); both backends fuse the dequant into the page reads."""
     S, Hkv, G, _ = q.shape
+    aux = kv_aux or {}
     chosen = select_backend(S * Hkv * G, backend=backend,
                             min_rows_for_kernel=min_rows_for_kernel,
                             default=_attn_backend)
     if chosen == "reference":
         return ref.paged_attn_decode_ref(q, k_pages, v_pages,
-                                         page_tables, lengths)
+                                         page_tables, lengths,
+                                         kv_format=kv_format, kv_aux=aux)
     return paged_attn_decode_pallas(q, k_pages, v_pages, page_tables,
                                     lengths, num_splits=num_splits,
-                                    interpret=chosen == "pallas-interpret")
+                                    interpret=chosen == "pallas-interpret",
+                                    kv_format=kv_format, **aux)
 
 
 def paged_attn_prefill(q: jax.Array, k_pages: jax.Array,
                        v_pages: jax.Array, page_tables: jax.Array,
                        start: int, *, backend: str | None = None,
                        block_q: int = 32,
-                       min_rows_for_kernel: int = 8) -> jax.Array:
+                       min_rows_for_kernel: int = 8,
+                       kv_format: str = "fp",
+                       kv_aux: dict | None = None) -> jax.Array:
     """One chunk of paged prefill: (G, C, Hkv, Gq, D) queries at
     positions ``[start, start+C)`` against every page written so far,
-    causal.  Same backend chain as :func:`paged_attn_decode`."""
+    causal.  Same backend chain (and ``kv_format``/``kv_aux`` contract)
+    as :func:`paged_attn_decode`."""
     G, C, Hkv, Gq, _ = q.shape
+    aux = kv_aux or {}
     chosen = select_backend(G * C * Hkv * Gq, backend=backend,
                             min_rows_for_kernel=min_rows_for_kernel,
                             default=_attn_backend)
     if chosen == "reference":
         return ref.paged_attn_prefill_ref(q, k_pages, v_pages,
-                                          page_tables, start)
+                                          page_tables, start,
+                                          kv_format=kv_format, kv_aux=aux)
     return paged_attn_prefill_pallas(q, k_pages, v_pages, page_tables,
                                      start=start, block_q=block_q,
-                                     interpret=chosen == "pallas-interpret")
+                                     interpret=chosen == "pallas-interpret",
+                                     kv_format=kv_format, **aux)

@@ -37,6 +37,14 @@ window of ``attn_prefill_paged``: q rows are chunk positions
 loop and normalize on the last page; future pages are skipped per
 q-block (the causal early-exit).
 
+Compressed KV pools (core/kv_quant.py: ``kv_format`` "int8" / "sc")
+dequantize INSIDE the kernels: the per-position scale pools (and the sc
+residual pools) ride the same scalar-prefetch page-table index maps as
+the KV blocks, so each grid step DMAs one page of int8 codes plus its
+scales and reconstructs float K/V in VMEM — the fp window never exists
+in HBM.  The elementwise dequant mirrors ``kv_dequant`` exactly, so the
+kernel-vs-reference differential stays as tight as the fp one.
+
 Layout notes for real TPUs: the accumulator blocks put the (small) GQA
 group width G in the lane dimension, so Mosaic pads tiles for the tiny
 serving configs exercised here — fine for correctness-first; the
@@ -55,9 +63,44 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..core.kv_quant import SC_SHIFT, check_kv_format
+
 __all__ = ["paged_attn_decode_pallas", "paged_attn_prefill_pallas"]
 
 _NEG = -1e30
+
+
+def _load_kv_block(kv_format: str, x_ref, s_ref=None, r_ref=None):
+    """One physical page of K or V -> (page, D) float32, dequant fused.
+
+    ``x_ref`` is the (1, page, 1, D) pool block; for compressed formats
+    ``s_ref`` is the parallel (1, page, 1) scale block and ``r_ref`` the
+    sc residual block.  The elementwise math mirrors
+    core.kv_quant.kv_dequant exactly, so the kernel matches the
+    gather-then-dequant reference bit-for-bit per element.
+    """
+    raw = x_ref[0, :, 0, :]
+    if kv_format == "fp":
+        return raw.astype(jnp.float32)
+    sc = s_ref[0, :, 0]                             # (page,)
+    if kv_format == "int8":
+        return raw.astype(jnp.float32) * sc[:, None]
+    fused = (r_ref[0, :, 0, :].astype(jnp.int32)
+             + raw.astype(jnp.int32) * (1 << SC_SHIFT))
+    return fused.astype(jnp.float32) * (sc * (2.0 ** -SC_SHIFT))[:, None]
+
+
+def _split_aux_refs(kv_format: str, rest, n_tail: int):
+    """Split a kernel's ``*rest`` refs into (aux_refs, tail_refs).
+
+    pallas passes refs positionally: the format-dependent scale/resid
+    blocks sit between the fixed inputs and the outputs/scratch, so the
+    kernels take ``*rest`` and cut it here.  aux order: k_scale, v_scale
+    [, k_resid, v_resid].
+    """
+    n_aux = {"fp": 0, "int8": 2, "sc": 4}[kv_format]
+    assert len(rest) == n_aux + n_tail, (kv_format, len(rest), n_tail)
+    return rest[:n_aux], rest[n_aux:]
 
 
 # ---------------------------------------------------------------------------
@@ -65,8 +108,9 @@ _NEG = -1e30
 # ---------------------------------------------------------------------------
 
 def _decode_kernel(pt_ref, len_ref, q_ref, k_ref, v_ref,
-                   m_ref, l_ref, acc_ref, *, page: int, pps: int,
-                   scale: float):
+                   *rest, page: int, pps: int,
+                   scale: float, kv_format: str):
+    aux, (m_ref, l_ref, acc_ref) = _split_aux_refs(kv_format, rest, 3)
     s = pl.program_id(0)
     sp = pl.program_id(2)
     p = pl.program_id(3)
@@ -83,8 +127,8 @@ def _decode_kernel(pt_ref, len_ref, q_ref, k_ref, v_ref,
     @pl.when(base <= length)                        # page holds live tokens
     def _accumulate():
         q = q_ref[0, 0].astype(jnp.float32)         # (G, D)
-        k = k_ref[0, :, 0, :].astype(jnp.float32)   # (page, D)
-        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        k = _load_kv_block(kv_format, k_ref, *aux[0::2])   # (page, D)
+        v = _load_kv_block(kv_format, v_ref, *aux[1::2])
         logits = jnp.dot(q, k.T) / scale            # (G, page)
         pos = base + jax.lax.broadcasted_iota(jnp.int32, (1, page), 1)
         live = pos <= length                        # (1, page)
@@ -100,18 +144,29 @@ def _decode_kernel(pt_ref, len_ref, q_ref, k_ref, v_ref,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("num_splits", "interpret"))
+                   static_argnames=("num_splits", "interpret", "kv_format"))
 def paged_attn_decode_pallas(q: jax.Array, k_pages: jax.Array,
                              v_pages: jax.Array, page_tables: jax.Array,
                              lengths: jax.Array, *, num_splits: int = 1,
-                             interpret: bool = False) -> jax.Array:
+                             interpret: bool = False,
+                             kv_format: str = "fp",
+                             k_scale: jax.Array | None = None,
+                             v_scale: jax.Array | None = None,
+                             k_resid: jax.Array | None = None,
+                             v_resid: jax.Array | None = None) -> jax.Array:
     """Batched one-token paged decode.
 
     q: (S, Hkv, G, D) grouped queries; k_pages/v_pages: (N, page, Hkv, D)
     pools (already holding the new token at position ``lengths``);
-    page_tables: (S, maxp) int32; lengths: (S,) int32.  Returns the
-    attention context (S, Hkv, G, D) in q.dtype.
+    page_tables: (S, maxp) int32; lengths: (S,) int32.  For compressed
+    pools (``kv_format`` "int8"/"sc") the parallel ``k_scale``/``v_scale``
+    (N, page, Hkv) — and for sc the ``k_resid``/``v_resid`` — pools ride
+    the SAME page-table index maps as the KV blocks, so each grid step
+    DMAs one page of codes + its scales and dequantizes in VMEM: no fp
+    pages ever materialize in HBM.  Returns the attention context
+    (S, Hkv, G, D) in q.dtype.
     """
+    check_kv_format(kv_format)
     S, Hkv, G, D = q.shape
     page = k_pages.shape[1]
     maxp = page_tables.shape[1]
@@ -124,11 +179,25 @@ def paged_attn_decode_pallas(q: jax.Array, k_pages: jax.Array,
                               ((0, 0), (0, num_splits * pps - maxp)))
 
     kernel = functools.partial(_decode_kernel, page=page, pps=pps,
-                               scale=math.sqrt(D))
+                               scale=math.sqrt(D), kv_format=kv_format)
 
     def kv_index(s, h, sp, p, pt, ln):
         del ln
         return (pt[s, sp * pps + p], 0, h, 0)
+
+    def scale_index(s, h, sp, p, pt, ln):
+        del ln
+        return (pt[s, sp * pps + p], 0, h)
+
+    kv_spec = pl.BlockSpec((1, page, 1, D), kv_index)
+    scale_spec = pl.BlockSpec((1, page, 1), scale_index)
+    aux_specs, aux_ops = [], []
+    if kv_format != "fp":
+        aux_specs += [scale_spec, scale_spec]
+        aux_ops += [k_scale, v_scale]
+    if kv_format == "sc":
+        aux_specs += [kv_spec, kv_spec]
+        aux_ops += [k_resid, v_resid]
 
     m, l, acc = pl.pallas_call(
         kernel,
@@ -138,8 +207,9 @@ def paged_attn_decode_pallas(q: jax.Array, k_pages: jax.Array,
             in_specs=[
                 pl.BlockSpec((1, 1, G, D),
                              lambda s, h, sp, p, pt, ln: (s, h, 0, 0)),
-                pl.BlockSpec((1, page, 1, D), kv_index),
-                pl.BlockSpec((1, page, 1, D), kv_index),
+                kv_spec,
+                kv_spec,
+                *aux_specs,
             ],
             out_specs=[
                 pl.BlockSpec((1, 1, 1, G),
@@ -156,7 +226,7 @@ def paged_attn_decode_pallas(q: jax.Array, k_pages: jax.Array,
             jax.ShapeDtypeStruct((S, Hkv, num_splits, G, D), jnp.float32),
         ],
         interpret=interpret,
-    )(page_tables, lengths, q, k_pages, v_pages)
+    )(page_tables, lengths, q, k_pages, v_pages, *aux_ops)
 
     # flash-decoding LSE merge across splits (exact: splits with no live
     # pages carry m=-1e30, l=0 and weigh zero)
@@ -172,9 +242,10 @@ def paged_attn_decode_pallas(q: jax.Array, k_pages: jax.Array,
 # prefill: chunk-aligned causal window over the pages written so far
 # ---------------------------------------------------------------------------
 
-def _prefill_kernel(pt_ref, q_ref, k_ref, v_ref, o_ref,
-                    m_sc, l_sc, acc_sc, *, bq: int, page: int, n_pg: int,
-                    start: int, scale: float):
+def _prefill_kernel(pt_ref, q_ref, k_ref, v_ref,
+                    *rest, bq: int, page: int, n_pg: int,
+                    start: int, scale: float, kv_format: str):
+    aux, (o_ref, m_sc, l_sc, acc_sc) = _split_aux_refs(kv_format, rest, 4)
     qi = pl.program_id(1)
     pg = pl.program_id(2)
 
@@ -189,8 +260,8 @@ def _prefill_kernel(pt_ref, q_ref, k_ref, v_ref, o_ref,
     @pl.when(pg * page <= q_hi)                     # causal early-exit
     def _accumulate():
         q = q_ref[0].astype(jnp.float32)            # (bq, D)
-        k = k_ref[0, :, 0, :].astype(jnp.float32)   # (page, D)
-        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        k = _load_kv_block(kv_format, k_ref, *aux[0::2])   # (page, D)
+        v = _load_kv_block(kv_format, v_ref, *aux[1::2])
         logits = jnp.dot(q, k.T) / scale            # (bq, page)
         q_pos = start + qi * bq + jax.lax.broadcasted_iota(
             jnp.int32, (bq, page), 0)
@@ -214,20 +285,29 @@ def _prefill_kernel(pt_ref, q_ref, k_ref, v_ref, o_ref,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("start", "block_q", "interpret"))
+                   static_argnames=("start", "block_q", "interpret",
+                                    "kv_format"))
 def paged_attn_prefill_pallas(q: jax.Array, k_pages: jax.Array,
                               v_pages: jax.Array, page_tables: jax.Array,
                               *, start: int, block_q: int = 32,
-                              interpret: bool = False) -> jax.Array:
+                              interpret: bool = False,
+                              kv_format: str = "fp",
+                              k_scale: jax.Array | None = None,
+                              v_scale: jax.Array | None = None,
+                              k_resid: jax.Array | None = None,
+                              v_resid: jax.Array | None = None) -> jax.Array:
     """One prefill chunk attending over the paged cache.
 
     q: (G, C, Hkv, Gq, D) — chunk ``[start, start + C)`` of each request
     in the admission group, C a multiple of the page size and ``start``
     chunk-aligned (both static); pools: (N, page, Hkv, D), already
     holding the chunk's whole-page K/V scatter; page_tables: (G, maxp).
-    Returns the context (G, C, Hkv, Gq, D) in q.dtype.  The causal mask
-    matches the reference exactly: ``k_pos <= start + q_row``.
+    Compressed pools dequantize in VMEM through the same page-table
+    index maps (see :func:`paged_attn_decode_pallas`).  Returns the
+    context (G, C, Hkv, Gq, D) in q.dtype.  The causal mask matches the
+    reference exactly: ``k_pos <= start + q_row``.
     """
+    check_kv_format(kv_format)
     G, C, Hkv, Gq, D = q.shape
     page = k_pages.shape[1]
     assert C % page == 0 and start % page == 0, (C, page, start)
@@ -244,10 +324,23 @@ def paged_attn_prefill_pallas(q: jax.Array, k_pages: jax.Array,
 
     kernel = functools.partial(_prefill_kernel, bq=bq, page=page,
                                n_pg=n_pg, start=start,
-                               scale=math.sqrt(D))
+                               scale=math.sqrt(D), kv_format=kv_format)
 
     def kv_index(bh, qi, pg, pt):
         return (pt[bh // Hq, pg], 0, (bh % Hq) // Gq, 0)
+
+    def scale_index(bh, qi, pg, pt):
+        return (pt[bh // Hq, pg], 0, (bh % Hq) // Gq)
+
+    kv_spec = pl.BlockSpec((1, page, 1, D), kv_index)
+    scale_spec = pl.BlockSpec((1, page, 1), scale_index)
+    aux_specs, aux_ops = [], []
+    if kv_format != "fp":
+        aux_specs += [scale_spec, scale_spec]
+        aux_ops += [k_scale, v_scale]
+    if kv_format == "sc":
+        aux_specs += [kv_spec, kv_spec]
+        aux_ops += [k_resid, v_resid]
 
     out = pl.pallas_call(
         kernel,
@@ -257,8 +350,9 @@ def paged_attn_prefill_pallas(q: jax.Array, k_pages: jax.Array,
             in_specs=[
                 pl.BlockSpec((1, bq, D),
                              lambda bh, qi, pg, pt: (bh, qi, 0)),
-                pl.BlockSpec((1, page, 1, D), kv_index),
-                pl.BlockSpec((1, page, 1, D), kv_index),
+                kv_spec,
+                kv_spec,
+                *aux_specs,
             ],
             out_specs=pl.BlockSpec((1, bq, D),
                                    lambda bh, qi, pg, pt: (bh, qi, 0)),
@@ -270,6 +364,6 @@ def paged_attn_prefill_pallas(q: jax.Array, k_pages: jax.Array,
         ),
         out_shape=jax.ShapeDtypeStruct((G * Hq, C, D), q.dtype),
         interpret=interpret,
-    )(page_tables, qh, k_pages, v_pages)
+    )(page_tables, qh, k_pages, v_pages, *aux_ops)
     out = jnp.moveaxis(out.reshape(G, Hq, C, D), 1, 2)
     return out.reshape(G, C, Hkv, Gq, D)

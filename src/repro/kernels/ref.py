@@ -12,8 +12,10 @@ import math
 import jax
 import jax.numpy as jnp
 
+from ..core.kv_quant import kv_dequant
+
 __all__ = ["ternary_matmul_ref", "bsn_sort_ref", "si_epilogue_ref",
-           "gather_pages", "paged_attn_decode_ref",
+           "gather_pages", "gather_pages_dequant", "paged_attn_decode_ref",
            "paged_attn_prefill_ref"]
 
 
@@ -51,17 +53,40 @@ def bsn_sort_ref(bits: jax.Array) -> jax.Array:
 
 
 def gather_pages(pages: jax.Array, page_tables: jax.Array) -> jax.Array:
-    """(N, page, H, Dh) pool + (S, maxp) tables -> (S, maxp*page, H, Dh)."""
+    """(N, page, ...) pool + (S, maxp) tables -> (S, maxp*page, ...).
+
+    Works for KV pools (N, page, H, Dh) and their parallel scale pools
+    (N, page, H) alike — the trailing axes ride along unchanged.
+    """
     S, maxp = page_tables.shape
-    _, page, H, Dh = pages.shape
+    page = pages.shape[1]
     g = jnp.take(pages, page_tables.reshape(-1), axis=0)
-    return g.reshape(S, maxp * page, H, Dh)
+    return g.reshape(S, maxp * page, *pages.shape[2:])
+
+
+def gather_pages_dequant(pages: jax.Array, page_tables: jax.Array, *,
+                         kv_format: str = "fp", scale: jax.Array | None = None,
+                         resid: jax.Array | None = None) -> jax.Array:
+    """Gather + dequantize a compressed pool window in one step.
+
+    Gather commutes with the elementwise dequant, so dequantizing the
+    gathered window is bit-identical to gathering a dequantized pool —
+    without ever materializing fp pages.  Zero-filled positions (trash
+    page, unwritten tail) dequantize to exact 0 in every format.
+    """
+    g = gather_pages(pages, page_tables)
+    if kv_format == "fp":
+        return g
+    sg = gather_pages(scale, page_tables)
+    rg = gather_pages(resid, page_tables) if kv_format == "sc" else None
+    return kv_dequant(g, sg, rg, fmt=kv_format)
 
 
 def paged_attn_decode_ref(q: jax.Array, k_pages: jax.Array,
                           v_pages: jax.Array, page_tables: jax.Array,
-                          lengths: jax.Array, *, pin_logits=None
-                          ) -> jax.Array:
+                          lengths: jax.Array, *, pin_logits=None,
+                          kv_format: str = "fp",
+                          kv_aux: dict | None = None) -> jax.Array:
     """XLA gather/scatter paged decode — the paged-kernel ground truth.
 
     q: (S, Hkv, G, D); pools: (N, page, Hkv, D) already holding the new
@@ -71,12 +96,20 @@ def paged_attn_decode_ref(q: jax.Array, k_pages: jax.Array,
     in padded table lanes point at the trash page but sit past the
     length, so they mask out identically to the kernel.  ``pin_logits``
     is a hook for the mesh path's sharding constraint (models/attention
-    pins the KV-head axis to "model" there).  Returns (S, Hkv, G, D)
-    in q.dtype.
+    pins the KV-head axis to "model" there).  For compressed pools
+    (``kv_format`` "int8"/"sc"), ``kv_aux`` carries the parallel
+    ``k_scale``/``v_scale`` (N, page, Hkv) and — for sc — the
+    ``k_resid``/``v_resid`` pools; dequant is fused into the gather.
+    Returns (S, Hkv, G, D) in q.dtype.
     """
     S, Hkv, G, D = q.shape
-    kg = gather_pages(k_pages, page_tables)       # (S, T, Hkv, Dh)
-    vg = gather_pages(v_pages, page_tables)
+    aux = kv_aux or {}
+    kg = gather_pages_dequant(k_pages, page_tables, kv_format=kv_format,
+                              scale=aux.get("k_scale"),
+                              resid=aux.get("k_resid"))  # (S, T, Hkv, Dh)
+    vg = gather_pages_dequant(v_pages, page_tables, kv_format=kv_format,
+                              scale=aux.get("v_scale"),
+                              resid=aux.get("v_resid"))
     T = kg.shape[1]
     logits = jnp.einsum("shgd,sthd->shgt", q.astype(jnp.float32),
                         kg.astype(jnp.float32)) / math.sqrt(D)
@@ -91,19 +124,28 @@ def paged_attn_decode_ref(q: jax.Array, k_pages: jax.Array,
 
 def paged_attn_prefill_ref(q: jax.Array, k_pages: jax.Array,
                            v_pages: jax.Array, page_tables: jax.Array,
-                           start: int, *, pin_logits=None) -> jax.Array:
+                           start: int, *, pin_logits=None,
+                           kv_format: str = "fp",
+                           kv_aux: dict | None = None) -> jax.Array:
     """XLA gather paged prefill — chunk ``[start, start+C)`` attends over
     every page written so far under the causal mask.
 
     q: (G, C, Hkv, Gq, D); pools: (N, page, Hkv, D) already holding the
-    chunk's whole-page K/V scatter; page_tables: (G, maxp).  Returns
-    (G, C, Hkv, Gq, D) in q.dtype.
+    chunk's whole-page K/V scatter; page_tables: (G, maxp).  Compressed
+    pools dequantize inside the gather via ``kv_aux`` exactly as in
+    :func:`paged_attn_decode_ref`.  Returns (G, C, Hkv, Gq, D) in
+    q.dtype.
     """
     G, C, Hkv, Gq, D = q.shape
     page = k_pages.shape[1]
     seen = page_tables[:, :(start + C) // page]   # pages <= this chunk
-    kg = gather_pages(k_pages, seen)              # (G, T, Hkv, Dh)
-    vg = gather_pages(v_pages, seen)
+    aux = kv_aux or {}
+    kg = gather_pages_dequant(k_pages, seen, kv_format=kv_format,
+                              scale=aux.get("k_scale"),
+                              resid=aux.get("k_resid"))  # (G, T, Hkv, Dh)
+    vg = gather_pages_dequant(v_pages, seen, kv_format=kv_format,
+                              scale=aux.get("v_scale"),
+                              resid=aux.get("v_resid"))
     T = kg.shape[1]
     logits = jnp.einsum("sqhgd,sthd->shgqt", q.astype(jnp.float32),
                         kg.astype(jnp.float32)) / math.sqrt(D)

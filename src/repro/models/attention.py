@@ -20,6 +20,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
+from repro.core.kv_quant import kv_format_of, kv_quant
 from repro.distributed.sharding import constrain, current_rules
 from repro.kernels import dispatch as kernel_dispatch
 from repro.kernels import ref as kernel_ref
@@ -258,20 +259,62 @@ def attn_decode(p: dict, x: jax.Array, cfg: ModelConfig,
 # program, and the serving contract keeps KV heads device-local over
 # "model", so the per-device work IS the unsharded math — mesh-on is
 # token-identical to the kernel path (tests/test_sharded_serving.py).
+#
+# Both functions take the engine's pool dict (``pools``): always
+# ``k_pages``/``v_pages``/``page_tables``, plus the parallel
+# ``k_scale``/``v_scale`` (+ sc ``k_resid``/``v_resid``) leaves when the
+# cache is compressed (core/kv_quant.py — the dict's keys ARE the
+# format).  New K/V quantize on scatter: only the just-written positions
+# are encoded, existing pages are never touched, so batched and
+# sequential serving stay bit-identical within a format.
+
+_AUX_KEYS = ("k_scale", "v_scale", "k_resid", "v_resid")
+
+
+def _pin_pool(a: jax.Array) -> jax.Array:
+    """Pools stay KV-head-sharded across steps (weights-resident layout);
+    scatter indices are replicated, so the update is device-local.  Works
+    for KV/resid pools (N, page, Hkv, Dh) and scale pools (N, page, Hkv)."""
+    return constrain(a, None, None, "model", *(None,) * (a.ndim - 3))
+
+
+def _scatter_pools(pools: dict, fmt: str, k_new: jax.Array,
+                   v_new: jax.Array, put) -> dict:
+    """Quantize-on-scatter: encode the new K/V rows and write every pool
+    leaf through ``put(pool, values)`` (same indices for codes, scales
+    and residuals — the pools are position-parallel)."""
+    out = {}
+    for name, val in (("k", k_new), ("v", v_new)):
+        qd = kv_quant(val, fmt)
+        out[f"{name}_pages"] = _pin_pool(put(pools[f"{name}_pages"],
+                                             qd["q"]))
+        if "scale" in qd:
+            out[f"{name}_scale"] = _pin_pool(put(pools[f"{name}_scale"],
+                                                 qd["scale"]))
+        if "resid" in qd:
+            out[f"{name}_resid"] = _pin_pool(put(pools[f"{name}_resid"],
+                                                 qd["resid"]))
+    return out
+
+
+def _kv_aux(pools: dict) -> dict:
+    return {k: pools[k] for k in _AUX_KEYS if k in pools}
 
 
 def attn_decode_paged(p: dict, x: jax.Array, cfg: ModelConfig,
-                      k_pages: jax.Array, v_pages: jax.Array,
-                      page_tables: jax.Array, lengths: jax.Array):
+                      pools: dict, lengths: jax.Array):
     """Batched one-token decode over the paged KV cache.
 
-    x: (S, 1, D) — one new token per active slot; k_pages/v_pages:
-    (N, page, Hkv, Dh) pools; page_tables: (S, maxp) int32 physical page
-    ids; lengths: (S,) int32 tokens already in the cache (== the new
-    token's position).  Returns (y (S, 1, D), k_pages, v_pages).
+    x: (S, 1, D) — one new token per active slot; ``pools`` holds the
+    (N, page, Hkv, Dh) KV pools + (S, maxp) int32 ``page_tables`` (+ any
+    scale/resid leaves); lengths: (S,) int32 tokens already in the cache
+    (== the new token's position).  Returns (y (S, 1, D), new_pools) —
+    the updated pool leaves, page_tables excluded.
     """
+    page_tables = pools["page_tables"]
+    page = pools["k_pages"].shape[1]
+    fmt = kv_format_of(pools)
     S = x.shape[0]
-    page = k_pages.shape[1]
     dh, hq, hkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
     g = hq // hkv
     positions = lengths[:, None]                            # (S, 1)
@@ -282,49 +325,51 @@ def attn_decode_paged(p: dict, x: jax.Array, cfg: ModelConfig,
     phys = jnp.take_along_axis(page_tables, (lengths // page)[:, None],
                                axis=1)[:, 0]
     off = lengths % page
-    k_pages = k_pages.at[phys, off].set(k[:, 0].astype(k_pages.dtype))
-    v_pages = v_pages.at[phys, off].set(v[:, 0].astype(v_pages.dtype))
-    # pools stay KV-head-sharded across steps (weights-resident layout);
-    # scatter indices are replicated, so the update is device-local
-    k_pages = constrain(k_pages, None, None, "model", None)
-    v_pages = constrain(v_pages, None, None, "model", None)
+    new_pools = _scatter_pools(
+        pools, fmt, k[:, 0], v[:, 0],
+        lambda pool, val: pool.at[phys, off].set(val.astype(pool.dtype)))
 
     qg = q.reshape(S, hkv, g, dh)
+    aux = _kv_aux(new_pools)
     if current_rules() is not None:
         # mesh path: the constrained XLA reference (KV-head axis stays
         # "model"-sharded through the logits; see module comment above)
         o = kernel_ref.paged_attn_decode_ref(
-            qg, k_pages, v_pages, page_tables, lengths,
+            qg, new_pools["k_pages"], new_pools["v_pages"], page_tables,
+            lengths, kv_format=fmt, kv_aux=aux,
             pin_logits=lambda lg: constrain(lg, None, "model", None, None))
     else:
-        o = kernel_dispatch.paged_attn_decode(qg, k_pages, v_pages,
-                                              page_tables, lengths)
+        o = kernel_dispatch.paged_attn_decode(
+            qg, new_pools["k_pages"], new_pools["v_pages"], page_tables,
+            lengths, kv_format=fmt, kv_aux=aux)
     o = o.reshape(S, 1, hq * dh).astype(x.dtype)
     # gather the head-sharded context BEFORE wo: the serving wo is
     # column-parallel, so its hq*dh contraction must be device-local
     # (never partial-summed — see attn_spec's serving rationale)
     o = constrain(o, None, None, None)
     y = dense_apply(p["wo"], o, cfg.quant)
-    return y, k_pages, v_pages
+    return y, new_pools
 
 
 def attn_prefill_paged(p: dict, x: jax.Array, cfg: ModelConfig,
-                       k_pages: jax.Array, v_pages: jax.Array,
-                       page_tables: jax.Array, start: int):
+                       pools: dict, start: int):
     """One prefill chunk written straight into the decode page layout.
 
     x: (G, C, D) — chunk ``[start, start+C)`` of each request in the
     admission group, with ``C`` a multiple of the page size and ``start``
     chunk-aligned (static).  K/V of the chunk are scattered as whole
-    pages, then the chunk's queries attend over every page written so
-    far (positions < start + C) under the causal mask — the online
-    equivalent of flash prefill, sharing the decode cache layout so no
-    re-layout pass sits between prefill and decode.
+    pages (quantized on scatter for compressed ``pools``), then the
+    chunk's queries attend over every page written so far (positions
+    < start + C) under the causal mask — the online equivalent of flash
+    prefill, sharing the decode cache layout so no re-layout pass sits
+    between prefill and decode.
 
-    Returns (y (G, C, D), k_pages, v_pages).
+    Returns (y (G, C, D), new_pools).
     """
+    page_tables = pools["page_tables"]
+    page = pools["k_pages"].shape[1]
+    fmt = kv_format_of(pools)
     G, C, _ = x.shape
-    page = k_pages.shape[1]
     assert C % page == 0 and start % page == 0, (C, page, start)
     dh, hq, hkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
     g = hq // hkv
@@ -336,23 +381,24 @@ def attn_prefill_paged(p: dict, x: jax.Array, cfg: ModelConfig,
     p0 = start // page
     npg = C // page
     phys = page_tables[:, p0:p0 + npg].reshape(-1)          # (G*npg,)
-    kp = k.astype(k_pages.dtype).reshape(G * npg, page, hkv, dh)
-    vp = v.astype(v_pages.dtype).reshape(G * npg, page, hkv, dh)
-    k_pages = k_pages.at[phys].set(kp)
-    v_pages = v_pages.at[phys].set(vp)
-    k_pages = constrain(k_pages, None, None, "model", None)
-    v_pages = constrain(v_pages, None, None, "model", None)
+    new_pools = _scatter_pools(
+        pools, fmt, k, v,
+        lambda pool, val: pool.at[phys].set(
+            val.reshape(G * npg, page, *val.shape[2:]).astype(pool.dtype)))
 
     qg = q.reshape(G, C, hkv, g, dh)
+    aux = _kv_aux(new_pools)
     if current_rules() is not None:
         o = kernel_ref.paged_attn_prefill_ref(
-            qg, k_pages, v_pages, page_tables, start,
+            qg, new_pools["k_pages"], new_pools["v_pages"], page_tables,
+            start, kv_format=fmt, kv_aux=aux,
             pin_logits=lambda lg: constrain(lg, None, "model",
                                             None, None, None))
     else:
-        o = kernel_dispatch.paged_attn_prefill(qg, k_pages, v_pages,
-                                               page_tables, start)
+        o = kernel_dispatch.paged_attn_prefill(
+            qg, new_pools["k_pages"], new_pools["v_pages"], page_tables,
+            start, kv_format=fmt, kv_aux=aux)
     o = o.reshape(G, C, hq * dh).astype(x.dtype)
     o = constrain(o, None, None, None)      # see attn_decode_paged
     y = dense_apply(p["wo"], o, cfg.quant)
-    return y, k_pages, v_pages
+    return y, new_pools

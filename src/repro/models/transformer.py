@@ -22,6 +22,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import LayerSpec, ModelConfig
+from repro.core.kv_quant import check_kv_format
 from repro.core.sc_layers import sc_residual_quant
 from repro.distributed.sharding import constrain, constrain_tree
 
@@ -174,16 +175,14 @@ def _apply_position(lp: dict, spec: LayerSpec, x, cfg: ModelConfig,
     h = norm_apply(lp["norm1"], x, cfg.norm)
     if spec.mixer == "attn":
         if mode == "decode" and "k_pages" in (cstate or {}):
-            # batched paged decode: pos is the (S,) per-slot length vector
-            dx, kp, vp = attention.attn_decode_paged(
-                lp["mixer"], h, cfg, cstate["k_pages"], cstate["v_pages"],
-                cstate["page_tables"], pos)
-            centry = {"k_pages": kp, "v_pages": vp}
+            # batched paged decode: pos is the (S,) per-slot length
+            # vector; the pool dict's keys carry the kv_format (scale /
+            # residual leaves present iff the cache is compressed)
+            dx, centry = attention.attn_decode_paged(
+                lp["mixer"], h, cfg, cstate, pos)
         elif mode == "paged_prefill":
-            dx, kp, vp = attention.attn_prefill_paged(
-                lp["mixer"], h, cfg, cstate["k_pages"], cstate["v_pages"],
-                cstate["page_tables"], cstate["start"])
-            centry = {"k_pages": kp, "v_pages": vp}
+            dx, centry = attention.attn_prefill_paged(
+                lp["mixer"], h, cfg, cstate, cstate["start"])
         elif mode == "decode":
             dx, kc, vc = attention.attn_decode(
                 lp["mixer"], h, cfg, cstate["k"], cstate["v"], pos)
@@ -505,7 +504,13 @@ def supports_paged_prefill(cfg: ModelConfig) -> bool:
 
 
 def init_paged_cache(cfg: ModelConfig, max_slots: int, num_pages: int,
-                     page_size: int) -> dict:
+                     page_size: int, kv_format: str = "fp") -> dict:
+    """``kv_format`` (core/kv_quant.py) picks the attention pool storage:
+    "fp" keeps cfg.dtype pages; "int8"/"sc" store int8 level pools plus a
+    parallel per-position-per-head f32 scale pool (+ the sc int8 residual
+    pool).  All-zero init dequantizes to exact 0 in every format, so the
+    trash page and unwritten positions behave identically to fp."""
+    check_kv_format(kv_format)
     dtype = jnp.dtype(cfg.dtype)
     rows = max_slots + 1                      # + scratch lane
     dh, hkv = cfg.head_dim, cfg.n_kv_heads
@@ -513,8 +518,17 @@ def init_paged_cache(cfg: ModelConfig, max_slots: int, num_pages: int,
     def entry(spec: LayerSpec) -> dict:
         e = {}
         if spec.mixer == "attn":
-            e["k_pages"] = jnp.zeros((num_pages, page_size, hkv, dh), dtype)
-            e["v_pages"] = jnp.zeros((num_pages, page_size, hkv, dh), dtype)
+            kv_dt = dtype if kv_format == "fp" else jnp.int8
+            e["k_pages"] = jnp.zeros((num_pages, page_size, hkv, dh), kv_dt)
+            e["v_pages"] = jnp.zeros((num_pages, page_size, hkv, dh), kv_dt)
+            if kv_format != "fp":
+                sshape = (num_pages, page_size, hkv)
+                e["k_scale"] = jnp.zeros(sshape, jnp.float32)
+                e["v_scale"] = jnp.zeros(sshape, jnp.float32)
+            if kv_format == "sc":
+                rshape = (num_pages, page_size, hkv, dh)
+                e["k_resid"] = jnp.zeros(rshape, jnp.int8)
+                e["v_resid"] = jnp.zeros(rshape, jnp.int8)
         elif spec.mixer == "mamba":
             e.update(mamba.mamba_state_init(cfg, rows, dtype))
         elif spec.mixer == "rwkv6":
@@ -529,7 +543,7 @@ def init_paged_cache(cfg: ModelConfig, max_slots: int, num_pages: int,
     return {"periods": periods}
 
 
-def paged_cache_specs(cfg: ModelConfig) -> dict:
+def paged_cache_specs(cfg: ModelConfig, kv_format: str = "fp") -> dict:
     """Logical-axis tuples per paged-cache leaf (shard_tree(logical=True)).
 
     KV page pools shard over their head axis ("model" carries KV heads —
@@ -538,14 +552,25 @@ def paged_cache_specs(cfg: ModelConfig) -> dict:
     unsharded: which page a request owns is HOST bookkeeping
     (serving/paging.py) and must remain device-count-agnostic.  Leaves
     whose channel count doesn't divide the mesh axis degrade to
-    replicated via ``fit_spec``.
+    replicated via ``fit_spec``.  ``kv_format`` must match
+    :func:`init_paged_cache`'s — ``shard_tree`` maps the spec tree over
+    the cache tree leaf-for-leaf, so the scale/residual specs exist
+    exactly when their pools do (same head axis over "model").
     """
+    check_kv_format(kv_format)
     def entry(spec: LayerSpec) -> dict:
         e = {}
         if spec.mixer == "attn":
             # (n_periods, num_pages, page, Hkv, Dh)
             e["k_pages"] = (None, None, None, "model", None)
             e["v_pages"] = (None, None, None, "model", None)
+            if kv_format != "fp":
+                # (n_periods, num_pages, page, Hkv)
+                e["k_scale"] = (None, None, None, "model")
+                e["v_scale"] = (None, None, None, "model")
+            if kv_format == "sc":
+                e["k_resid"] = (None, None, None, "model", None)
+                e["v_resid"] = (None, None, None, "model", None)
         elif spec.mixer == "mamba":
             # h: (n_periods, rows, d_inner, n); conv: (…, k-1, d_inner)
             e["h"] = (None, None, "model", None)
@@ -562,7 +587,11 @@ def paged_cache_specs(cfg: ModelConfig) -> dict:
     return {"periods": periods}
 
 
-_POOL_KEYS = ("k_pages", "v_pages")
+# shared page-pool leaves (passed whole to every lane, never gathered by
+# slot id) vs per-slot state rows; the scale/residual pools of the
+# compressed kv_formats are pools like the pages they describe
+_POOL_KEYS = ("k_pages", "v_pages", "k_scale", "v_scale",
+              "k_resid", "v_resid")
 
 
 def paged_decode_step(params: dict, cache: dict, tokens: jax.Array,

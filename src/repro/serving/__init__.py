@@ -1,8 +1,11 @@
 """Serving: paged-KV continuous-batching engine over the zoo (see README.md)."""
 
+from .config import DATAPATHS, EngineConfig
 from .engine import Request, ServeEngine, sequential_generate
-from .paging import PageAllocator, PageTable
+from .paging import (PageAllocator, PageTable, kv_page_bytes,
+                     slots_per_gib)
 from .sampling import SamplingParams
 
-__all__ = ["ServeEngine", "Request", "SamplingParams",
-           "sequential_generate", "PageAllocator", "PageTable"]
+__all__ = ["ServeEngine", "Request", "SamplingParams", "EngineConfig",
+           "DATAPATHS", "sequential_generate", "PageAllocator",
+           "PageTable", "kv_page_bytes", "slots_per_gib"]

@@ -1,0 +1,132 @@
+"""Typed, validated construction surface for :class:`ServeEngine`.
+
+The engine grew eleven constructor knobs across six PRs (slots, paging,
+chunking, datapath, two kernel backends, prefill mode, mesh rules, and
+now the KV storage format) with the cross-field rules scattered through
+``__init__``.  :class:`EngineConfig` is the single home for all of them:
+a frozen dataclass carrying every serving knob, with EVERY validation —
+per-field domains and cross-field compatibility alike — in
+:meth:`EngineConfig.validate`.
+
+``ServeEngine(params, cfg, **kwargs)`` still works: the old kwargs are a
+thin shim that builds an ``EngineConfig`` and delegates, so the
+dataclass is the single construction path either way.  New code should
+say what it means::
+
+    from repro.serving import EngineConfig, ServeEngine
+
+    config = EngineConfig(max_slots=8, page_size=16, datapath="sc_int",
+                          kv_format="int8")
+    eng = ServeEngine.from_config(params, cfg, config)
+
+Validation rules (each raises ``ValueError`` with a pointed message;
+tests/test_kv_format.py exercises every one):
+
+* ``max_slots >= 1``; ``max_len >= 2`` (a servable request is >= 1
+  prompt token + 1 generated token).
+* ``page_size`` is a power of two (the engine's pow2 bucket math and
+  ``pad_pow2`` contracts assume it).
+* ``num_pages`` is ``None`` (auto: full residency) or >= 2 (the pool
+  reserves page 0 as the trash page).
+* ``prefill_chunk >= 1``.
+* ``datapath`` in :data:`DATAPATHS`; ``kv_format`` in
+  :data:`~repro.core.kv_quant.KV_FORMATS`.
+* ``kv_format="sc"`` requires an SC datapath (``sc_int`` /
+  ``sc_int_approx``): the whole point of the SC-coded cache is keeping
+  K/V on the SC number system end to end — pairing it with the
+  fake-quant float path is a configuration error, not a degraded mode.
+* ``bsn_backend`` / ``attn_backend`` in
+  :data:`~repro.kernels.dispatch.BACKENDS` or ``None`` (auto).
+* ``prefill_mode`` is ``"chunked"`` or ``"exact"`` (debug oracle).
+* ``mesh_rules`` requires ``attn_backend`` in ``(None, "reference")`` —
+  the paged Pallas kernel is a single-device program; the mesh path
+  serves the constrained reference.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, fields
+
+from repro.core.kv_quant import KV_FORMATS
+from repro.distributed.sharding import MeshRules
+from repro.kernels.dispatch import BACKENDS
+
+__all__ = ["DATAPATHS", "EngineConfig"]
+
+DATAPATHS = ("qat", "sc_int", "sc_int_approx")
+
+
+@dataclass(frozen=True)
+class EngineConfig:
+    """Every serving knob of :class:`~repro.serving.ServeEngine`.
+
+    Defaults reproduce the historical kwarg defaults exactly.
+    """
+    max_slots: int = 4
+    max_len: int = 256
+    page_size: int = 16
+    num_pages: int | None = None
+    prefill_chunk: int = 64
+    datapath: str = "qat"
+    kv_format: str = "fp"
+    bsn_backend: str | None = None
+    attn_backend: str | None = None
+    prefill_mode: str = "chunked"
+    mesh_rules: MeshRules | None = None
+
+    def validate(self) -> "EngineConfig":
+        """Raise ``ValueError`` on the first violated rule; return self
+        so construction sites can chain ``EngineConfig(...).validate()``."""
+        if self.max_slots < 1:
+            raise ValueError(f"max_slots must be >= 1, got {self.max_slots}")
+        if self.max_len < 2:
+            raise ValueError(f"max_len must be >= 2 (one prompt token + "
+                             f"one generated token), got {self.max_len}")
+        if self.page_size < 1 or self.page_size & (self.page_size - 1):
+            raise ValueError(f"page_size must be a power of two, "
+                             f"got {self.page_size}")
+        if self.num_pages is not None and self.num_pages < 2:
+            raise ValueError(f"num_pages must be >= 2 (page 0 is the "
+                             f"reserved trash page), got {self.num_pages}")
+        if self.prefill_chunk < 1:
+            raise ValueError(f"prefill_chunk must be >= 1, "
+                             f"got {self.prefill_chunk}")
+        if self.datapath not in DATAPATHS:
+            raise ValueError(f"datapath must be one of {DATAPATHS}, "
+                             f"got {self.datapath!r}")
+        if self.kv_format not in KV_FORMATS:
+            raise ValueError(f"kv_format must be one of {KV_FORMATS}, "
+                             f"got {self.kv_format!r}")
+        if self.kv_format == "sc" and self.datapath == "qat":
+            raise ValueError(
+                "kv_format='sc' stores the cache in the SC coding "
+                "(thermometer + pow2 residual) and pairs with the SC "
+                "datapaths only — use datapath='sc_int' or "
+                "'sc_int_approx', or kv_format='int8'/'fp' with 'qat'")
+        if self.bsn_backend is not None \
+                and self.bsn_backend not in BACKENDS:
+            raise ValueError(f"bsn_backend must be one of {BACKENDS} or "
+                             f"None (auto), got {self.bsn_backend!r}")
+        if self.attn_backend is not None \
+                and self.attn_backend not in BACKENDS:
+            raise ValueError(f"attn_backend must be one of {BACKENDS} or "
+                             f"None (auto), got {self.attn_backend!r}")
+        if self.prefill_mode not in ("chunked", "exact"):
+            raise ValueError(f"prefill_mode must be 'chunked' or 'exact' "
+                             f"(debug oracle), got {self.prefill_mode!r}")
+        if self.mesh_rules is not None \
+                and self.attn_backend not in (None, "reference"):
+            raise ValueError(
+                "mesh-sharded serving runs the constrained reference "
+                "attention (the paged Pallas kernel is a single-device "
+                f"program) — drop attn_backend={self.attn_backend!r} or "
+                "the mesh_rules")
+        return self
+
+    def replace(self, **changes) -> "EngineConfig":
+        import dataclasses
+        return dataclasses.replace(self, **changes)
+
+    @classmethod
+    def field_names(cls) -> tuple[str, ...]:
+        return tuple(f.name for f in fields(cls))

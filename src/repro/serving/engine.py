@@ -93,21 +93,21 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.kv_quant import kv_quant
 from repro.distributed.sharding import MeshRules, mesh_rules, shard_tree
 from repro.kernels import dispatch as kernel_dispatch
 from repro.models import (decode_step, init_paged_cache, paged_cache_specs,
                           paged_decode_step, paged_prefill, param_specs,
                           prefill, supports_paged_prefill)
 
+from .config import DATAPATHS, EngineConfig
 from .paging import (TRASH_PAGE, PageAllocator, PageTable, pad_pow2,
                      pages_needed)
 from .sampling import (SamplingParams, greedy_tokens, pack_sampling,
                        sample_tokens)
 
-__all__ = ["Request", "SamplingParams", "ServeEngine",
-           "sequential_generate"]
-
-DATAPATHS = ("qat", "sc_int", "sc_int_approx")
+__all__ = ["Request", "SamplingParams", "ServeEngine", "EngineConfig",
+           "DATAPATHS", "sequential_generate"]
 
 
 def _cfg_for_datapath(cfg: ModelConfig, datapath: str) -> ModelConfig:
@@ -137,54 +137,51 @@ class Request:
 
 
 class ServeEngine:
+    """Construct with :meth:`from_config` (an :class:`EngineConfig` is
+    the single validated construction path); the keyword signature below
+    is the back-compat shim — it builds the same ``EngineConfig`` and
+    delegates, so both spellings hit identical validation."""
+
     def __init__(self, params, cfg: ModelConfig, max_slots: int = 4,
                  max_len: int = 256, bsn_backend: str | None = None,
                  page_size: int = 16, num_pages: int | None = None,
                  prefill_chunk: int = 64, datapath: str = "qat",
                  mesh_rules: MeshRules | None = None,
                  prefill_mode: str = "chunked",
-                 attn_backend: str | None = None):
+                 attn_backend: str | None = None,
+                 kv_format: str = "fp",
+                 config: EngineConfig | None = None):
         assert not cfg.is_encoder, "encoders are served via forward()"
-        if prefill_mode not in ("chunked", "exact"):
-            raise ValueError(f"prefill_mode must be 'chunked' or 'exact' "
-                             f"(debug oracle), got {prefill_mode!r}")
-        self.prefill_mode = prefill_mode
-        if bsn_backend is not None \
-                and bsn_backend not in kernel_dispatch.BACKENDS:
-            raise ValueError(f"bsn_backend must be one of "
-                             f"{kernel_dispatch.BACKENDS} or None (auto), "
-                             f"got {bsn_backend!r}")
-        if page_size < 1 or page_size & (page_size - 1):
-            raise ValueError(f"page_size must be a power of two, "
-                             f"got {page_size}")
-        if attn_backend is not None \
-                and attn_backend not in kernel_dispatch.BACKENDS:
-            raise ValueError(f"attn_backend must be one of "
-                             f"{kernel_dispatch.BACKENDS} or None (auto), "
-                             f"got {attn_backend!r}")
-        if mesh_rules is not None and attn_backend not in (None,
-                                                           "reference"):
-            raise ValueError(
-                "mesh-sharded serving runs the constrained reference "
-                "attention (the paged Pallas kernel is a single-device "
-                f"program) — drop attn_backend={attn_backend!r} or the "
-                "mesh_rules")
-        self.bsn_backend = bsn_backend
-        self.attn_backend = attn_backend
-        self.cfg = _cfg_for_datapath(cfg, datapath)
-        self.datapath = datapath
-        self.max_slots, self.max_len = max_slots, max_len
-        self.page_size = page_size
-        self.max_pages = pages_needed(max_len, page_size)
+        if config is None:
+            config = EngineConfig(
+                max_slots=max_slots, max_len=max_len, page_size=page_size,
+                num_pages=num_pages, prefill_chunk=prefill_chunk,
+                datapath=datapath, kv_format=kv_format,
+                bsn_backend=bsn_backend, attn_backend=attn_backend,
+                prefill_mode=prefill_mode, mesh_rules=mesh_rules)
+        config.validate()
+        self.config = config
+        mesh_rules = config.mesh_rules
+        self.prefill_mode = config.prefill_mode
+        self.bsn_backend = config.bsn_backend
+        self.attn_backend = config.attn_backend
+        self.cfg = _cfg_for_datapath(cfg, config.datapath)
+        self.datapath = config.datapath
+        self.kv_format = config.kv_format
+        self.max_slots, self.max_len = config.max_slots, config.max_len
+        self.page_size = config.page_size
+        self.max_pages = pages_needed(config.max_len, config.page_size)
+        num_pages = config.num_pages
         if num_pages is None:
             # full residency for every slot + the reserved trash page
-            num_pages = max_slots * self.max_pages + 1
+            num_pages = config.max_slots * self.max_pages + 1
         self.allocator = PageAllocator(num_pages)
         self._rid = itertools.count()
         self.queue: list[Request] = []
-        self.slots: list[Request | None] = [None] * max_slots
-        cache = init_paged_cache(self.cfg, max_slots, num_pages, page_size)
-        self._chunk = pad_pow2(max(prefill_chunk, page_size))
+        self.slots: list[Request | None] = [None] * config.max_slots
+        cache = init_paged_cache(self.cfg, config.max_slots, num_pages,
+                                 config.page_size, config.kv_format)
+        self._chunk = pad_pow2(max(config.prefill_chunk, config.page_size))
 
         # Mesh-sharded serving (tensor-parallel decode): params take the
         # serving layout (every projection column-parallel over "model",
@@ -200,7 +197,8 @@ class ServeEngine:
         if mesh_rules is not None:
             params = shard_tree(params, param_specs(self.cfg, serving=True),
                                 mesh_rules)
-            cache = shard_tree(cache, paged_cache_specs(self.cfg),
+            cache = shard_tree(cache,
+                               paged_cache_specs(self.cfg, self.kv_format),
                                mesh_rules, logical=True)
         self.params = params
         self.cache = cache
@@ -225,6 +223,13 @@ class ServeEngine:
                                         donate_argnums=(1,), **jit_kw)
         self._prefill_exact = jax.jit(self._prefill_exact_fn,
                                       static_argnames=("do_sample",))
+
+    @classmethod
+    def from_config(cls, params, cfg: ModelConfig,
+                    config: EngineConfig) -> "ServeEngine":
+        """The preferred construction path: every knob in one validated
+        :class:`EngineConfig` (see serving/config.py for the rules)."""
+        return cls(params, cfg, config=config)
 
     # -- traced bodies --------------------------------------------------
     #
@@ -298,6 +303,13 @@ class ServeEngine:
             # sequential_generate has no first-token logit either — fail
             # loudly at the API boundary instead.
             raise ValueError("empty prompt: need at least one token")
+        if max_new_tokens < 1:
+            # a <= 0 budget used to be admitted anyway: _check_done only
+            # runs AFTER a token lands, so the request produced one token
+            # the caller never asked for (and the slot/pages were held
+            # for a full prefill + decode round-trip meanwhile)
+            raise ValueError(f"max_new_tokens must be >= 1, "
+                             f"got {max_new_tokens}")
         if len(prompt) > self.max_len - 1:
             raise ValueError(f"prompt of {len(prompt)} tokens exceeds "
                              f"max_len={self.max_len}")
@@ -407,7 +419,13 @@ class ServeEngine:
         self._check_done(req)
 
     def _scatter_prefill(self, req: Request, cache_one: dict):
-        """Write a (B=1, exact-length) prefill cache into pages/rows."""
+        """Write a (B=1, exact-length) prefill cache into pages/rows.
+
+        Compressed caches quantize here too (``kv_quant`` on the dense
+        K/V rows, then pad + page-scatter codes/scales/residuals with the
+        same indices): quantization is per-position and elementwise, so
+        this exact oracle produces bit-identical pool contents to the
+        chunked path's quantize-on-scatter."""
         plen = len(req.prompt)
         page = self.page_size
         npg = pages_needed(plen, page)
@@ -420,14 +438,21 @@ class ServeEngine:
             one = cache_one["periods"][key]
             for name, val in one.items():       # leaves: (P, 1, ...)
                 if name in ("k", "v"):          # (P, 1, plen, Hkv, Dh)
-                    pad = npg * page - plen
-                    kv = jnp.pad(val[:, 0], ((0, 0), (0, pad),
-                                             (0, 0), (0, 0)))
-                    kv = kv.reshape(kv.shape[0], npg, page,
-                                    *kv.shape[2:])
-                    pool = entry[name + "_pages"]
-                    entry[name + "_pages"] = pool.at[:, phys].set(
-                        kv.astype(pool.dtype))
+                    qd = kv_quant(val[:, 0], self.kv_format)
+                    stores = {name + "_pages": qd["q"]}
+                    if "scale" in qd:
+                        stores[name + "_scale"] = qd["scale"]
+                    if "resid" in qd:
+                        stores[name + "_resid"] = qd["resid"]
+                    for pool_name, sv in stores.items():
+                        pads = [(0, 0)] * sv.ndim
+                        pads[1] = (0, npg * page - plen)
+                        sv = jnp.pad(sv, pads)
+                        sv = sv.reshape(sv.shape[0], npg, page,
+                                        *sv.shape[2:])
+                        pool = entry[pool_name]
+                        entry[pool_name] = pool.at[:, phys].set(
+                            sv.astype(pool.dtype))
                 else:                           # recurrent state rows
                     entry[name] = jax.tree.map(
                         lambda full, o: full.at[:, row].set(
@@ -563,9 +588,11 @@ def sequential_generate(params, cfg: ModelConfig, prompts: list[list[int]],
                         max_len: int = 256, bsn_backend: str | None = None,
                         datapath: str = "qat",
                         sampling: SamplingParams | list[SamplingParams]
-                        | None = None) -> list[list[int]]:
-    """Per-request prefill + one-token-at-a-time decode over the dense
-    (un-paged) cache — the seed engine's per-slot execution model.
+                        | None = None,
+                        kv_format: str = "fp",
+                        page_size: int = 8) -> list[list[int]]:
+    """Per-request prefill + one-token-at-a-time decode — the seed
+    engine's per-slot execution model.
 
     This is the reference oracle: the batched paged engine must produce
     these tokens exactly (tests/test_paged_kv.py, test_sampling.py) and
@@ -576,6 +603,16 @@ def sequential_generate(params, cfg: ModelConfig, prompts: list[list[int]],
     ``sample_tokens`` the engine traces, at batch 1, with the same
     (seed, position) fold-in streams — position ``len(prompt) + n`` for
     the n-th generated token.
+
+    ``kv_format="fp"`` runs the dense (un-paged) cache, bit-identical
+    to the seed engine.  Compressed formats have no dense analogue (the
+    codes live in page pools), so the oracle becomes a one-request-at-a-
+    time PAGED loop: a private B=1 cache with an identity page table,
+    one ``paged_prefill`` call, then per-token ``paged_decode_step`` —
+    independent of the engine's allocator, bucketing, admission and
+    batching (and of its ``page_size``: per-position quantization makes
+    the codes page-layout-invariant), which is what makes the batched ==
+    sequential differential meaningful for int8/sc too.
     """
     cfg = _cfg_for_datapath(cfg, datapath)
     sps = sampling if isinstance(sampling, list) \
@@ -585,6 +622,10 @@ def sequential_generate(params, cfg: ModelConfig, prompts: list[list[int]],
                          f"{len(prompts)} prompts")
     # None entries mean greedy, same as ServeEngine.submit(sampling=None)
     sps = [sp if sp is not None else SamplingParams() for sp in sps]
+    if kv_format != "fp":
+        return _paged_sequential_generate(
+            params, cfg, prompts, sps, max_new_tokens, eos_id, max_len,
+            bsn_backend, kv_format, page_size)
     # params are explicit jit ARGUMENTS, matching the engine's traced
     # entry points: closure-captured params constant-fold differently in
     # XLA, and on the fake-quant lattice that 1-ulp drift can flip exact
@@ -619,6 +660,65 @@ def sequential_generate(params, cfg: ModelConfig, prompts: list[list[int]],
                 tok = jnp.asarray([[gen[-1]]], jnp.int32)
                 logits, cache = decode_fn(params, cache, tok)
                 gen.append(pick(logits[:, 0], length + 1))
+                length += 1
+            outs.append(gen)
+    return outs
+
+
+def _paged_sequential_generate(params, cfg: ModelConfig, prompts, sps,
+                               max_new_tokens: int, eos_id: int | None,
+                               max_len: int, bsn_backend: str | None,
+                               kv_format: str,
+                               page_size: int) -> list[list[int]]:
+    """The B=1 paged oracle behind ``sequential_generate(kv_format=...)``:
+    a private single-slot cache per request, identity page table (page
+    ``j`` of the request lives at physical page ``j + 1``), one chunked
+    ``paged_prefill`` covering the whole prompt, then one
+    ``paged_decode_step`` per token.  No allocator, no bucketing, no
+    admission — exactly the "one request at a time" semantics of the
+    dense oracle, on the compressed pool layout."""
+    assert supports_paged_prefill(cfg), \
+        "compressed-KV sequential oracle needs token prompts"
+    sample_fn = jax.jit(
+        lambda lg, pos, sm: sample_tokens(lg, pos, sm, cfg.vocab_size))
+    greedy_fn = jax.jit(lambda lg: greedy_tokens(lg, cfg.vocab_size))
+    decode_fn = jax.jit(lambda p, c, t, s, pt, ln: paged_decode_step(
+        p, c, t, s, pt, ln, cfg))
+    slot_ids = jnp.zeros((1,), jnp.int32)
+    outs = []
+    with kernel_dispatch.backend_scope(bsn_backend):
+        for prompt, sp in zip(prompts, sps):
+            samp = pack_sampling([sp])
+
+            def pick(lg, t):
+                if sp.greedy:
+                    return int(greedy_fn(lg)[0])
+                return int(sample_fn(lg, jnp.asarray([t], jnp.int32),
+                                     samp)[0])
+
+            # prompt pages + every decode write fit the identity table
+            L = pad_pow2(max(len(prompt), page_size))
+            maxp = max(pages_needed(max_len, page_size), L // page_size)
+            cache = init_paged_cache(cfg, 1, maxp + 1, page_size,
+                                     kv_format)
+            tables = jnp.arange(1, maxp + 1, dtype=jnp.int32)[None, :]
+            toks = np.zeros((1, L), np.int32)
+            toks[0, :len(prompt)] = prompt
+            plen = jnp.asarray([len(prompt)], jnp.int32)
+            logits, cache = jax.jit(
+                lambda p, c, tk: paged_prefill(
+                    p, c, tk, tables, plen, cfg, chunk=L,
+                    slot_ids=slot_ids))(params, cache, jnp.asarray(toks))
+            length = len(prompt)
+            gen = [pick(logits, length)]
+            while (len(gen) < max_new_tokens
+                   and length < max_len - 1
+                   and (eos_id is None or gen[-1] != eos_id)):
+                tok = jnp.asarray([gen[-1]], jnp.int32)
+                lengths = jnp.asarray([length], jnp.int32)
+                logits, cache = decode_fn(params, cache, tok, slot_ids,
+                                          tables, lengths)
+                gen.append(pick(logits, length + 1))
                 length += 1
             outs.append(gen)
     return outs

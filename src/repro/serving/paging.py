@@ -26,7 +26,7 @@ from dataclasses import dataclass, field
 import numpy as np
 
 __all__ = ["TRASH_PAGE", "PageAllocator", "PageTable", "pages_needed",
-           "pad_pow2"]
+           "pad_pow2", "kv_page_bytes", "slots_per_gib"]
 
 TRASH_PAGE = 0
 
@@ -34,6 +34,44 @@ TRASH_PAGE = 0
 def pages_needed(length: int, page_size: int) -> int:
     """Pages required to hold ``length`` tokens (ceil division)."""
     return max(0, (length + page_size - 1) // page_size)
+
+
+def kv_page_bytes(page_size: int, n_kv_heads: int, head_dim: int,
+                  kv_format: str = "fp", dtype_bytes: int = 4) -> int:
+    """Device bytes one physical page costs per attention layer (K and V
+    together), including the parallel scale / residual pools a
+    compressed format carries alongside the code pages.
+
+    * ``"fp"``   — two float pools: ``2 * page * Hkv * Dh * dtype_bytes``.
+    * ``"int8"`` — int8 code pages plus one f32 scale per (position,
+      head): ``2 * (page*Hkv*Dh + page*Hkv*4)``.
+    * ``"sc"``   — int8 coarse codes + int8 residual pages + f32 scales:
+      ``2 * (2*page*Hkv*Dh + page*Hkv*4)``.
+    """
+    elems = page_size * n_kv_heads * head_dim
+    scales = page_size * n_kv_heads * 4            # f32 per-position-per-head
+    if kv_format == "fp":
+        return 2 * elems * dtype_bytes
+    if kv_format == "int8":
+        return 2 * (elems + scales)
+    if kv_format == "sc":
+        return 2 * (2 * elems + scales)
+    raise ValueError(f"unknown kv_format {kv_format!r}")
+
+
+def slots_per_gib(max_len: int, page_size: int, n_kv_heads: int,
+                  head_dim: int, kv_format: str = "fp",
+                  dtype_bytes: int = 4, n_layers: int = 1) -> float:
+    """Full-length request slots one GiB of KV pool can hold.
+
+    Pure accounting over :func:`kv_page_bytes` — the capacity headline
+    BENCH_serving.json records per format (int8 >= 2x fp at any shape
+    with Dh >= 8, since codes are 4x smaller and scales amortize over
+    ``head_dim``)."""
+    per_slot = (pages_needed(max_len, page_size)
+                * kv_page_bytes(page_size, n_kv_heads, head_dim,
+                                kv_format, dtype_bytes) * n_layers)
+    return (1 << 30) / per_slot
 
 
 def _pow2_up(n: int) -> int:

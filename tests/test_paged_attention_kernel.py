@@ -161,9 +161,9 @@ CFG = get_arch("granite-3-2b").scaled(n_layers=2, **SCALE)
 PROMPTS = [[1, 2, 3], [4, 5, 6, 7], [8, 9]]
 
 
-def _engine_tokens(params, datapath, attn_backend, max_new=4):
+def _engine_tokens(params, datapath, attn_backend, max_new=4, **kw):
     eng = ServeEngine(params, CFG, max_slots=2, max_len=32, page_size=8,
-                      datapath=datapath, attn_backend=attn_backend)
+                      datapath=datapath, attn_backend=attn_backend, **kw)
     for p in PROMPTS:
         eng.submit(p, max_new_tokens=max_new)
     done = eng.run_to_completion()
@@ -183,6 +183,24 @@ def test_engine_kernel_three_way_token_identity(datapath):
                               max_len=32, datapath=datapath)
     assert kern == refe, datapath
     assert refe == seq, datapath
+
+
+@pytest.mark.parametrize("fmt", ["int8", "sc"])
+def test_engine_kernel_three_way_token_identity_compressed(fmt):
+    """The compressed-pool third of the acceptance differential: the
+    fused-dequant kernels (decode AND prefill, with the scale/residual
+    pools riding the scalar-prefetch machinery) serve exactly the tokens
+    of the dequant-fused XLA reference engine and of the same-format B=1
+    paged sequential oracle."""
+    datapath = "sc_int" if fmt == "sc" else "qat"
+    params = init_params(jax.random.key(0), CFG)
+    kern = _engine_tokens(params, datapath, KERNEL, kv_format=fmt)
+    refe = _engine_tokens(params, datapath, "reference", kv_format=fmt)
+    seq = sequential_generate(params, CFG, PROMPTS, max_new_tokens=4,
+                              max_len=32, datapath=datapath,
+                              kv_format=fmt)
+    assert kern == refe, fmt
+    assert refe == seq, fmt
 
 
 def test_engine_auto_serves_the_kernel_off_tpu():

@@ -32,7 +32,7 @@ from hypothesis import strategies as st
 from repro.configs import LayerSpec, get_arch
 from repro.models import init_params
 from repro.serving import (PageAllocator, PageTable, SamplingParams,
-                           ServeEngine, sequential_generate)
+                           ServeEngine, kv_page_bytes, sequential_generate)
 from repro.serving.paging import TRASH_PAGE, pad_pow2, pages_needed
 
 SCALE = dict(d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
@@ -100,6 +100,76 @@ def test_double_free_rejected():
         a.free(g)
     with pytest.raises(ValueError):
         a.free([TRASH_PAGE])
+
+
+def test_fragmentation_interleaved_alloc_free_to_exhaustion():
+    """Long interleaved alloc/free churn fragments the LIFO free list;
+    the invariants must hold at every step — no page owned twice, the
+    trash page never escapes, free_count + owned == capacity — and a
+    full drain after driving the pool to exhaustion restores the exact
+    starting capacity (no page leaked, none minted)."""
+    cap = 16
+    a = PageAllocator(cap + 1)
+    held = []
+    rng = np.random.default_rng(5)
+    for _ in range(200):
+        if held and rng.integers(3) == 0:
+            a.free(held.pop(int(rng.integers(len(held)))))
+        n = int(rng.integers(1, 5))
+        got = a.alloc(n)
+        if got is None:
+            assert n > a.free_count         # all-or-nothing, only short
+        else:
+            held.append(got)
+        owned = [p for g in held for p in g]
+        assert len(set(owned)) == len(owned)
+        assert TRASH_PAGE not in owned
+        assert a.free_count + len(owned) == cap
+    while (got := a.alloc(1)) is not None:   # exhaust
+        held.append(got)
+    assert a.free_count == 0 and a.alloc(1) is None
+    for g in held:
+        a.free(g)
+    assert a.free_count == cap
+
+
+def test_alloc_fail_leaves_pool_intact():
+    """A failing alloc must return None WITHOUT leaking partially
+    grabbed pages: the free count is untouched and a smaller request
+    still succeeds."""
+    a = PageAllocator(6)                     # 5 usable
+    g = a.alloc(3)
+    before = a.free_count
+    assert a.alloc(3) is None                # only 2 free
+    assert a.free_count == before
+    g2 = a.alloc(2)
+    assert g2 is not None and not set(g2) & set(g)
+    a.free(g)
+    a.free(g2)
+    assert a.free_count == 5
+
+
+@pytest.mark.parametrize("fmt,datapath", [("fp", "qat"), ("int8", "qat"),
+                                          ("sc", "sc_int")])
+def test_pool_device_bytes_match_page_accounting(fmt, datapath):
+    """The allocator's page count times ``kv_page_bytes`` equals the
+    actual device bytes of the attention pools (codes + scales +
+    residuals) per layer — the analytic capacity model the bench
+    records is exact, not an estimate."""
+    params = init_params(jax.random.key(0), CFG)
+    eng = ServeEngine(params, CFG, max_slots=2, max_len=32, page_size=8,
+                      datapath=datapath, kv_format=fmt)
+    per_page = kv_page_bytes(8, CFG.n_kv_heads,
+                             CFG.d_model // CFG.n_heads, fmt)
+    pool_keys = ("k_pages", "v_pages", "k_scale", "v_scale",
+                 "k_resid", "v_resid")
+    for entry in eng.cache["periods"].values():
+        if "k_pages" not in entry:
+            continue
+        n_periods, num_pages = entry["k_pages"].shape[:2]
+        assert num_pages == eng.allocator.num_pages
+        got = sum(entry[k].nbytes for k in pool_keys if k in entry)
+        assert got == n_periods * num_pages * per_page, fmt
 
 
 @given(st.integers(0, 40), st.integers(0, 40))
@@ -366,17 +436,21 @@ def test_mamba_conv_tail_across_chunk_boundaries():
 
 def _poison_pools(eng, keep):
     """Set every KV pool position NOT in ``keep`` (a set of (page, off)
-    pairs) to a huge finite value, in every layer."""
+    pairs) to a huge finite value, in every layer.  Compressed formats
+    carry parallel scale / residual pools; their positions poison too
+    (int8 code pools saturate at +127, float scale pools get the huge
+    value), so a mask leak would blow up regardless of format."""
     periods = {}
     for key, entry in eng.cache["periods"].items():
         entry = dict(entry)
-        for name in ("k_pages", "v_pages"):
+        for name in ("k_pages", "v_pages", "k_scale", "v_scale",
+                     "k_resid", "v_resid"):
             if name in entry:
                 pool = np.asarray(entry[name]).copy()
                 mask = np.ones(pool.shape[1:3], bool)   # (num_pages, page)
                 for pg, off in keep:
                     mask[pg, off] = False
-                pool[:, mask] = 3e4
+                pool[:, mask] = 127 if pool.dtype == np.int8 else 3e4
                 entry[name] = jnp.asarray(pool)
         periods[key] = entry
     eng.cache = {"periods": periods}
@@ -413,6 +487,34 @@ def test_padded_tail_kv_positions_never_attend(prefill_mode):
         ref = sequential_generate(params, CFG, prompts,
                                   max_new_tokens=4, max_len=16)
         assert got == ref, (prefill_mode, plen)
+
+
+@pytest.mark.parametrize("fmt,datapath", [("int8", "qat"),
+                                          ("sc", "sc_int")])
+def test_padded_tail_never_attends_compressed(fmt, datapath):
+    """The poison theorem on the compressed pools: codes, scales AND
+    residuals outside the positions a request owns must never reach
+    attention — poisoned scales would multiply into huge dequantized
+    K/V if any masked position leaked through."""
+    params = init_params(jax.random.key(0), CFG)
+    page = 4
+    prompts = [[3, 1, 4, 1, 5, 9], [2, 6]]
+    eng = ServeEngine(params, CFG, max_slots=2, max_len=16,
+                      page_size=page, datapath=datapath, kv_format=fmt)
+    for p in prompts:
+        eng.submit(p, max_new_tokens=4)
+    _poison_pools(eng, keep=set())      # prefill must mask trash reads
+    eng._admit()
+    keep = {(r._table.pages[t // page], t % page)
+            for r in eng.slots if r is not None
+            for t in range(len(r.prompt))}
+    _poison_pools(eng, keep)            # decode must mask the tail pad
+    done = eng.run_to_completion()
+    got = [r.generated for r in sorted(done, key=lambda r: r.rid)]
+    want = sequential_generate(params, CFG, prompts, max_new_tokens=4,
+                               max_len=16, datapath=datapath,
+                               kv_format=fmt)
+    assert got == want, fmt
 
 
 def test_boundary_prompts_recurrent_match_sequential():

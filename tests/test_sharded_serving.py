@@ -57,10 +57,10 @@ def _rules():
 
 
 def _engine_tokens(params, cfg, datapath, rules, max_new=4,
-                   sampling=None, prefill_mode="chunked"):
+                   sampling=None, prefill_mode="chunked", **kw):
     eng = ServeEngine(params, cfg, max_slots=2, max_len=32, page_size=8,
                       datapath=datapath, mesh_rules=rules,
-                      prefill_mode=prefill_mode)
+                      prefill_mode=prefill_mode, **kw)
     sps = sampling or [None] * len(PROMPTS)
     for p, sp in zip(PROMPTS, sps):
         eng.submit(p, max_new_tokens=max_new, sampling=sp)
@@ -110,6 +110,43 @@ def test_sampled_mesh_on_equals_mesh_off_equals_sequential(datapath):
                                  max_new_tokens=4, max_len=32,
                                  datapath=datapath)
     assert sharded != greedy, "sampling degenerated to greedy"
+
+
+@pytest.mark.parametrize("fmt,datapath", [("int8", "qat"),
+                                          ("int8", "sc_int"),
+                                          ("sc", "sc_int")])
+def test_mesh_on_equals_mesh_off_compressed(fmt, datapath):
+    """The compressed pools under the mesh: quantize-on-scatter and the
+    dequant-fused reference attention are elementwise per (position,
+    head), so sharding the KV-head axis changes nothing — mesh-on ==
+    mesh-off == same-format sequential oracle, token for token."""
+    params = init_params(jax.random.key(0), ATTN_CFG)
+    sharded = _engine_tokens(params, ATTN_CFG, datapath, _rules(),
+                             kv_format=fmt)
+    local = _engine_tokens(params, ATTN_CFG, datapath, None,
+                           kv_format=fmt)
+    seq = sequential_generate(params, ATTN_CFG, PROMPTS, max_new_tokens=4,
+                              max_len=32, datapath=datapath,
+                              kv_format=fmt)
+    assert sharded == local, (fmt, datapath)
+    assert local == seq, (fmt, datapath)
+
+
+def test_kv_scale_and_residual_pools_shard_with_the_code_pages():
+    """The parallel scale / residual pools carry the SAME KV-head "model"
+    axis as the code pages (a scale must live with its head's codes, or
+    the fused dequant would gather cross-device)."""
+    params = init_params(jax.random.key(0), ATTN_CFG)
+    eng = ServeEngine(params, ATTN_CFG, max_slots=2, max_len=32,
+                      page_size=8, mesh_rules=_rules(), datapath="sc_int",
+                      kv_format="sc")
+    entry = eng.cache["periods"]["p0"]
+    # codes / residuals: (n_periods, num_pages, page, Hkv, Dh)
+    assert entry["k_pages"].sharding.spec[3] == "model"
+    assert entry["k_resid"].sharding.spec[3] == "model"
+    # scales: (n_periods, num_pages, page, Hkv)
+    assert entry["k_scale"].sharding.spec[3] == "model"
+    assert entry["v_scale"].sharding.spec[3] == "model"
 
 
 def test_kv_pools_sharded_over_model_axis():
