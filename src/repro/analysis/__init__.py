@@ -1,7 +1,16 @@
-"""Roofline analysis from compiled dry-run artifacts."""
+"""Roofline analysis + static hot-path contract checks (see README.md)."""
 
-from .hlo_cost import HloCost, analyze_hlo
+from .contracts import (PassResult, Violation, audit_donation,
+                        audit_dtype_purity, audit_engine_retrace,
+                        audit_host_boundary, audit_sharding,
+                        run_engine_contracts)
+from .hlo_cost import HloCost, analyze_hlo, parse_computations
+from .lint import LintViolation, lint_repo, lint_sources
 from .roofline import RooflineReport, V5E, roofline_from_compiled
 
-__all__ = ["HloCost", "analyze_hlo", "RooflineReport", "V5E",
-           "roofline_from_compiled"]
+__all__ = ["HloCost", "analyze_hlo", "parse_computations",
+           "RooflineReport", "V5E", "roofline_from_compiled",
+           "Violation", "PassResult", "audit_donation",
+           "audit_dtype_purity", "audit_host_boundary", "audit_sharding",
+           "audit_engine_retrace", "run_engine_contracts",
+           "LintViolation", "lint_repo", "lint_sources"]

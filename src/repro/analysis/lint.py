@@ -1,0 +1,491 @@
+"""AST lint for hot-path hygiene (the static half of analysis/contracts).
+
+Four rules over the ``repro`` source tree, no jax import required:
+
+``host-op``          no ``.item()`` / ``jax.device_get`` / host-numpy
+                     (``np.``) attribute use in any function *reachable
+                     from a traced root* (the jitted step bodies).  Host
+                     math on static shapes belongs to ``math.*`` /
+                     builtins; a line may opt out with a
+                     ``lint: host-ok`` comment (e.g. genuinely host-side
+                     packing helpers that share a file with traced code).
+``blockspec-arity``  every Pallas ``BlockSpec`` index map in a function
+                     takes exactly ``len(grid) + num_scalar_prefetch``
+                     arguments — a wrong arity only explodes at trace
+                     time, on TPU, with a Mosaic error.
+``static-argnames``  every bool/str-typed parameter of a jitted function
+                     appears in ``static_argnames``/``static_argnums``
+                     (a traced bool weak-types the whole branch; a traced
+                     str is an error only at call time).  Array-typed
+                     keyword-only args stay traced, as they must.
+``jit-in-loop``      no ``jax.jit(...)`` call syntactically inside a
+                     ``for``/``while`` body — a fresh wrapper per
+                     iteration re-traces every call (the engine's
+                     sequential paged oracle shipped exactly this bug).
+
+Reachability is a conservative over-approximation: module-level and
+function-level imports both register, nested defs are scanned with their
+parents, and unresolvable calls (third-party, dynamic) are ignored.
+"""
+
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass
+from pathlib import Path
+
+__all__ = ["LintViolation", "lint_repo", "lint_sources", "TRACED_ROOTS",
+           "RULES"]
+
+RULES = ("host-op", "blockspec-arity", "static-argnames", "jit-in-loop")
+
+# (path suffix, function) pairs the traced hot paths hang from.  The
+# kernels/dispatch entries are listed explicitly because core.bsn
+# forwards to them through a lazy same-named import the resolver would
+# otherwise self-loop on.
+TRACED_ROOTS = (
+    ("models/transformer.py", "paged_decode_step"),
+    ("models/transformer.py", "paged_prefill"),
+    ("models/transformer.py", "prefill"),
+    ("models/transformer.py", "decode_step"),
+    ("models/transformer.py", "forward"),
+    ("serving/sampling.py", "sample_tokens"),
+    ("serving/sampling.py", "greedy_tokens"),
+    ("kernels/dispatch.py", "approx_bsn"),
+    ("kernels/dispatch.py", "paged_attn_decode"),
+    ("kernels/dispatch.py", "paged_attn_prefill"),
+)
+
+_HOST_OK_MARK = "lint: host-ok"
+
+
+@dataclass(frozen=True)
+class LintViolation:
+    file: str
+    line: int
+    rule: str
+    message: str
+
+    def to_dict(self) -> dict:
+        return {"file": self.file, "line": self.line, "rule": self.rule,
+                "message": self.message}
+
+
+# ---------------------------------------------------------------------------
+# module model
+# ---------------------------------------------------------------------------
+
+class _Module:
+    def __init__(self, key: str, fname: str, source: str):
+        self.key = key                       # dotted module name
+        self.fname = fname                   # display path
+        self.tree = ast.parse(source, filename=fname)
+        self.lines = source.splitlines()
+        self.functions: dict[str, ast.AST] = {}
+        # alias -> ("module", dotted) | ("symbol", dotted_module, name)
+        self.imports: dict[str, tuple] = {}
+        self._index()
+
+    def _package(self) -> str:
+        parts = self.key.split(".")
+        return self.key if self.fname.endswith("__init__.py") \
+            else ".".join(parts[:-1])
+
+    def _index(self) -> None:
+        pkg = self._package()
+        for node in ast.walk(self.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self.functions.setdefault(node.name, node)
+            elif isinstance(node, ast.Import):
+                for a in node.names:
+                    self.imports[a.asname or a.name.split(".")[0]] = \
+                        ("module", a.name)
+            elif isinstance(node, ast.ImportFrom):
+                base = node.module or ""
+                if node.level:
+                    up = pkg.split(".")
+                    up = up[:len(up) - (node.level - 1)]
+                    base = ".".join(up + ([node.module]
+                                          if node.module else []))
+                for a in node.names:
+                    if a.name == "*":
+                        continue
+                    self.imports[a.asname or a.name] = \
+                        ("symbol", base, a.name)
+
+
+def _load_modules(files: dict) -> dict:
+    """{display_name: source} -> {dotted key: _Module}.  Keys derive from
+    the path: ``.../src/repro/models/moe.py`` -> ``repro.models.moe``."""
+    mods = {}
+    for fname, src in files.items():
+        p = fname.replace("\\", "/")
+        if "/repro/" in p:
+            rel = "repro/" + p.split("/repro/")[-1]
+        else:
+            rel = p
+        key = rel[:-3] if rel.endswith(".py") else rel
+        key = key.replace("/", ".")
+        if key.endswith(".__init__"):
+            key = key[:-len(".__init__")]
+        mods[key] = _Module(key, fname, src)
+    return mods
+
+
+# ---------------------------------------------------------------------------
+# reachability (host-op rule)
+# ---------------------------------------------------------------------------
+
+def _resolve(mods: dict, modkey: str, name: str, depth: int = 0):
+    """Resolve ``name`` in module ``modkey`` to a (modkey, funcname) node,
+    following from-import chains (e.g. package __init__ re-exports)."""
+    if depth > 8 or modkey not in mods:
+        return None
+    mod = mods[modkey]
+    if name in mod.functions:
+        return (modkey, name)
+    imp = mod.imports.get(name)
+    if imp and imp[0] == "symbol":
+        return _resolve(mods, imp[1], imp[2], depth + 1)
+    return None
+
+
+def _call_targets(mods: dict, mod: _Module, fn: ast.AST):
+    out = []
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.Call):
+            continue
+        f = node.func
+        if isinstance(f, ast.Name):
+            tgt = _resolve(mods, mod.key, f.id)
+            if tgt:
+                out.append(tgt)
+        elif isinstance(f, ast.Attribute) and isinstance(f.value, ast.Name):
+            base = f.value.id
+            if base == "self":
+                tgt = _resolve(mods, mod.key, f.attr)
+                if tgt:
+                    out.append(tgt)
+            else:
+                imp = mod.imports.get(base)
+                if imp and imp[0] == "module":
+                    tgt = _resolve(mods, imp[1], f.attr)
+                    if tgt:
+                        out.append(tgt)
+                elif imp and imp[0] == "symbol":
+                    # "from repro.kernels import dispatch as kd" registers
+                    # as a symbol import of a module — chase it as one
+                    tgt = _resolve(mods, f"{imp[1]}.{imp[2]}", f.attr)
+                    if tgt:
+                        out.append(tgt)
+    return out
+
+
+def _reachable(mods: dict, roots) -> tuple:
+    """BFS over the resolved call graph.  Returns (reached set of
+    (modkey, fname), list of stale-root violations)."""
+    stale, frontier = [], []
+    for suffix, fname in roots:
+        hit = [m for m in mods.values()
+               if m.fname.replace("\\", "/").endswith(suffix)]
+        if not hit or fname not in hit[0].functions:
+            stale.append(LintViolation(
+                suffix, 0, "host-op",
+                f"traced root {suffix}:{fname} not found — update "
+                "analysis/lint.TRACED_ROOTS"))
+            continue
+        frontier.append((hit[0].key, fname))
+    seen = set()
+    while frontier:
+        node = frontier.pop()
+        if node in seen or node[0] not in mods:
+            continue
+        seen.add(node)
+        mod = mods[node[0]]
+        fn = mod.functions.get(node[1])
+        if fn is not None:
+            frontier.extend(_call_targets(mods, mod, fn))
+    return seen, stale
+
+
+def _numpy_aliases(mod: _Module) -> set:
+    return {alias for alias, imp in mod.imports.items()
+            if imp == ("module", "numpy")
+            or (imp[0] == "symbol" and imp[1] == "numpy")}
+
+
+def _host_op_scan(mods: dict, reached) -> list:
+    vios = []
+    for modkey, fname in sorted(reached):
+        mod = mods[modkey]
+        fn = mod.functions.get(fname)
+        np_names = _numpy_aliases(mod)
+
+        def ok_line(line_no: int) -> bool:
+            if 1 <= line_no <= len(mod.lines):
+                return _HOST_OK_MARK in mod.lines[line_no - 1]
+            return False
+
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call) \
+                    and isinstance(node.func, ast.Attribute) \
+                    and node.func.attr == "item" and not node.args:
+                if not ok_line(node.lineno):
+                    vios.append(LintViolation(
+                        mod.fname, node.lineno, "host-op",
+                        f"{fname}: .item() forces a device->host sync in "
+                        "traced-reachable code"))
+            elif isinstance(node, ast.Attribute) \
+                    and isinstance(node.value, ast.Name):
+                base, attr = node.value.id, node.attr
+                if base == "jax" and attr == "device_get":
+                    if not ok_line(node.lineno):
+                        vios.append(LintViolation(
+                            mod.fname, node.lineno, "host-op",
+                            f"{fname}: jax.device_get in traced-reachable "
+                            "code"))
+                elif base in np_names:
+                    if not ok_line(node.lineno):
+                        vios.append(LintViolation(
+                            mod.fname, node.lineno, "host-op",
+                            f"{fname}: host numpy ({base}.{attr}) in "
+                            "traced-reachable code — use jnp, or math/"
+                            "builtins for static-shape host arithmetic"))
+    return vios
+
+
+# ---------------------------------------------------------------------------
+# blockspec-arity rule
+# ---------------------------------------------------------------------------
+
+def _attr_tail(f: ast.AST) -> str:
+    return f.attr if isinstance(f, ast.Attribute) \
+        else (f.id if isinstance(f, ast.Name) else "")
+
+
+def _callable_arity(node: ast.AST, fn: ast.AST):
+    """Positional-arg count of an index map given as a Lambda or a Name
+    bound to a lambda / local def inside ``fn``; None if unresolvable."""
+    if isinstance(node, ast.Lambda):
+        return len(node.args.args)
+    if isinstance(node, ast.Name):
+        for n in ast.walk(fn):
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and n.name == node.id:
+                return len(n.args.args)
+            if isinstance(n, ast.Assign) \
+                    and isinstance(n.value, ast.Lambda) \
+                    and any(isinstance(t, ast.Name) and t.id == node.id
+                            for t in n.targets):
+                return len(n.value.args.args)
+    return None
+
+
+def _pallas_expected_arity(call: ast.Call):
+    """len(grid) + num_scalar_prefetch of one pallas_call, or None."""
+    grid_len, prefetch = None, 0
+    for kw in call.keywords:
+        if kw.arg == "grid" and isinstance(kw.value, (ast.Tuple, ast.List)):
+            grid_len = len(kw.value.elts)
+        elif kw.arg == "grid_spec" and isinstance(kw.value, ast.Call):
+            for gkw in kw.value.keywords:
+                if gkw.arg == "grid" \
+                        and isinstance(gkw.value, (ast.Tuple, ast.List)):
+                    grid_len = len(gkw.value.elts)
+                elif gkw.arg == "num_scalar_prefetch" \
+                        and isinstance(gkw.value, ast.Constant) \
+                        and isinstance(gkw.value.value, int):
+                    prefetch = gkw.value.value
+    return None if grid_len is None else grid_len + prefetch
+
+
+def _blockspec_scan(mod: _Module) -> list:
+    vios = []
+    for fn in {id(f): f for f in mod.functions.values()}.values():
+        expected = {_pallas_expected_arity(n)
+                    for n in ast.walk(fn)
+                    if isinstance(n, ast.Call)
+                    and _attr_tail(n.func) == "pallas_call"}
+        expected.discard(None)
+        if len(expected) != 1:
+            continue                 # no pallas_call, or ambiguous grids
+        want = expected.pop()
+        for n in ast.walk(fn):
+            if not (isinstance(n, ast.Call)
+                    and _attr_tail(n.func) == "BlockSpec"):
+                continue
+            idx_map = None
+            if len(n.args) >= 2:
+                idx_map = n.args[1]
+            for kw in n.keywords:
+                if kw.arg == "index_map":
+                    idx_map = kw.value
+            if idx_map is None:
+                continue
+            got = _callable_arity(idx_map, fn)
+            if got is not None and got != want:
+                vios.append(LintViolation(
+                    mod.fname, n.lineno, "blockspec-arity",
+                    f"BlockSpec index map takes {got} args but the "
+                    f"pallas_call grid rank + num_scalar_prefetch is "
+                    f"{want}"))
+    return vios
+
+
+# ---------------------------------------------------------------------------
+# static-argnames rule
+# ---------------------------------------------------------------------------
+
+def _static_names(call: ast.Call) -> set:
+    out = set()
+    for kw in call.keywords:
+        if kw.arg not in ("static_argnames", "static_argnums"):
+            continue
+        v = kw.value
+        elts = v.elts if isinstance(v, (ast.Tuple, ast.List)) else [v]
+        for e in elts:
+            if isinstance(e, ast.Constant):
+                out.add(e.value)
+    return out
+
+
+def _is_jax_jit(f: ast.AST) -> bool:
+    if isinstance(f, ast.Attribute):
+        return f.attr == "jit" and isinstance(f.value, ast.Name) \
+            and f.value.id == "jax"
+    return isinstance(f, ast.Name) and f.id == "jit"
+
+
+def _needs_static(arg: ast.arg, default) -> bool:
+    """bool/str-typed by annotation or literal default -> must be static.
+    Array-typed or unannotated args are assumed traced."""
+    if arg.annotation is not None:
+        try:
+            ann = ast.unparse(arg.annotation)
+        except Exception:
+            ann = ""
+        if "Array" in ann or "array" in ann:
+            return False
+        return "bool" in ann or "str" in ann
+    if isinstance(default, ast.Constant):
+        return isinstance(default.value, (bool, str))
+    return False
+
+
+def _check_jitted_def(mod: _Module, fndef, statics: set, line: int) -> list:
+    vios = []
+    a = fndef.args
+    if isinstance(fndef, ast.Lambda):
+        return vios                         # lambdas can't annotate
+    pos = list(a.posonlyargs) + list(a.args)
+    pos_defaults = [None] * (len(pos) - len(a.defaults)) + list(a.defaults)
+    for i, (arg, d) in enumerate(zip(pos, pos_defaults)):
+        if arg.arg == "self":
+            continue
+        if _needs_static(arg, d) and arg.arg not in statics \
+                and i not in statics:
+            vios.append(LintViolation(
+                mod.fname, line, "static-argnames",
+                f"jitted fn '{fndef.name}': bool/str arg '{arg.arg}' not "
+                "in static_argnames — it would be traced"))
+    for arg, d in zip(a.kwonlyargs, a.kw_defaults):
+        if _needs_static(arg, d) and arg.arg not in statics:
+            vios.append(LintViolation(
+                mod.fname, line, "static-argnames",
+                f"jitted fn '{fndef.name}': bool/str keyword arg "
+                f"'{arg.arg}' not in static_argnames — it would be "
+                "traced"))
+    return vios
+
+
+def _static_argnames_scan(mod: _Module) -> list:
+    vios = []
+    for node in ast.walk(mod.tree):
+        # jax.jit(f, ...) call form
+        if isinstance(node, ast.Call) and _is_jax_jit(node.func) \
+                and node.args:
+            target = node.args[0]
+            statics = _static_names(node)
+            name = None
+            if isinstance(target, ast.Name):
+                name = target.id
+            elif isinstance(target, ast.Attribute):
+                name = target.attr
+            if name and name in mod.functions:
+                vios += _check_jitted_def(mod, mod.functions[name],
+                                          statics, node.lineno)
+        # @partial(jax.jit, ...) / @jax.jit decorator form
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                statics = None
+                if isinstance(dec, ast.Call) \
+                        and _attr_tail(dec.func) == "partial" \
+                        and dec.args and _is_jax_jit(dec.args[0]):
+                    statics = _static_names(dec)
+                elif _is_jax_jit(dec):
+                    statics = set()
+                if statics is not None:
+                    vios += _check_jitted_def(mod, node, statics,
+                                              node.lineno)
+    return vios
+
+
+# ---------------------------------------------------------------------------
+# jit-in-loop rule
+# ---------------------------------------------------------------------------
+
+def _jit_in_loop_scan(mod: _Module) -> list:
+    vios = []
+
+    def walk(node, in_loop: bool):
+        for child in ast.iter_child_nodes(node):
+            inner = in_loop or isinstance(
+                child, (ast.For, ast.AsyncFor, ast.While))
+            if isinstance(child, ast.Call) and _is_jax_jit(child.func) \
+                    and in_loop:
+                vios.append(LintViolation(
+                    mod.fname, child.lineno, "jit-in-loop",
+                    "jax.jit(...) constructed inside a loop — every "
+                    "iteration builds a fresh wrapper and re-traces; "
+                    "hoist it (or key a cache on the static args)"))
+            walk(child, inner)
+
+    walk(mod.tree, False)
+    return vios
+
+
+# ---------------------------------------------------------------------------
+# entry points
+# ---------------------------------------------------------------------------
+
+def lint_sources(files: dict, roots=()) -> list:
+    """Lint a {filename: source} mapping.  ``roots`` (suffix, fn) pairs
+    seed the host-op reachability walk; with no roots only the three
+    purely syntactic rules run."""
+    mods = _load_modules(files)
+    vios = []
+    if roots:
+        reached, stale = _reachable(mods, roots)
+        vios += stale
+        vios += _host_op_scan(mods, reached)
+    for mod in mods.values():
+        vios += _blockspec_scan(mod)
+        vios += _static_argnames_scan(mod)
+        vios += _jit_in_loop_scan(mod)
+    return sorted(vios, key=lambda v: (v.file, v.line, v.rule))
+
+
+def lint_repo(src_root: Path | str | None = None,
+              roots=TRACED_ROOTS) -> list:
+    """Lint every ``repro/**/*.py`` under ``src_root`` (defaults to the
+    package's own source tree)."""
+    if src_root is None:
+        src_root = Path(__file__).resolve().parent.parent
+    src_root = Path(src_root)
+    files = {}
+    for p in sorted(src_root.rglob("*.py")):
+        try:
+            files[str(p)] = p.read_text(encoding="utf-8")
+        except (OSError, UnicodeDecodeError):
+            continue
+    return lint_sources(files, roots=roots)

@@ -53,12 +53,36 @@ def _expert_dense_spec(quant: SCQuantConfig, in_axis, out_axis):
 
 def _expert_matmul(p: dict, x: jax.Array, quant: SCQuantConfig,
                    spec: str) -> jax.Array:
-    """einsum(spec) with optional SC fake-quant of x and w."""
+    """einsum(spec) on the expert weights, routed through the same SC
+    quantization discipline as dense layers (common.dense_apply)."""
     w = p["w"]
     if quant.enabled and quant.mode == "sc_qat":
         # bf16-native fake-quant (see common.dense_apply / quant.py)
         x = thermometer_act_quant(x, p["alpha_a"], quant.act_bsl)
         w = ternary_weight_quant(w, p["alpha_w"]).astype(x.dtype)
+    elif quant.enabled and quant.mode == "sc_int":
+        # Integer serving datapath, mirroring sc_linear_int_from_qat:
+        # int8 levels x ternary weights -> exact int32 accumulation,
+        # rescaled to the float residual stream.  Experts previously ran
+        # the raw UNQUANTIZED float einsum under sc_int/sc_int_approx —
+        # the precision leak the dtype-purity gate
+        # (analysis/contracts.py) exists to catch.  The approximate-BSN
+        # engine keeps the exact int32 accumulator here: the grouped
+        # (E,G,C) expert layout has no approx-adder kernel path yet
+        # (tracked in analysis/README.md).
+        half = quant.act_half
+        aa = p["alpha_a"].astype(x.dtype)
+        aw = p["alpha_w"].astype(jnp.float32)
+        x_q = jnp.clip(jnp.round(x / aa), -half, half).astype(jnp.int8)
+        aw_b = aw if aw.ndim > 1 else aw[:, None, None]
+        w_int = jnp.clip(jnp.round(w.astype(jnp.float32) / aw_b), -1, 1
+                         ).astype(jnp.int8)
+        sum_q = jnp.einsum(spec, x_q.astype(jnp.int32),
+                           w_int.astype(jnp.int32))
+        scale = aa.astype(jnp.float32) * aw       # (E,1,d_out) or (E,)
+        scale = scale[:, None, None, None] if scale.ndim == 1 \
+            else scale[:, None]                   # -> (E,1,1,[d_out])
+        return (sum_q.astype(jnp.float32) * scale).astype(x.dtype)
     return jnp.einsum(spec, x, w)
 
 

@@ -221,6 +221,11 @@ class ServeEngine:
                                         static_argnames=("chunk",
                                                          "do_sample"),
                                         donate_argnums=(1,), **jit_kw)
+        # The exact-prefill debug oracle is donation-EXEMPT by design
+        # (analysis/contracts.audit_donation records the exemption): it
+        # takes (params, batch) only and builds a fresh exact-length
+        # cache, so there is no input cache buffer to alias an output
+        # into — donating nothing is correct, not an oversight.
         self._prefill_exact = jax.jit(self._prefill_exact_fn,
                                       static_argnames=("do_sample",))
 
@@ -665,6 +670,33 @@ def sequential_generate(params, cfg: ModelConfig, prompts: list[list[int]],
     return outs
 
 
+@partial(jax.jit, static_argnames=("cfg", "chunk", "bsn_backend"))
+def _oracle_paged_prefill(params, cache, tokens, tables, plen, slot_ids,
+                          *, cfg: ModelConfig, chunk: int,
+                          bsn_backend: str | None):
+    """Module-level jit for the paged oracle's prefill, cached across
+    prompts AND across ``sequential_generate`` calls — the per-prompt
+    ``jax.jit(lambda ...)`` it replaces re-traced every single prompt
+    (the retrace audit's first confirmed catch; see
+    analysis/contracts.py).  Keyed on (cfg, chunk, backend) statics plus
+    arg shapes; the BSN backend is static because dispatch decisions
+    happen at trace time inside the scope, so each pinned backend must
+    own its trace."""
+    with kernel_dispatch.backend_scope(bsn_backend):
+        return paged_prefill(params, cache, tokens, tables, plen, cfg,
+                             chunk=chunk, slot_ids=slot_ids)
+
+
+@partial(jax.jit, static_argnames=("cfg", "bsn_backend"))
+def _oracle_paged_decode(params, cache, tok, slot_ids, tables, lengths,
+                         *, cfg: ModelConfig, bsn_backend: str | None):
+    """Module-level jit for the paged oracle's decode step (same caching
+    rationale as :func:`_oracle_paged_prefill`)."""
+    with kernel_dispatch.backend_scope(bsn_backend):
+        return paged_decode_step(params, cache, tok, slot_ids, tables,
+                                 lengths, cfg)
+
+
 def _paged_sequential_generate(params, cfg: ModelConfig, prompts, sps,
                                max_new_tokens: int, eos_id: int | None,
                                max_len: int, bsn_backend: str | None,
@@ -682,8 +714,6 @@ def _paged_sequential_generate(params, cfg: ModelConfig, prompts, sps,
     sample_fn = jax.jit(
         lambda lg, pos, sm: sample_tokens(lg, pos, sm, cfg.vocab_size))
     greedy_fn = jax.jit(lambda lg: greedy_tokens(lg, cfg.vocab_size))
-    decode_fn = jax.jit(lambda p, c, t, s, pt, ln: paged_decode_step(
-        p, c, t, s, pt, ln, cfg))
     slot_ids = jnp.zeros((1,), jnp.int32)
     outs = []
     with kernel_dispatch.backend_scope(bsn_backend):
@@ -705,10 +735,9 @@ def _paged_sequential_generate(params, cfg: ModelConfig, prompts, sps,
             toks = np.zeros((1, L), np.int32)
             toks[0, :len(prompt)] = prompt
             plen = jnp.asarray([len(prompt)], jnp.int32)
-            logits, cache = jax.jit(
-                lambda p, c, tk: paged_prefill(
-                    p, c, tk, tables, plen, cfg, chunk=L,
-                    slot_ids=slot_ids))(params, cache, jnp.asarray(toks))
+            logits, cache = _oracle_paged_prefill(
+                params, cache, jnp.asarray(toks), tables, plen, slot_ids,
+                cfg=cfg, chunk=L, bsn_backend=bsn_backend)
             length = len(prompt)
             gen = [pick(logits, length)]
             while (len(gen) < max_new_tokens
@@ -716,8 +745,9 @@ def _paged_sequential_generate(params, cfg: ModelConfig, prompts, sps,
                    and (eos_id is None or gen[-1] != eos_id)):
                 tok = jnp.asarray([gen[-1]], jnp.int32)
                 lengths = jnp.asarray([length], jnp.int32)
-                logits, cache = decode_fn(params, cache, tok, slot_ids,
-                                          tables, lengths)
+                logits, cache = _oracle_paged_decode(
+                    params, cache, tok, slot_ids, tables, lengths,
+                    cfg=cfg, bsn_backend=bsn_backend)
                 gen.append(pick(logits, length + 1))
                 length += 1
             outs.append(gen)

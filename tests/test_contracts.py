@@ -1,0 +1,234 @@
+"""Hot-path contract gate: positive battery + injection tests.
+
+Every audit in ``repro.analysis.contracts`` must (a) pass clean on the
+real engine and (b) catch a deliberately injected violation with a
+message naming the right pass and source location — a pass without an
+injection test is assumed vacuous (analysis/README.md).
+"""
+
+import os
+import subprocess
+import sys
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis.contracts import (audit_donation, audit_dtype_purity,
+                                      audit_engine_retrace,
+                                      audit_host_boundary, audit_sharding,
+                                      decode_example_args,
+                                      run_engine_contracts)
+from repro.configs import LayerSpec, get_arch
+from repro.launch.mesh import make_serving_mesh, serving_rules
+from repro.models import init_params
+from repro.serving import ServeEngine, sequential_generate
+from repro.serving import engine as engine_mod
+
+SCALE = dict(d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+             vocab_size=64, vocab_pad_multiple=32, dtype="float32",
+             attn_q_chunk=8)
+CFG = get_arch("granite-3-2b").scaled(n_layers=2, **SCALE)
+JAMBA = get_arch("jamba-1.5-large-398b").scaled(
+    n_layers=8, **SCALE, mamba_d_state=8, n_experts=4,
+    n_experts_per_tok=2, moe_capacity_factor=2.0)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(jax.random.PRNGKey(0), CFG)
+
+
+def _engine(params, cfg=CFG, **kw):
+    kw.setdefault("max_slots", 4)
+    kw.setdefault("max_len", 64)
+    return ServeEngine(params, cfg, **kw)
+
+
+def _messages(result):
+    return " | ".join(v.message for v in result.violations)
+
+
+# ---------------------------------------------------------------------------
+# positive battery
+# ---------------------------------------------------------------------------
+
+def test_engine_contracts_clean(params):
+    """The full static battery is clean on the quantized SC engine."""
+    eng = _engine(params, datapath="sc_int", kv_format="sc")
+    results = run_engine_contracts(eng, "granite/sc_int/sc")
+    bad = [v for r in results for v in r.violations]
+    assert not bad, [v.to_dict() for v in bad]
+    # the exact-prefill donation exemption is recorded, not hidden
+    assert any("exempt" in n.lower() or "exact" in n.lower()
+               for r in results for n in r.notes)
+
+
+def test_retrace_audit_clean(params):
+    eng = _engine(params)
+    r = audit_engine_retrace(eng, [[1, 2, 3], [4, 5, 6, 7]],
+                             "granite/live")
+    assert r.ok, _messages(r)
+
+
+# ---------------------------------------------------------------------------
+# injections — each breaks ONE invariant and must be caught by name
+# ---------------------------------------------------------------------------
+
+def test_donation_injection_caught(params):
+    """Re-jitting decode WITHOUT donate_argnums must fail the donation
+    audit: the pool leaves lose their buffer aliasing."""
+    eng = _engine(params)
+    d_args = decode_example_args(eng)
+    undonated = jax.jit(partial(eng._decode_fn, do_sample=False))
+    with eng._scope():
+        low = undonated.lower(eng.params, eng.cache, *d_args)
+    r = audit_donation("inject/undonated", low)
+    assert not r.ok
+    assert "not marked for donation" in _messages(r)
+
+
+def test_dtype_injection_caught_at_expert_matmul(monkeypatch):
+    """Disabling quantization inside the MoE expert matmul (the exact
+    precision leak PR 8 fixed) must fail dtype-purity with provenance
+    pointing at _expert_matmul — while the router's f32 gate in
+    moe_apply stays allowlisted."""
+    from repro.models import moe
+    params = init_params(jax.random.PRNGKey(0), JAMBA)
+    eng = _engine(params, cfg=JAMBA, datapath="sc_int")
+    orig = moe._expert_matmul
+    monkeypatch.setattr(
+        moe, "_expert_matmul",
+        lambda p, x, quant, spec: orig(p, x, quant.with_mode("none"),
+                                       spec))
+    d_args = decode_example_args(eng)
+    with eng._scope():
+        jx = jax.make_jaxpr(partial(eng._decode_fn, do_sample=False))(
+            eng.params, eng.cache, *d_args)
+    r = audit_dtype_purity("inject/float-expert", jx, datapath="sc_int")
+    assert not r.ok
+    assert "models/moe.py:_expert_matmul" in _messages(r)
+    assert "sc_int BSN region" in _messages(r)
+
+
+def test_dtype_engagement_check(params):
+    """A 'quantized' datapath whose jaxpr contains zero integer dots is
+    flagged — the audit must not pass vacuously when quantization
+    silently turns itself off."""
+    eng = _engine(params)                       # qat: float projections
+    d_args = decode_example_args(eng)
+    with eng._scope():
+        jx = jax.make_jaxpr(partial(eng._decode_fn, do_sample=False))(
+            eng.params, eng.cache, *d_args)
+    r = audit_dtype_purity("inject/not-engaged", jx, datapath="sc_int")
+    assert not r.ok
+    assert "not" in _messages(r) and "engaged" in _messages(r)
+
+
+def test_host_boundary_injection_caught(params):
+    """A pure_callback smuggled into a traced step is flagged."""
+    eng = _engine(params)
+    d_args = decode_example_args(eng)
+
+    def leaky(p, cache, *args):
+        out, cache = eng._decode_fn(p, cache, *args, do_sample=False)
+        lead = jax.tree.leaves(out)[0]
+        peek = jax.pure_callback(
+            lambda x: x, jax.ShapeDtypeStruct(lead.shape, lead.dtype),
+            lead)
+        return peek, cache
+
+    with eng._scope():
+        jx = jax.make_jaxpr(leaky)(eng.params, eng.cache, *d_args)
+    r = audit_host_boundary("inject/callback", jx)
+    assert not r.ok
+    assert "pure_callback" in _messages(r)
+
+
+# ---------------------------------------------------------------------------
+# sharding (needs >= 4 devices; tier-1 enters via the subprocess wrapper)
+# ---------------------------------------------------------------------------
+
+needs_mesh = pytest.mark.skipif(
+    jax.device_count() < 4,
+    reason="needs 4 devices — set "
+           "XLA_FLAGS=--xla_force_host_platform_device_count=8")
+
+
+@needs_mesh
+def test_sharding_audit_clean_on_mesh(params):
+    rules = serving_rules(make_serving_mesh(model_parallel=2,
+                                            data_parallel=2))
+    eng = _engine(params, datapath="sc_int", kv_format="sc",
+                  mesh_rules=rules)
+    r = audit_sharding(eng, "mesh/clean")
+    assert r.ok, _messages(r)
+    assert any("sharded" in n for n in r.notes)
+
+
+@needs_mesh
+def test_sharding_injection_caught(params):
+    """One pool leaf replaced with a replicated copy must be flagged
+    with the leaf path and the expected spec."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    rules = serving_rules(make_serving_mesh(model_parallel=2,
+                                            data_parallel=2))
+    eng = _engine(params, datapath="sc_int", kv_format="sc",
+                  mesh_rules=rules)
+    cache = jax.tree.map(lambda a: a, eng.cache)
+    leaf = cache["periods"]["p0"]["k_pages"]
+    cache["periods"]["p0"]["k_pages"] = jax.device_put(
+        leaf, NamedSharding(rules.mesh, P()))
+    r = audit_sharding(eng, "inject/replicated", cache=cache,
+                       check_collectives=False)
+    assert not r.ok
+    assert "k_pages" in _messages(r) and "model" in _messages(r)
+
+
+def test_sharding_subprocess():
+    """Tier-1 entry to the mesh audit tests: forced host-device count
+    must be set before jax initializes, so fresh interpreter."""
+    if jax.device_count() >= 4:
+        pytest.skip("mesh audit tests run natively in this process")
+    here = os.path.dirname(os.path.abspath(__file__))
+    env = dict(
+        os.environ,
+        XLA_FLAGS="--xla_force_host_platform_device_count=8",
+        JAX_PLATFORMS="cpu",
+        PYTHONPATH=os.path.join(os.path.dirname(here), "src")
+        + os.pathsep + os.environ.get("PYTHONPATH", ""),
+    )
+    r = subprocess.run(
+        [sys.executable, "-m", "pytest", "-x", "-q",
+         os.path.join(here, "test_contracts.py"), "-k", "sharding"],
+        env=env, capture_output=True, text=True, timeout=900)
+    assert r.returncode == 0, r.stdout[-4000:] + r.stderr[-2000:]
+
+
+# ---------------------------------------------------------------------------
+# the per-prompt recompile regression (satellite fix, engine.py oracle)
+# ---------------------------------------------------------------------------
+
+def test_paged_oracle_does_not_retrace_per_prompt(params):
+    """The paged sequential oracle's jits are module-level and keyed on
+    statics: a second identical sequential_generate call must add ZERO
+    lowerings (the per-prompt ``jax.jit(lambda ...)`` wrapper it
+    replaces re-traced every prompt of every call)."""
+    fns = (engine_mod._oracle_paged_prefill,
+           engine_mod._oracle_paged_decode)
+    if not all(hasattr(f, "_cache_size") for f in fns):
+        pytest.skip("jit cache introspection unavailable on this jax")
+    prompts = [[1, 2, 3], [4, 5, 6, 7], [8, 9]]
+
+    def run():
+        return sequential_generate(params, CFG, prompts,
+                                   max_new_tokens=4, max_len=32,
+                                   kv_format="sc", datapath="sc_int")
+
+    first = run()
+    sizes = [f._cache_size() for f in fns]
+    second = run()
+    assert second == first
+    assert [f._cache_size() for f in fns] == sizes, \
+        "paged oracle re-traced on an identical repeated workload"

@@ -1,0 +1,117 @@
+"""Structural jaxpr snapshots: the dot-product profile of the decode
+step, per datapath.
+
+Where the differential tests pin token VALUES, these pin the SHAPE of
+the computation: which source functions contribute matmuls, at which
+dtype kind.  A refactor that silently reroutes a projection through
+float math (the MoE expert leak this PR fixed) changes this profile
+even when tiny-scale tokens happen to agree.
+"""
+
+from collections import Counter
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.contracts import (decode_example_args, eqn_provenance,
+                                      iter_eqns)
+from repro.configs import get_arch
+from repro.models import init_params
+from repro.serving import ServeEngine
+
+SCALE = dict(d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+             vocab_size=64, vocab_pad_multiple=32, dtype="float32",
+             attn_q_chunk=8)
+CFG = get_arch("granite-3-2b").scaled(n_layers=2, **SCALE)
+JAMBA = get_arch("jamba-1.5-large-398b").scaled(
+    n_layers=8, **SCALE, mamba_d_state=8, n_experts=4,
+    n_experts_per_tok=2, moe_capacity_factor=2.0)
+
+_DOTS = ("dot_general", "conv_general_dilated")
+
+
+def _dot_profile(cfg, datapath, kv_format="fp"):
+    """Counter of (file:function, float|int) over the decode jaxpr's
+    dot/conv equations."""
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    eng = ServeEngine(params, cfg, max_slots=4, max_len=64,
+                      datapath=datapath, kv_format=kv_format)
+    d_args = decode_example_args(eng)
+    with eng._scope():
+        jx = jax.make_jaxpr(partial(eng._decode_fn, do_sample=False))(
+            eng.params, eng.cache, *d_args)
+    prof = Counter()
+    for eqn in iter_eqns(jx):
+        if eqn.primitive.name not in _DOTS:
+            continue
+        dt = eqn.outvars[0].aval.dtype
+        kind = "float" if jnp.issubdtype(dt, jnp.floating) else "int"
+        prof[(eqn_provenance(eqn), kind)] += 1
+    return prof
+
+
+def test_granite_qat_decode_profile():
+    """qat: every projection is a (fake-quantized) FLOAT dot through
+    dense_apply — 4 per layer (qkv, attn-out, ffn up, ffn down) — plus
+    the attention kernel's two f32 accumulations."""
+    prof = _dot_profile(CFG, "qat")
+    assert prof == Counter({
+        ("models/common.py:dense_apply", "float"): 8,
+        ("kernels/paged_attention.py:_accumulate", "float"): 2,
+    }), prof
+
+
+def test_granite_sc_int_decode_profile():
+    """sc_int: the SAME 4-per-layer projection count, but every one an
+    INTEGER dot from sc_linear_int — the only float dots left are the
+    attention kernel's (allowlisted by design)."""
+    prof = _dot_profile(CFG, "sc_int", kv_format="sc")
+    assert prof == Counter({
+        ("core/sc_layers.py:sc_linear_int", "int"): 8,
+        ("kernels/paged_attention.py:_accumulate", "float"): 2,
+    }), prof
+
+
+def test_granite_sc_int_approx_decode_profile():
+    """sc_int_approx: projections become BSN popcount accumulations
+    (no dot primitives at all); only the attention kernel dots remain,
+    and the jaxpr must actually contain sc_layers/bsn-attributed ops."""
+    prof = _dot_profile(CFG, "sc_int_approx", kv_format="int8")
+    assert prof == Counter({
+        ("kernels/paged_attention.py:_accumulate", "float"): 2,
+    }), prof
+    # the BSN region must be present, not optimized away
+    params = init_params(jax.random.PRNGKey(0), CFG)
+    eng = ServeEngine(params, CFG, max_slots=4, max_len=64,
+                      datapath="sc_int_approx", kv_format="int8")
+    d_args = decode_example_args(eng)
+    with eng._scope():
+        jx = jax.make_jaxpr(partial(eng._decode_fn, do_sample=False))(
+            eng.params, eng.cache, *d_args)
+    sc_eqns = sum(1 for e in iter_eqns(jx)
+                  if eqn_provenance(e).startswith(("core/sc_layers.py",
+                                                   "core/bsn.py")))
+    assert sc_eqns > 0
+
+
+def test_jamba_sc_int_expert_matmuls_are_integer():
+    """The MoE regression this PR fixed: expert matmuls under sc_int
+    run the int8 x ternary -> int32 path (12 integer dots: 3 expert
+    einsums x 4 MoE layers), with NO float dot attributed to
+    _expert_matmul.  moe_apply's float dots are the router gate +
+    one-hot dispatch/combine einsums, outside the quantized datapath."""
+    prof = _dot_profile(JAMBA, "sc_int")
+    em = {k: v for k, v in prof.items()
+          if k[0] == "models/moe.py:_expert_matmul"}
+    assert em == {("models/moe.py:_expert_matmul", "int"): 12}, prof
+    assert prof[("core/sc_layers.py:sc_linear_int", "int")] == 45, prof
+    assert ("models/moe.py:moe_apply", "int") not in prof
+    # full snapshot so ANY reroute shows up, not just the expert one
+    assert prof == Counter({
+        ("core/sc_layers.py:sc_linear_int", "int"): 45,
+        ("models/moe.py:_expert_matmul", "int"): 12,
+        ("models/moe.py:moe_apply", "float"): 20,
+        ("models/mamba.py:mamba_decode", "float"): 7,
+        ("kernels/paged_attention.py:_accumulate", "float"): 2,
+    }), prof

@@ -1,0 +1,115 @@
+"""AST lint rules: repo-clean assertion + one synthetic injection per
+rule.  Each injection is a minimal source tree containing exactly one
+hazard; the rule must flag it with the right name and line."""
+
+from repro.analysis.lint import lint_repo, lint_sources
+
+
+def _rules(vios):
+    return {v.rule for v in vios}
+
+
+def test_repo_is_lint_clean():
+    """The package's own tree carries zero lint violations — the gate
+    starts from a clean baseline."""
+    vios = lint_repo()
+    assert vios == [], [v.to_dict() for v in vios]
+
+
+def test_host_op_item_reachable_from_root():
+    files = {"repro/serving/hot.py": (
+        "import jax\n"
+        "def helper(x):\n"
+        "    return x.sum().item()\n"
+        "def decode(x):\n"
+        "    return helper(x)\n")}
+    vios = lint_sources(files, roots=(("serving/hot.py", "decode"),))
+    assert _rules(vios) == {"host-op"}
+    assert ".item()" in vios[0].message and vios[0].line == 3
+
+
+def test_host_op_numpy_alias_and_suppression():
+    files = {"repro/serving/hot.py": (
+        "import numpy as np\n"
+        "def decode(shape):\n"
+        "    a = np.prod(shape)\n"
+        "    b = np.prod(shape)  # lint: host-ok\n"
+        "    return a + b\n")}
+    vios = lint_sources(files, roots=(("serving/hot.py", "decode"),))
+    # the marked line is suppressed; the unmarked one is flagged
+    assert [v.line for v in vios if v.rule == "host-op"] == [3]
+
+
+def test_host_op_unreachable_is_ignored():
+    """Host ops in functions NOT reachable from a traced root are fine —
+    the rule guards the hot path, not the whole package."""
+    files = {"repro/serving/hot.py": (
+        "def decode(x):\n"
+        "    return x\n"
+        "def offline_report(x):\n"
+        "    return x.item()\n")}
+    vios = lint_sources(files, roots=(("serving/hot.py", "decode"),))
+    assert vios == []
+
+
+def test_blockspec_arity_mismatch():
+    files = {"repro/kernels/k.py": (
+        "import jax\n"
+        "from jax.experimental import pallas as pl\n"
+        "def launch(x):\n"
+        "    return pl.pallas_call(\n"
+        "        lambda ref, o: None,\n"
+        "        grid=(4, 4),\n"
+        "        in_specs=[pl.BlockSpec((8, 8), lambda i: (i, 0))],\n"
+        "        out_specs=pl.BlockSpec((8, 8), lambda i, j: (i, j)),\n"
+        "        out_shape=None)(x)\n")}
+    vios = lint_sources(files)
+    assert _rules(vios) == {"blockspec-arity"}
+    assert len(vios) == 1 and vios[0].line == 7    # the 1-arg index map
+
+
+def test_static_argnames_missing_bool():
+    files = {"repro/models/m.py": (
+        "import jax\n"
+        "from functools import partial\n"
+        "@partial(jax.jit, static_argnames=('mode',))\n"
+        "def step(x, *, mode: str = 'fast', causal: bool = True):\n"
+        "    return x\n")}
+    vios = lint_sources(files)
+    assert _rules(vios) == {"static-argnames"}
+    assert "causal" in vios[0].message
+
+
+def test_static_argnames_array_kwarg_ok():
+    """Array-typed keyword args stay traced — the rule only demands
+    statics for bool/str params (the paged-attention kernels' k_scale /
+    v_resid pools are the motivating case)."""
+    files = {"repro/models/m.py": (
+        "import jax\n"
+        "from functools import partial\n"
+        "@partial(jax.jit, static_argnames=('causal',))\n"
+        "def step(x, *, causal: bool = True,\n"
+        "         k_scale: jax.Array | None = None):\n"
+        "    return x\n")}
+    assert lint_sources(files) == []
+
+
+def test_jit_in_loop():
+    files = {"repro/serving/o.py": (
+        "import jax\n"
+        "def oracle(prompts, f):\n"
+        "    outs = []\n"
+        "    for p in prompts:\n"
+        "        outs.append(jax.jit(lambda t: f(t))(p))\n"
+        "    return outs\n")}
+    vios = lint_sources(files)
+    assert _rules(vios) == {"jit-in-loop"}
+    assert vios[0].line == 5 and "re-traces" in vios[0].message
+
+
+def test_stale_root_is_reported():
+    """A traced root that no longer exists must fail loudly, not let the
+    host-op walk silently cover nothing."""
+    files = {"repro/serving/hot.py": "def decode(x):\n    return x\n"}
+    vios = lint_sources(files, roots=(("serving/hot.py", "gone_fn"),))
+    assert vios and all("gone_fn" in v.message for v in vios)

@@ -7,6 +7,11 @@ existing file or directory.  External schemes (http/https/mailto) and
 pure in-page anchors are skipped — this job gates the repo's own wiring
 (README architecture map, test/bench pointers), not the internet.
 
+Also flags ABSOLUTE filesystem paths (``/root/...``, ``/home/...``,
+``/tmp/...``) anywhere in the prose *or* code spans — docs must describe
+the repo by relative path so they survive a checkout anywhere.
+Machine-generated logs (ISSUE.md, CHANGES.md) are exempt.
+
     python tools/check_links.py            # check the whole repo
     python tools/check_links.py README.md  # or explicit files
 """
@@ -37,6 +42,23 @@ def targets(md: Path) -> list[str]:
     return _INLINE.findall(text) + _REFDEF.findall(text)
 
 
+# absolute machine paths that leak a particular checkout/container into
+# the docs; scanned on RAW text (stale paths usually hide in backticks)
+_ABS_PATH = re.compile(r"(?<![\w.])(/(?:root|home|tmp|Users|mnt|opt)/"
+                       r"[\w./-]+)")
+# machine-generated per-PR logs, allowed to reference their environment
+_ABS_EXEMPT = {"ISSUE.md", "CHANGES.md"}
+
+
+def abs_paths(md: Path) -> list[tuple[int, str]]:
+    if md.name in _ABS_EXEMPT:
+        return []
+    hits = []
+    for i, line in enumerate(md.read_text(encoding="utf-8").splitlines(), 1):
+        hits += [(i, m) for m in _ABS_PATH.findall(line)]
+    return hits
+
+
 def check(files: list[Path]) -> list[str]:
     broken = []
     for md in files:
@@ -51,6 +73,9 @@ def check(files: list[Path]) -> list[str]:
             if not resolved.exists():
                 broken.append(f"{md.relative_to(ROOT)}: broken link "
                               f"-> {tgt}")
+        for line_no, hit in abs_paths(md):
+            broken.append(f"{md.relative_to(ROOT)}:{line_no}: absolute "
+                          f"filesystem path in docs -> {hit}")
     return broken
 
 
