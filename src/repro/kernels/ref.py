@@ -16,7 +16,7 @@ from ..core.kv_quant import kv_dequant
 
 __all__ = ["ternary_matmul_ref", "bsn_sort_ref", "si_epilogue_ref",
            "gather_pages", "gather_pages_dequant", "paged_attn_decode_ref",
-           "paged_attn_prefill_ref"]
+           "paged_attn_prefill_ref", "paged_attn_verify_ref"]
 
 
 def si_epilogue_ref(sum_q: jax.Array, thresholds_q: jax.Array) -> jax.Array:
@@ -119,6 +119,44 @@ def paged_attn_decode_ref(q: jax.Array, k_pages: jax.Array,
     logits = jnp.where(valid[:, None, None, :], logits, -1e30)
     w = jax.nn.softmax(logits, axis=-1)
     o = jnp.einsum("shgt,sthd->shgd", w, vg.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+def paged_attn_verify_ref(q: jax.Array, k_pages: jax.Array,
+                          v_pages: jax.Array, page_tables: jax.Array,
+                          lengths: jax.Array, *, pin_logits=None,
+                          kv_format: str = "fp",
+                          kv_aux: dict | None = None) -> jax.Array:
+    """Parallel multi-token verify attention over the paged cache.
+
+    The speculative-decoding verify step: lane ``s`` scores ``Tq``
+    queries at consecutive positions ``lengths[s] + t`` (t = 0..Tq-1) in
+    ONE pass, each under its own causal horizon — query t attends keys
+    at positions ``<= lengths[s] + t``.  q: (S, Tq, Hkv, G, D); pools
+    already hold the verify window's K/V scatter at those positions.
+    Masked positions past each query's horizon softmax to exact 0, so
+    row t is arithmetically the decode-ref row at length ``lengths+t``
+    — the differential tests pin token identity with plain decode.
+    Returns (S, Tq, Hkv, G, D) in q.dtype.
+    """
+    S, Tq, Hkv, G, D = q.shape
+    aux = kv_aux or {}
+    kg = gather_pages_dequant(k_pages, page_tables, kv_format=kv_format,
+                              scale=aux.get("k_scale"),
+                              resid=aux.get("k_resid"))  # (S, T, Hkv, Dh)
+    vg = gather_pages_dequant(v_pages, page_tables, kv_format=kv_format,
+                              scale=aux.get("v_scale"),
+                              resid=aux.get("v_resid"))
+    T = kg.shape[1]
+    logits = jnp.einsum("sqhgd,sthd->shgqt", q.astype(jnp.float32),
+                        kg.astype(jnp.float32)) / math.sqrt(D)
+    if pin_logits is not None:
+        logits = pin_logits(logits)
+    horizon = lengths[:, None] + jnp.arange(Tq)[None, :]     # (S, Tq)
+    valid = (jnp.arange(T)[None, None, :] <= horizon[:, :, None])
+    logits = jnp.where(valid[:, None, None, :, :], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("shgqt,sthd->sqhgd", w, vg.astype(jnp.float32))
     return o.astype(q.dtype)
 
 

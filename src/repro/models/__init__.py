@@ -10,15 +10,18 @@ rwkv6.py       — RWKV-6 time-mix / channel-mix
 
 from . import attention, common, ffn, mamba, moe, rwkv6, transformer
 from .transformer import (batch_specs, cache_specs, decode_step, forward,
-                          init_cache, init_paged_cache, init_params, loss_fn,
-                          make_dummy_batch, paged_cache_specs,
-                          paged_decode_step, paged_prefill, param_specs,
-                          prefill, supports_paged_prefill)
+                          gather_state_rows, init_cache, init_paged_cache,
+                          init_params, loss_fn, make_dummy_batch,
+                          paged_cache_specs, paged_decode_step, paged_prefill,
+                          paged_verify_step, param_specs, prefill,
+                          scatter_state_rows, select_state_snapshot,
+                          supports_paged_prefill)
 
 __all__ = [
     "attention", "common", "ffn", "mamba", "moe", "rwkv6", "transformer",
-    "batch_specs", "cache_specs", "decode_step", "forward", "init_cache",
-    "init_paged_cache", "init_params", "loss_fn", "make_dummy_batch",
-    "paged_cache_specs", "paged_decode_step", "paged_prefill", "param_specs",
-    "prefill", "supports_paged_prefill",
+    "batch_specs", "cache_specs", "decode_step", "forward",
+    "gather_state_rows", "init_cache", "init_paged_cache", "init_params",
+    "loss_fn", "make_dummy_batch", "paged_cache_specs", "paged_decode_step",
+    "paged_prefill", "paged_verify_step", "param_specs", "prefill",
+    "scatter_state_rows", "select_state_snapshot", "supports_paged_prefill",
 ]

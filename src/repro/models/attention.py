@@ -351,6 +351,57 @@ def attn_decode_paged(p: dict, x: jax.Array, cfg: ModelConfig,
     return y, new_pools
 
 
+def attn_verify_paged(p: dict, x: jax.Array, cfg: ModelConfig,
+                      pools: dict, lengths: jax.Array):
+    """Batched multi-token speculative-verify over the paged KV cache.
+
+    x: (S, T, D) — the verify window per slot (last committed token +
+    the T-1 draft tokens), token t sitting at cache position
+    ``lengths + t``.  Scatters all T K/V rows (overwriting whatever the
+    draft pass left there), then scores all T queries in ONE parallel
+    attention pass, each under its own causal horizon — so the whole
+    window costs one step of projections/attention instead of T decode
+    steps.  Returns (y (S, T, D), new_pools).
+
+    A draft window can straddle a page boundary; the per-position
+    (phys, off) scatter below handles that, and distinct lanes own
+    distinct pages so indices never collide (padded lanes hit the trash
+    page).  There is no Pallas verify kernel yet — this routes through
+    the XLA reference unconditionally (see ROADMAP), with the mesh
+    path's logit pin matching decode.
+    """
+    page_tables = pools["page_tables"]
+    page = pools["k_pages"].shape[1]
+    fmt = kv_format_of(pools)
+    S, T = x.shape[0], x.shape[1]
+    dh, hq, hkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    g = hq // hkv
+    positions = lengths[:, None] + jnp.arange(T)[None, :]   # (S, T)
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    phys = jnp.take_along_axis(page_tables, positions // page, axis=1)
+    off = positions % page                                  # (S, T)
+    new_pools = _scatter_pools(
+        pools, fmt, k, v,
+        lambda pool, val: pool.at[phys, off].set(val.astype(pool.dtype)))
+
+    qg = q.reshape(S, T, hkv, g, dh)
+    aux = _kv_aux(new_pools)
+    if current_rules() is not None:
+        o = kernel_ref.paged_attn_verify_ref(
+            qg, new_pools["k_pages"], new_pools["v_pages"], page_tables,
+            lengths, kv_format=fmt, kv_aux=aux,
+            pin_logits=lambda lg: constrain(lg, None, "model",
+                                            None, None, None))
+    else:
+        o = kernel_ref.paged_attn_verify_ref(
+            qg, new_pools["k_pages"], new_pools["v_pages"], page_tables,
+            lengths, kv_format=fmt, kv_aux=aux)
+    o = o.reshape(S, T, hq * dh).astype(x.dtype)
+    o = constrain(o, None, None, None)
+    y = dense_apply(p["wo"], o, cfg.quant)
+    return y, new_pools
+
+
 def attn_prefill_paged(p: dict, x: jax.Array, cfg: ModelConfig,
                        pools: dict, start: int):
     """One prefill chunk written straight into the decode page layout.

@@ -156,6 +156,25 @@ def _residual_add(x, dx, lp, name, cfg: ModelConfig):
     return y
 
 
+def _verify_scan(fn, x, state):
+    """Scan a per-token DECODE mixer over the (S, T, D) verify window.
+
+    Speculative verify must produce bit-identical hidden states to T
+    successive decode steps — so rather than trust a batched recurrence
+    kernel to reassociate identically, it literally runs the decode-mode
+    update once per window token (the recurrent cores are a handful of
+    ops; the heavy attention/FFN work around them stays batched over
+    the window).  Returns (dx (S, T, D), snaps) where snaps stacks the
+    post-token state pytree along a leading T axis — the engine commits
+    exactly one snapshot per lane (its accepted-prefix length).
+    """
+    def body(st, xt):
+        dx, st2 = fn(xt[:, None, :], st)
+        return st2, (dx[:, 0, :], st2)
+    _, (dxs, snaps) = jax.lax.scan(body, state, jnp.moveaxis(x, 0, 1))
+    return jnp.moveaxis(dxs, 0, 1), snaps
+
+
 def _apply_position(lp: dict, spec: LayerSpec, x, cfg: ModelConfig,
                     positions, mode: str, cstate: dict | None, pos):
     """One layer (mixer + ffn). Returns (x, aux, new_cache_entry)."""
@@ -183,6 +202,11 @@ def _apply_position(lp: dict, spec: LayerSpec, x, cfg: ModelConfig,
         elif mode == "paged_prefill":
             dx, centry = attention.attn_prefill_paged(
                 lp["mixer"], h, cfg, cstate, cstate["start"])
+        elif mode == "verify":
+            # speculative verify: all T window queries in one parallel
+            # pass, each under its own causal horizon (pos = lengths)
+            dx, centry = attention.attn_verify_paged(
+                lp["mixer"], h, cfg, cstate, pos)
         elif mode == "decode":
             dx, kc, vc = attention.attn_decode(
                 lp["mixer"], h, cfg, cstate["k"], cstate["v"], pos)
@@ -198,6 +222,10 @@ def _apply_position(lp: dict, spec: LayerSpec, x, cfg: ModelConfig,
         # to it at every split.  Train keeps the associative scan.
         if mode == "decode":
             dx, centry = mamba.mamba_decode(lp["mixer"], h, cfg, cstate)
+        elif mode == "verify":
+            dx, centry = _verify_scan(
+                lambda xt, st: mamba.mamba_decode(lp["mixer"], xt, cfg, st),
+                h, {"h": cstate["h"], "conv": cstate["conv"]})
         elif mode == "paged_prefill":
             dx, centry = mamba.mamba_prefill_chunk(
                 lp["mixer"], h, cfg,
@@ -212,6 +240,11 @@ def _apply_position(lp: dict, spec: LayerSpec, x, cfg: ModelConfig,
     elif spec.mixer == "rwkv6":
         if mode == "decode":
             dx, centry = rwkv6.rwkv_tmix_decode(lp["mixer"], h, cfg, cstate)
+        elif mode == "verify":
+            dx, centry = _verify_scan(
+                lambda xt, st: rwkv6.rwkv_tmix_decode(
+                    lp["mixer"], xt, cfg, st),
+                h, {"s": cstate["s"], "shift": cstate["shift"]})
         elif mode == "paged_prefill":
             dx, centry = rwkv6.rwkv_tmix_prefill_chunk(
                 lp["mixer"], h, cfg,
@@ -238,6 +271,12 @@ def _apply_position(lp: dict, spec: LayerSpec, x, cfg: ModelConfig,
             if mode == "decode":
                 dx2, cshift = rwkv6.rwkv_cmix_decode(
                     lp["ffn"], h2, cfg, cstate["cmix"] if cstate else None)
+                centry = dict(centry, cmix=cshift)
+            elif mode == "verify":
+                dx2, cshift = _verify_scan(
+                    lambda xt, st: rwkv6.rwkv_cmix_decode(
+                        lp["ffn"], xt, cfg, st),
+                    h2, cstate["cmix"])
                 centry = dict(centry, cmix=cshift)
             elif mode == "paged_prefill":
                 dx2, cshift = rwkv6.rwkv_cmix_prefill_chunk(
@@ -643,6 +682,105 @@ def paged_decode_step(params: dict, cache: dict, tokens: jax.Array,
     # categorical draw identical on and off the mesh
     logits = constrain(logits, None, None, "model")
     return logits[:, 0], {"periods": new_periods}
+
+
+def paged_verify_step(params: dict, cache: dict, tokens: jax.Array,
+                      slot_ids: jax.Array, page_tables: jax.Array,
+                      lengths: jax.Array, cfg: ModelConfig):
+    """Batched multi-token speculative-VERIFY step over the paged cache.
+
+    tokens: (S, T) int32 — per lane, the last committed token followed
+    by the T-1 draft tokens, occupying cache positions ``lengths`` ..
+    ``lengths + T - 1``; other args exactly as
+    :func:`paged_decode_step`.  One target-datapath forward scores the
+    whole window: attention runs all T queries in parallel under
+    per-query causal horizons (:func:`attention.attn_verify_paged`);
+    recurrent mixers scan their decode-mode update per token
+    (:func:`_verify_scan`), so logits row t is bit-arithmetically the
+    decode-step logits after committing window tokens ``0..t`` — the
+    spec-on == spec-off identity the differential tests pin.
+
+    Returns ``(logits (S, T, V), new_cache, snaps)``:
+
+    * the new cache holds the target-datapath K/V scatter for all T
+      window positions (rows past the accepted prefix are dead — they
+      sit beyond the committed length, so every later read masks them
+      out and every later write lands on them first), while recurrent
+      state ROWS are deliberately left untouched;
+    * ``snaps`` stacks each period's post-token recurrent state along
+      ``(n_periods, T, S, ...)`` — the engine picks lane s's
+      accepted-prefix snapshot with :func:`select_state_snapshot` and
+      commits it via :func:`scatter_state_rows`, all inside the same
+      jit.
+    """
+    assert not cfg.is_encoder, "encoder archs have no decode step"
+    x = jnp.take(params["embed"]["table"], tokens, axis=0)     # (S,T,D)
+    x = constrain(x, None, None, None)
+
+    def period_body(x, inp):
+        pp, cper = inp
+        new_entries, snaps = {}, {}
+        for idx, spec in enumerate(cfg.period):
+            entry = cper[f"p{idx}"]
+            cst = {k: (v if k in _POOL_KEYS
+                       else jax.tree.map(lambda a: a[slot_ids], v))
+                   for k, v in entry.items()}
+            cst["page_tables"] = page_tables
+            x, _, ce = _apply_position(pp[f"p{idx}"], spec, x, cfg,
+                                       None, "verify", cst, lengths)
+            new_entries[f"p{idx}"] = {
+                k: (ce[k] if k in _POOL_KEYS else entry[k])
+                for k in entry}
+            snaps[f"p{idx}"] = {k: v for k, v in ce.items()
+                                if k not in _POOL_KEYS}
+        return x, (new_entries, snaps)
+
+    x, (new_periods, snaps) = jax.lax.scan(
+        period_body, x, (params["periods"], cache["periods"]))
+    x = norm_apply(params["final_norm"], x, cfg.norm)
+    logits = dense_apply(params["lm_head"], x, cfg.quant)
+    logits = logits + _vocab_bias(cfg, logits.dtype)
+    logits = constrain(logits, None, None, "model")
+    return logits, {"periods": new_periods}, snaps
+
+
+def gather_state_rows(cache: dict, slot_ids: jax.Array) -> dict:
+    """Snapshot the per-slot recurrent state rows (leaves
+    ``(n_periods, S, ...)``) — the pre-draft checkpoint the engine
+    restores after a draft pass, so the drafter's approximate
+    arithmetic never contaminates the target-datapath state."""
+    return jax.tree.map(
+        lambda a: a[:, slot_ids],
+        {p: {k: v for k, v in e.items() if k not in _POOL_KEYS}
+         for p, e in cache["periods"].items()})
+
+
+def scatter_state_rows(cache: dict, rows: dict,
+                       slot_ids: jax.Array) -> dict:
+    """Write :func:`gather_state_rows`-shaped rows back into the cache
+    (attention pools pass through untouched)."""
+    out = {}
+    for p, e in cache["periods"].items():
+        out[p] = {k: (v if k in _POOL_KEYS
+                      else jax.tree.map(
+                          lambda full, rw: full.at[:, slot_ids].set(rw),
+                          v, rows[p][k]))
+                  for k, v in e.items()}
+    return {"periods": out}
+
+
+def select_state_snapshot(snaps: dict, m: jax.Array) -> dict:
+    """Pick one per-token state snapshot per lane.
+
+    snaps: :func:`paged_verify_step` output, leaves
+    ``(n_periods, T, S, ...)``; m: (S,) int32 in ``[0, T-1]`` — the
+    window index of the last committed token.  Returns rows shaped for
+    :func:`scatter_state_rows` (leaves ``(n_periods, S, ...)``): lane
+    s's state after consuming window tokens ``0..m[s]``."""
+    def sel(leaf):
+        S = leaf.shape[2]
+        return leaf[:, m, jnp.arange(S)]
+    return jax.tree.map(sel, snaps)
 
 
 def _group_state_entry(cfg: ModelConfig, spec: LayerSpec, G: int,

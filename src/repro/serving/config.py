@@ -41,6 +41,11 @@ tests/test_kv_format.py exercises every one):
 * ``mesh_rules`` requires ``attn_backend`` in ``(None, "reference")`` —
   the paged Pallas kernel is a single-device program; the mesh path
   serves the constrained reference.
+* ``draft_len >= 1`` (a speculative round must draft something).
+* ``spec_decode`` requires a target datapath other than
+  ``sc_int_approx`` — the drafter IS ``sc_int_approx``, so drafting for
+  an approximate target verifies a model against itself (a no-op that
+  silently doubles the compute); it's a configuration error.
 """
 
 from __future__ import annotations
@@ -73,6 +78,8 @@ class EngineConfig:
     attn_backend: str | None = None
     prefill_mode: str = "chunked"
     mesh_rules: MeshRules | None = None
+    spec_decode: bool = False
+    draft_len: int = 4
 
     def validate(self) -> "EngineConfig":
         """Raise ``ValueError`` on the first violated rule; return self
@@ -121,6 +128,17 @@ class EngineConfig:
                 "attention (the paged Pallas kernel is a single-device "
                 f"program) — drop attn_backend={self.attn_backend!r} or "
                 "the mesh_rules")
+        if self.draft_len < 1:
+            raise ValueError(f"draft_len must be >= 1 (a speculative "
+                             f"round drafts at least one token), "
+                             f"got {self.draft_len}")
+        if self.spec_decode and self.datapath == "sc_int_approx":
+            raise ValueError(
+                "spec_decode drafts on the sc_int_approx datapath and "
+                "verifies on the request's target datapath — a "
+                "datapath='sc_int_approx' target makes drafter == "
+                "verifier, a no-op that doubles compute; use "
+                "datapath='qat' or 'sc_int'")
         return self
 
     def replace(self, **changes) -> "EngineConfig":

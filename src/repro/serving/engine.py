@@ -96,15 +96,17 @@ from repro.configs.base import ModelConfig
 from repro.core.kv_quant import kv_quant
 from repro.distributed.sharding import MeshRules, mesh_rules, shard_tree
 from repro.kernels import dispatch as kernel_dispatch
-from repro.models import (decode_step, init_paged_cache, paged_cache_specs,
-                          paged_decode_step, paged_prefill, param_specs,
-                          prefill, supports_paged_prefill)
+from repro.models import (decode_step, gather_state_rows, init_paged_cache,
+                          paged_cache_specs, paged_decode_step,
+                          paged_prefill, paged_verify_step, param_specs,
+                          prefill, scatter_state_rows,
+                          select_state_snapshot, supports_paged_prefill)
 
 from .config import DATAPATHS, EngineConfig
 from .paging import (TRASH_PAGE, PageAllocator, PageTable, pad_pow2,
                      pages_needed)
 from .sampling import (SamplingParams, greedy_tokens, pack_sampling,
-                       sample_tokens)
+                       sample_tokens, speculative_accept, token_logprobs)
 
 __all__ = ["Request", "SamplingParams", "ServeEngine", "EngineConfig",
            "DATAPATHS", "sequential_generate"]
@@ -131,6 +133,12 @@ class Request:
     sampling: SamplingParams = field(default_factory=SamplingParams)
     generated: list[int] = field(default_factory=list)
     done: bool = False
+    # one dict per generated token when sampling.logprobs > 0 (else
+    # stays empty): {"logprob": float, "top": [(token, logprob), ...]}
+    # with the top list cropped to sampling.logprobs entries, scored
+    # under the distribution the token was drawn from (see
+    # sampling.token_logprobs)
+    logprobs: list[dict] = field(default_factory=list)
     # engine internals
     _table: PageTable | None = field(default=None, repr=False)
     _len: int = field(default=0, repr=False)      # tokens held in cache
@@ -150,6 +158,8 @@ class ServeEngine:
                  prefill_mode: str = "chunked",
                  attn_backend: str | None = None,
                  kv_format: str = "fp",
+                 spec_decode: bool = False,
+                 draft_len: int = 4,
                  config: EngineConfig | None = None):
         assert not cfg.is_encoder, "encoders are served via forward()"
         if config is None:
@@ -158,7 +168,8 @@ class ServeEngine:
                 num_pages=num_pages, prefill_chunk=prefill_chunk,
                 datapath=datapath, kv_format=kv_format,
                 bsn_backend=bsn_backend, attn_backend=attn_backend,
-                prefill_mode=prefill_mode, mesh_rules=mesh_rules)
+                prefill_mode=prefill_mode, mesh_rules=mesh_rules,
+                spec_decode=spec_decode, draft_len=draft_len)
         config.validate()
         self.config = config
         mesh_rules = config.mesh_rules
@@ -168,6 +179,15 @@ class ServeEngine:
         self.cfg = _cfg_for_datapath(cfg, config.datapath)
         self.datapath = config.datapath
         self.kv_format = config.kv_format
+        # speculative decoding: draft on the cheap approximate-BSN
+        # datapath, verify on the request's target datapath (self.cfg).
+        # cfg_draft shares the SAME params pytree — the datapaths are
+        # one model at three fidelities — so spec costs no extra weights.
+        self.spec_decode = config.spec_decode
+        self.draft_len = config.draft_len
+        self.cfg_draft = _cfg_for_datapath(cfg, "sc_int_approx")
+        self._spec_rounds = self._spec_draft_tokens = 0
+        self._spec_accepted = self._spec_emitted = 0
         self.max_slots, self.max_len = config.max_slots, config.max_len
         self.page_size = config.page_size
         self.max_pages = pages_needed(config.max_len, config.page_size)
@@ -208,18 +228,27 @@ class ServeEngine:
         # mesh, output shardings are pinned to the input cache layout so
         # every step reuses one compiled variant per shape bucket
         # (donation stays clean, no sharding ping-pong).
-        jit_kw = {}
+        jit_kw, spec_jit_kw = {}, {}
         self._cache_sh = None
         if mesh_rules is not None:
             from jax.sharding import NamedSharding, PartitionSpec as P
             self._cache_sh = jax.tree.map(lambda a: a.sharding, self.cache)
             rep = NamedSharding(mesh_rules.mesh, P())
-            jit_kw["out_shardings"] = (rep, self._cache_sh)
+            # (tokens, cache, logprobs-or-()) — the sharding entries
+            # broadcast as pytree prefixes, so the empty lp_k=0 tuple
+            # contributes no leaves and the lp_k>0 triple pins replicated
+            jit_kw["out_shardings"] = (rep, self._cache_sh, rep)
+            spec_jit_kw["draft"] = {
+                "out_shardings": (rep, self._cache_sh)}
+            spec_jit_kw["verify"] = {
+                "out_shardings": (rep, rep, self._cache_sh, rep)}
         self._decode = jax.jit(self._decode_fn, donate_argnums=(1,),
-                               static_argnames=("do_sample",), **jit_kw)
+                               static_argnames=("do_sample", "lp_k"),
+                               **jit_kw)
         self._prefill_batched = jax.jit(self._prefill_batched_fn,
                                         static_argnames=("chunk",
-                                                         "do_sample"),
+                                                         "do_sample",
+                                                         "lp_k"),
                                         donate_argnums=(1,), **jit_kw)
         # The exact-prefill debug oracle is donation-EXEMPT by design
         # (analysis/contracts.audit_donation records the exemption): it
@@ -227,7 +256,14 @@ class ServeEngine:
         # cache, so there is no input cache buffer to alias an output
         # into — donating nothing is correct, not an oversight.
         self._prefill_exact = jax.jit(self._prefill_exact_fn,
-                                      static_argnames=("do_sample",))
+                                      static_argnames=("do_sample",
+                                                       "lp_k"))
+        self._draft = jax.jit(self._draft_fn, donate_argnums=(1,),
+                              static_argnames=("do_sample",),
+                              **spec_jit_kw.get("draft", {}))
+        self._verify = jax.jit(self._verify_fn, donate_argnums=(1,),
+                               static_argnames=("do_sample", "lp_k"),
+                               **spec_jit_kw.get("verify", {}))
 
     @classmethod
     def from_config(cls, params, cfg: ModelConfig,
@@ -255,34 +291,121 @@ class ServeEngine:
     # greedy branch of ``sample_tokens``, which is bit-identical, so
     # batch composition never changes anyone's tokens.
 
+    # ``lp_k`` is the second static flag: the pow2-bucketed batch max of
+    # SamplingParams.logprobs.  lp_k == 0 (the default workload, and the
+    # only value the analysis gate traces) compiles the historical step
+    # byte for byte — token_logprobs (log_softmax + top_k sorts) never
+    # enters the jaxpr, which test_spec_decode pins via the dot-profile
+    # snapshot.  The lp slot is an EMPTY tuple then, so output pytrees
+    # and out_shardings stay aligned across both variants.
+
     def _decode_fn(self, params, cache, tokens, slot_ids, tables, lengths,
-                   samp, *, do_sample):
+                   samp, *, do_sample, lp_k=0):
         logits, cache = paged_decode_step(params, cache, tokens,
                                           slot_ids, tables, lengths,
                                           self.cfg)
         nxt = sample_tokens(logits, lengths + 1, samp,
                             self.cfg.vocab_size) if do_sample \
             else greedy_tokens(logits, self.cfg.vocab_size)
-        return nxt, cache
+        lp = token_logprobs(logits, nxt, samp, self.cfg.vocab_size,
+                            lp_k) if lp_k else ()
+        return nxt, cache, lp
 
     def _prefill_batched_fn(self, params, cache, tokens, tables, lens,
-                            slot_ids, samp, *, chunk, do_sample):
+                            slot_ids, samp, *, chunk, do_sample, lp_k=0):
         logits, cache = paged_prefill(params, cache, tokens, tables,
                                       lens, self.cfg, chunk=chunk,
                                       slot_ids=slot_ids)
         nxt = sample_tokens(logits, lens, samp,
                             self.cfg.vocab_size) if do_sample \
             else greedy_tokens(logits, self.cfg.vocab_size)
-        return nxt, cache
+        lp = token_logprobs(logits, nxt, samp, self.cfg.vocab_size,
+                            lp_k) if lp_k else ()
+        return nxt, cache, lp
 
-    def _prefill_exact_fn(self, params, batch, samp, *, do_sample):
+    def _prefill_exact_fn(self, params, batch, samp, *, do_sample,
+                          lp_k=0):
         logits, cache = prefill(params, batch, self.cfg)
         plen = logits.shape[1]                    # static: exact length
         pos = jnp.full((1,), plen, jnp.int32)
         tok = sample_tokens(logits[:, -1], pos, samp,
                             self.cfg.vocab_size) if do_sample \
             else greedy_tokens(logits[:, -1], self.cfg.vocab_size)
-        return tok[0], cache
+        lp = token_logprobs(logits[:, -1], tok, samp,
+                            self.cfg.vocab_size, lp_k) if lp_k else ()
+        return tok[0], cache, lp
+
+    # -- speculative decoding (draft on sc_int_approx, verify on the
+    #    target datapath) ------------------------------------------------
+    #
+    # One spec round = TWO jit dispatches for up to draft_len + 1
+    # committed tokens:
+    #
+    # 1. _draft_fn: an in-jit scan of `draft_len` single-token decode
+    #    steps on cfg_draft (the paper's approximate-BSN path), sharing
+    #    the target's params AND paged cache.  The draft's K/V writes at
+    #    positions len..len+k-1 are dead (the verify scatter overwrites
+    #    every one before any read can see them: they sit past the
+    #    committed length until then), and the recurrent state rows are
+    #    checkpointed before / restored after, so approximate arithmetic
+    #    never leaks into target state.
+    # 2. _verify_fn: ONE parallel multi-token target forward over the
+    #    window [t0, d_1..d_k] (paged_verify_step), drawing the target
+    #    token tau_t at every window position from the SAME
+    #    (seed, position) Gumbel stream the draft used.  The accepted
+    #    prefix is simply where draft == target (shared noise makes the
+    #    classic accept/resample rule collapse to token equality), and
+    #    the engine always emits TARGET draws — so spec-on output is
+    #    bit-identical to spec-off by construction, not just equal in
+    #    distribution.
+
+    def _draft_fn(self, params, cache, tokens, slot_ids, tables, lengths,
+                  samp, *, do_sample):
+        rows0 = gather_state_rows(cache, slot_ids)
+
+        def body(carry, t):
+            cache, tok = carry
+            logits, cache = paged_decode_step(params, cache, tok,
+                                              slot_ids, tables,
+                                              lengths + t, self.cfg_draft)
+            nxt = sample_tokens(logits, lengths + 1 + t, samp,
+                                self.cfg.vocab_size) if do_sample \
+                else greedy_tokens(logits, self.cfg.vocab_size)
+            return (cache, nxt), nxt
+
+        (cache, _), drafts = jax.lax.scan(
+            body, (cache, tokens),
+            jnp.arange(self.draft_len, dtype=jnp.int32))
+        cache = scatter_state_rows(cache, rows0, slot_ids)
+        return jnp.moveaxis(drafts, 0, 1), cache          # (S, k)
+
+    def _verify_fn(self, params, cache, tokens, drafts, slot_ids, tables,
+                   lengths, samp, *, do_sample, lp_k=0):
+        win = jnp.concatenate([tokens[:, None], drafts], axis=1)
+        logits, cache, snaps = paged_verify_step(
+            params, cache, win, slot_ids, tables, lengths, self.cfg)
+        S, T, V = logits.shape
+        flat = logits.reshape(S * T, V)
+        # row (s, t) draws the token at sequence index lengths[s]+1+t —
+        # the very fold-in counters non-speculative decode would use
+        pos = (lengths[:, None] + 1
+               + jnp.arange(T, dtype=jnp.int32)[None, :]).reshape(-1)
+        sampf = {k: jnp.repeat(v, T) for k, v in samp.items()}
+        tau = sample_tokens(flat, pos, sampf,
+                            self.cfg.vocab_size) if do_sample \
+            else greedy_tokens(flat, self.cfg.vocab_size)
+        tau = tau.reshape(S, T)
+        m = speculative_accept(drafts, tau[:, :T - 1])    # (S,)
+        cache = scatter_state_rows(
+            cache, select_state_snapshot(snaps, m), slot_ids)
+        if lp_k:
+            chosen, ids, lps = token_logprobs(
+                flat, tau.reshape(-1), sampf, self.cfg.vocab_size, lp_k)
+            lp = (chosen.reshape(S, T), ids.reshape(S, T, lp_k),
+                  lps.reshape(S, T, lp_k))
+        else:
+            lp = ()
+        return tau, m, cache, lp
 
     @contextlib.contextmanager
     def _scope(self):
@@ -383,14 +506,19 @@ class ServeEngine:
             slot_ids[g] = slot
         samp = pack_sampling([r.sampling for r in reqs], pad_to=G)
         do_sample = any(not r.sampling.greedy for r in reqs)
+        lp_k = self._lp_bucket(reqs)
         with self._scope():
-            nxt, self.cache = self._prefill_batched(
+            nxt, self.cache, lp = self._prefill_batched(
                 self.params, self.cache, jnp.asarray(tokens),
                 jnp.asarray(tables), jnp.asarray(lens),
                 jnp.asarray(slot_ids), samp, chunk=chunk,
-                do_sample=do_sample)
+                do_sample=do_sample, lp_k=lp_k)
+        lp = jax.device_get(lp) if lp_k else None
         for g, r in enumerate(reqs):
             r.generated.append(int(nxt[g]))
+            if lp is not None and r.sampling.logprobs > 0:
+                r.logprobs.append(self._lp_record(
+                    lp[0][g], lp[1][g], lp[2][g], r.sampling.logprobs))
             self._check_done(r)
 
     def _check_done(self, r: Request):
@@ -415,12 +543,17 @@ class ServeEngine:
         prompts (``supports_paged_prefill`` is False)."""
         toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
         samp = pack_sampling([req.sampling])
+        lp_k = self._lp_bucket([req])
         with self._scope():
-            tok, cache_one = self._prefill_exact(
+            tok, cache_one, lp = self._prefill_exact(
                 self.params, {"tokens": toks}, samp,
-                do_sample=not req.sampling.greedy)
+                do_sample=not req.sampling.greedy, lp_k=lp_k)
         self._scatter_prefill(req, cache_one)
         req.generated.append(int(tok))
+        if lp_k and req.sampling.logprobs > 0:
+            lp = jax.device_get(lp)
+            req.logprobs.append(self._lp_record(
+                lp[0][0], lp[1][0], lp[2][0], req.sampling.logprobs))
         self._check_done(req)
 
     def _scatter_prefill(self, req: Request, cache_one: dict):
@@ -473,6 +606,24 @@ class ServeEngine:
             cache = jax.device_put(cache, self._cache_sh)
         self.cache = cache
 
+    # -- logprobs -------------------------------------------------------
+    @staticmethod
+    def _lp_bucket(reqs) -> int:
+        """The static top-k width traced into the step: the batch max of
+        SamplingParams.logprobs, pow2-padded so requests asking for 3 vs
+        4 top entries share a compiled variant.  0 (nobody asked) keeps
+        the historical step — no sampler/sort compute in the jaxpr."""
+        m = max((r.sampling.logprobs for r in reqs), default=0)
+        return pad_pow2(m) if m else 0
+
+    @staticmethod
+    def _lp_record(chosen, ids, lps, n: int) -> dict:
+        """Crop one lane's device logprob row to the request's own
+        ``logprobs=N`` ask (the traced width is the batch bucket)."""
+        return {"logprob": float(chosen),
+                "top": [(int(t), float(p))
+                        for t, p in zip(ids[:n], lps[:n])]}
+
     # -- stepping -------------------------------------------------------
     def _packed_sampling(self, active: list[int], Sb: int) -> dict:
         """Per-lane sampling tensors for the decode step.  They are
@@ -509,6 +660,7 @@ class ServeEngine:
                 vr._table.release(self.allocator)
                 vr._table, vr._len = None, 0
                 vr.generated = []
+                vr.logprobs = []
                 self.queue.insert(0, vr)
                 self.slots[v] = None
                 active.remove(v)
@@ -523,8 +675,102 @@ class ServeEngine:
                 done.append(r)
                 self.slots[i] = None
 
+    def _step_batch(self, active: list[int]):
+        """The shared (Sb, maxp) pow2-bucketed lane tensors every decode
+        variant (plain and speculative) feeds from."""
+        Sb = pad_pow2(len(active), hi=self.max_slots)
+        maxp = pad_pow2(max(len(self.slots[i]._table.pages)
+                            for i in active))
+        tokens = np.zeros((Sb,), np.int32)
+        slot_ids = np.full((Sb,), self.max_slots, np.int32)  # scratch
+        tables = np.full((Sb, maxp), TRASH_PAGE, np.int32)
+        lengths = np.zeros((Sb,), np.int32)
+        for lane, i in enumerate(active):
+            r = self.slots[i]
+            tokens[lane] = r.generated[-1]
+            slot_ids[lane] = i
+            tables[lane] = r._table.padded(maxp)
+            lengths[lane] = r._len
+        samp = self._packed_sampling(active, Sb)
+        do_sample = any(not self.slots[i].sampling.greedy for i in active)
+        lp_k = self._lp_bucket([self.slots[i] for i in active])
+        return (jnp.asarray(tokens), jnp.asarray(slot_ids),
+                jnp.asarray(tables), jnp.asarray(lengths), samp,
+                do_sample, lp_k)
+
+    def _ensure_spec_window(self, active: list[int]) -> bool:
+        """All-or-nothing capacity check for ONE speculative round: every
+        active lane must fit ``draft_len + 1`` more cache positions
+        (window writes land at ``_len .. _len + draft_len``) and grow its
+        page table WITHOUT preemption.  On any failure the step falls
+        back to plain one-token decode — speculation is an optimization
+        and must never evict work the plain path would have kept.  (A
+        lane that grew some pages before a later lane failed keeps them:
+        ``ensure`` is monotone and the pages stay owned by its table,
+        used by the very next +1 growth or released at completion.)"""
+        k = self.draft_len
+        if any(self.slots[i]._len + k > self.max_len - 1 for i in active):
+            return False
+        return all(self.slots[i]._table.ensure(
+            self.slots[i]._len + k + 1, self.allocator) for i in active)
+
+    def _spec_round(self, active: list[int]):
+        """Draft ``draft_len`` tokens on sc_int_approx, verify in one
+        parallel target step, commit the accepted prefix + bonus token.
+        Emitted tokens are always the target's own (seed, position) draws
+        (see the traced-body comment), so requests cannot tell this path
+        from plain decode — only the step count can."""
+        tokens, slot_ids, tables, lengths, samp, do_sample, lp_k = \
+            self._step_batch(active)
+        with self._scope():
+            drafts, self.cache = self._draft(
+                self.params, self.cache, tokens, slot_ids, tables,
+                lengths, samp, do_sample=do_sample)
+            tau, m, self.cache, lp = self._verify(
+                self.params, self.cache, tokens, drafts, slot_ids,
+                tables, lengths, samp, do_sample=do_sample, lp_k=lp_k)
+        tau, m = np.asarray(tau), np.asarray(m)
+        lp = jax.device_get(lp) if lp_k else None
+        self._spec_rounds += 1
+        self._spec_draft_tokens += self.draft_len * len(active)
+        for lane, i in enumerate(active):
+            r = self.slots[i]
+            self._spec_accepted += int(m[lane])
+            for j in range(int(m[lane]) + 1):
+                r.generated.append(int(tau[lane, j]))
+                r._len += 1
+                if lp is not None and r.sampling.logprobs > 0:
+                    r.logprobs.append(self._lp_record(
+                        lp[0][lane, j], lp[1][lane, j], lp[2][lane, j],
+                        r.sampling.logprobs))
+                self._spec_emitted += 1
+                self._check_done(r)
+                if r.done:
+                    break
+
+    @property
+    def spec_stats(self) -> dict:
+        """Speculative-decoding counters since construction.
+        ``acceptance_rate`` = accepted drafts / drafted tokens;
+        ``tokens_per_round`` = committed tokens per verify forward — the
+        verifier-side speedup (each round costs ONE target-model
+        multi-token step, so this is the decode-steps-saved factor on
+        hardware where the drafter is cheap)."""
+        return {
+            "rounds": self._spec_rounds,
+            "draft_tokens": self._spec_draft_tokens,
+            "accepted_tokens": self._spec_accepted,
+            "emitted_tokens": self._spec_emitted,
+            "acceptance_rate": (self._spec_accepted
+                                / max(self._spec_draft_tokens, 1)),
+            "tokens_per_round": (self._spec_emitted
+                                 / max(self._spec_rounds, 1)),
+        }
+
     def step(self) -> list[Request]:
-        """Admit + ONE batched decode step.  Returns finished requests."""
+        """Admit + ONE batched decode step (speculative round when
+        ``spec_decode`` is on and every lane has window headroom).
+        Returns finished requests."""
         self._admit()
         done: list[Request] = []
         # requests finished at prefill free their pages BEFORE growth, so
@@ -532,35 +778,30 @@ class ServeEngine:
         # this step's headroom
         self._sweep_done(done)
         active = [i for i, r in enumerate(self.slots) if r is not None]
-        active = self._grow_or_preempt(active)
-        if active:
-            Sb = pad_pow2(len(active), hi=self.max_slots)
-            maxp = pad_pow2(max(len(self.slots[i]._table.pages)
-                                for i in active))
-            tokens = np.zeros((Sb,), np.int32)
-            slot_ids = np.full((Sb,), self.max_slots, np.int32)  # scratch
-            tables = np.full((Sb, maxp), TRASH_PAGE, np.int32)
-            lengths = np.zeros((Sb,), np.int32)
-            for lane, i in enumerate(active):
-                r = self.slots[i]
-                tokens[lane] = r.generated[-1]
-                slot_ids[lane] = i
-                tables[lane] = r._table.padded(maxp)
-                lengths[lane] = r._len
-            samp = self._packed_sampling(active, Sb)
-            do_sample = any(not self.slots[i].sampling.greedy
-                            for i in active)
-            with self._scope():
-                nxt, self.cache = self._decode(
-                    self.params, self.cache, jnp.asarray(tokens),
-                    jnp.asarray(slot_ids), jnp.asarray(tables),
-                    jnp.asarray(lengths), samp, do_sample=do_sample)
-            nxt = np.asarray(nxt)
-            for lane, i in enumerate(active):
-                r = self.slots[i]
-                r.generated.append(int(nxt[lane]))
-                r._len += 1
-                self._check_done(r)
+        if self.spec_decode and active \
+                and self._ensure_spec_window(active):
+            self._spec_round(active)
+        else:
+            active = self._grow_or_preempt(active)
+            if active:
+                tokens, slot_ids, tables, lengths, samp, do_sample, \
+                    lp_k = self._step_batch(active)
+                with self._scope():
+                    nxt, self.cache, lp = self._decode(
+                        self.params, self.cache, tokens, slot_ids,
+                        tables, lengths, samp, do_sample=do_sample,
+                        lp_k=lp_k)
+                nxt = np.asarray(nxt)
+                lp = jax.device_get(lp) if lp_k else None
+                for lane, i in enumerate(active):
+                    r = self.slots[i]
+                    r.generated.append(int(nxt[lane]))
+                    r._len += 1
+                    if lp is not None and r.sampling.logprobs > 0:
+                        r.logprobs.append(self._lp_record(
+                            lp[0][lane], lp[1][lane], lp[2][lane],
+                            r.sampling.logprobs))
+                    self._check_done(r)
         self._sweep_done(done)          # decode-finished + truncated
         return done
 

@@ -48,6 +48,33 @@ Filtering order (applied to ``logits / temperature``):
 
 The best token always survives every filter, so the masked row is never
 empty.
+
+Speculative coupling
+--------------------
+
+Because the draw is a Gumbel-argmax over the masked logits with noise
+that depends ONLY on ``(seed, position)``, two different logit rows for
+the same (request, position) — e.g. a draft datapath and a target
+datapath — share their noise.  :func:`speculative_accept` exploits
+this: the engine drafts ``d_t = argmax(mask(draft_logits) + g_t)`` and
+verifies ``tau_t = argmax(mask(target_logits) + g_t)`` with the SAME
+``g_t``, then accepts the longest prefix where they agree and always
+emits the TARGET tokens.  Each ``tau_t`` is by construction an exact
+draw from the target distribution (the Gumbel-max trick), so the
+emitted stream is bit-identical to non-speculative decode — a stronger
+property than the usual accept/resample rule's distribution equality.
+
+Logprobs
+--------
+
+:func:`token_logprobs` returns per-token log-probabilities under the
+distribution the token was ACTUALLY drawn from: greedy lanes score
+against ``log_softmax`` of the raw (cropped, f32) logits; sampled lanes
+score against ``log_softmax`` of the temperature-scaled, filtered
+logits (masked-out tokens have logprob ``-inf``).  Computed inside the
+jitted step — no host round-trip — and only when a request asked
+(``SamplingParams.logprobs > 0`` anywhere in the batch), so the default
+step compiles zero sampler/sort compute, exactly as before.
 """
 
 from __future__ import annotations
@@ -61,7 +88,8 @@ import numpy as np
 from repro.distributed.sharding import constrain
 
 __all__ = ["SamplingParams", "pack_sampling", "filter_logits",
-           "sample_tokens", "greedy_tokens", "lane_keys"]
+           "sample_tokens", "greedy_tokens", "lane_keys",
+           "token_logprobs", "speculative_accept"]
 
 
 @dataclass(frozen=True)
@@ -76,17 +104,27 @@ class SamplingParams:
     is the feature, perturb the seed for variety).  Only the low 32 bits
     of ``seed`` enter the PRNG key: seeds congruent mod 2**32 name the
     SAME stream (hash-derived seeds should be masked by the caller).
+
+    ``logprobs = N`` asks the engine to return, for every generated
+    token, the chosen token's log-probability plus the top-N
+    (token, logprob) pairs — scored under the distribution the token was
+    drawn from (see :func:`token_logprobs`).  ``0`` (the default)
+    disables logprobs and compiles the historical step unchanged.
     """
     temperature: float = 0.0
     top_k: int = 0
     top_p: float = 1.0
     min_p: float = 0.0
     seed: int = 0
+    logprobs: int = 0
 
     def __post_init__(self):
         if self.temperature < 0:
             raise ValueError(f"temperature must be >= 0, "
                              f"got {self.temperature}")
+        if self.logprobs < 0:
+            raise ValueError(f"logprobs must be >= 0 (0 = off), "
+                             f"got {self.logprobs}")
         if self.top_k < 0:
             raise ValueError(f"top_k must be >= 0 (0 = off), "
                              f"got {self.top_k}")
@@ -217,3 +255,60 @@ def sample_tokens(logits: jax.Array, positions: jax.Array,
 
     nxt = jnp.where(samp["temperature"] > 0, drawn, greedy)
     return constrain(nxt, None)
+
+
+def token_logprobs(logits: jax.Array, tokens: jax.Array,
+                   samp: dict[str, jax.Array], vocab_size: int,
+                   k: int) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Score drawn tokens under the distribution they were drawn from.
+
+    logits: ``(S, V_padded)`` step logits; tokens: ``(S,)`` int32 the
+    chosen tokens; ``k``: static top-k width (the batch max of
+    ``SamplingParams.logprobs``).  Returns
+    ``(chosen_lp (S,), top_ids (S, k), top_lp (S, k))`` float32/int32.
+
+    Greedy lanes (``temperature == 0``) are scored against
+    ``log_softmax`` of the raw cropped f32 logits — the model's actual
+    next-token distribution.  Sampled lanes are scored against
+    ``log_softmax`` of the :func:`filter_logits` output, i.e. the
+    post-temperature post-filter distribution the categorical draw used;
+    filtered-out tokens score ``-inf``.  Each row is a proper
+    distribution (``logsumexp == 0``), which the tests pin.
+
+    The ``jnp.where`` on rows (not a division by temperature) keeps
+    greedy lanes free of the ``temperature -> 0`` blowup, and everything
+    is pinned replicated so mesh runs return bit-identical logprobs.
+    """
+    lf = logits[:, :vocab_size].astype(jnp.float32)
+    lf = constrain(lf, None, None)
+    raw_lp = jax.nn.log_softmax(lf, axis=-1)
+    masked = filter_logits(lf, samp["temperature"], samp["top_k"],
+                           samp["top_p"], samp["min_p"])
+    masked_lp = jax.nn.log_softmax(masked, axis=-1)
+    lp = jnp.where((samp["temperature"] > 0)[:, None], masked_lp, raw_lp)
+    chosen = jnp.take_along_axis(
+        lp, tokens.astype(jnp.int32)[:, None], axis=-1)[:, 0]
+    top_lp, top_ids = jax.lax.top_k(lp, max(k, 1))
+    top_lp, top_ids = top_lp[:, :k], top_ids[:, :k].astype(jnp.int32)
+    return (constrain(chosen, None),
+            constrain(top_ids, None, None),
+            constrain(top_lp, None, None))
+
+
+def speculative_accept(draft: jax.Array, target: jax.Array) -> jax.Array:
+    """Length of the accepted prefix, per lane.
+
+    draft, target: ``(S, k)`` int32 token ids at the same positions,
+    drawn with SHARED (seed, position) Gumbel noise (or both greedy).
+    Returns ``(S,)`` int32 ``m`` = number of leading positions where
+    they agree.  The engine then emits the k+1 target tokens' prefix
+    ``tau_0 .. tau_m`` (the first m accepted drafts ARE the target
+    draws, plus the bonus token verified at the first divergence).
+
+    ``draft == target`` everywhere gives ``m == k`` — every token
+    accepted — which the property tests pin; and because emitted tokens
+    are always TARGET draws, distribution preservation is exact, not
+    just in expectation.
+    """
+    match = (draft == target).astype(jnp.int32)
+    return jnp.sum(jnp.cumprod(match, axis=-1), axis=-1)

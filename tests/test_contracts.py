@@ -132,7 +132,7 @@ def test_host_boundary_injection_caught(params):
     d_args = decode_example_args(eng)
 
     def leaky(p, cache, *args):
-        out, cache = eng._decode_fn(p, cache, *args, do_sample=False)
+        out, cache, _ = eng._decode_fn(p, cache, *args, do_sample=False)
         lead = jax.tree.leaves(out)[0]
         peek = jax.pure_callback(
             lambda x: x, jax.ShapeDtypeStruct(lead.shape, lead.dtype),

@@ -273,3 +273,60 @@ def test_degenerate_mesh_equals_no_mesh():
                                             data_parallel=1))
     assert _engine_tokens(params, ATTN_CFG, "qat", rules) \
         == _engine_tokens(params, ATTN_CFG, "qat", None)
+
+
+@pytest.mark.parametrize("datapath", ["qat", "sc_int"])
+def test_spec_decode_mesh_on_equals_mesh_off(datapath):
+    """The speculative fourth of the differential: drafting on
+    sc_int_approx and verifying on the sharded target datapath emits
+    the same tokens as the mesh-off spec engine AND the mesh-off
+    plain engine — the draft scan, the multi-token verify window, and
+    the state-snapshot rollback all preserve the layout pins, so GSPMD
+    partitioning cannot perturb a single accept/reject decision."""
+    params = init_params(jax.random.key(0), ATTN_CFG)
+    sharded = _engine_tokens(params, ATTN_CFG, datapath, _rules(),
+                             max_new=6, spec_decode=True, draft_len=3)
+    local = _engine_tokens(params, ATTN_CFG, datapath, None,
+                           max_new=6, spec_decode=True, draft_len=3)
+    plain = _engine_tokens(params, ATTN_CFG, datapath, None, max_new=6)
+    assert sharded == local == plain, datapath
+
+
+def test_spec_decode_sampled_mesh_on_equals_mesh_off():
+    """Seeded-sampled speculation under the mesh: the shared
+    (seed, position) Gumbel streams are replicated-pinned before every
+    draw, so the coupled draft/target draws — and hence the accepted
+    prefixes — are bit-identical with and without the mesh."""
+    params = init_params(jax.random.key(0), ATTN_CFG)
+    sharded = _engine_tokens(params, ATTN_CFG, "sc_int", _rules(),
+                             max_new=6, sampling=SAMPLED,
+                             spec_decode=True, draft_len=3)
+    plain = _engine_tokens(params, ATTN_CFG, "sc_int", None,
+                           max_new=6, sampling=SAMPLED)
+    assert sharded == plain
+
+
+def test_logprobs_mesh_on_equals_mesh_off():
+    """Logprob records (chosen + top-k) are computed from replicated-
+    pinned logits, so the mesh changes neither tokens nor scores —
+    including through speculative verify steps."""
+    params = init_params(jax.random.key(0), ATTN_CFG)
+    sps = [SamplingParams(logprobs=2),
+           SamplingParams(temperature=0.8, top_p=0.9, seed=11,
+                          logprobs=2),
+           SamplingParams(logprobs=2)]
+    runs = []
+    for rules in (_rules(), None):
+        eng = ServeEngine(params, ATTN_CFG, max_slots=2, max_len=32,
+                          page_size=8, datapath="qat", mesh_rules=rules,
+                          spec_decode=True, draft_len=3)
+        for p, sp in zip(PROMPTS, sps):
+            eng.submit(p, max_new_tokens=5, sampling=sp)
+        done = sorted(eng.run_to_completion(), key=lambda r: r.rid)
+        runs.append([(r.generated, r.logprobs) for r in done])
+    for (g_a, lp_a), (g_b, lp_b) in zip(*runs):
+        assert g_a == g_b
+        assert len(lp_a) == len(lp_b) == len(g_a)
+        for a, b in zip(lp_a, lp_b):
+            assert a["logprob"] == pytest.approx(b["logprob"], abs=1e-6)
+            assert [t for t, _ in a["top"]] == [t for t, _ in b["top"]]

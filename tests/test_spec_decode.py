@@ -1,0 +1,443 @@
+"""Cross-datapath speculative decoding: proven distribution-preserving.
+
+The claim under test is the strongest one speculative decoding can
+make: with the drafter and verifier riding the SAME (seed, position)
+Gumbel streams, the emitted tokens are *always* target draws, so
+spec-on equals spec-off **token for token** — bit-reproducibility, not
+just distributional equality.  Three layers pin it:
+
+1. Property layer — the acceptance rule in isolation.  The prefix law
+   of ``speculative_accept`` (hypothesis / the conftest fallback), and
+   a Monte-Carlo chi-square check that coupled emission leaves the
+   target marginal untouched while draft==target accepts everything.
+2. Differential layer — the engine matrix.  spec-on == spec-off ==
+   ``sequential_generate`` (greedy exact, seeded-sampled bit-identical)
+   across target datapaths x mixer families, through preemption
+   mid-draft and the max_len window fallback.  The mesh third of the
+   family lives in tests/test_sharded_serving.py.
+3. Logprobs layer — ``token_logprobs`` scores against the exact
+   distribution each lane drew from, the engine surfaces it without
+   perturbing tokens, and ``logprobs=0`` (the default) compiles the
+   historical step — no sampler/sort compute in the jaxpr, pinned via
+   the PR 8 dot-profile machinery.
+"""
+
+from collections import Counter
+from functools import lru_cache, partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.analysis.contracts import (decode_example_args, eqn_provenance,
+                                      iter_eqns)
+from repro.configs import LayerSpec, get_arch
+from repro.models import forward, init_params
+from repro.serving import (EngineConfig, SamplingParams, ServeEngine,
+                           sequential_generate)
+from repro.serving.sampling import (pack_sampling, sample_tokens,
+                                    speculative_accept, token_logprobs)
+
+SCALE = dict(d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+             vocab_size=64, vocab_pad_multiple=32, dtype="float32",
+             attn_q_chunk=8)
+CFGS = {
+    "attn": get_arch("granite-3-2b").scaled(n_layers=2, **SCALE),
+    "mamba": get_arch("jamba-1.5-large-398b").scaled(
+        period=(LayerSpec("mamba", "dense"),), n_layers=2, **SCALE,
+        mamba_d_state=8),
+    "rwkv6": get_arch("rwkv6-7b").scaled(
+        n_layers=2, **{**SCALE, "n_kv_heads": 4}),
+    "jamba": get_arch("jamba-1.5-large-398b").scaled(
+        n_layers=8, **SCALE, mamba_d_state=8, n_experts=4,
+        n_experts_per_tok=2, moe_capacity_factor=2.0),
+}
+PROMPTS = [[1, 2, 3], [4, 5, 6, 7], [8, 9]]
+SAMPLED = [SamplingParams(temperature=0.9, top_k=8, seed=42 + i)
+           for i in range(len(PROMPTS))]
+
+
+@lru_cache(maxsize=None)
+def _params(arch: str):
+    return init_params(jax.random.key(0), CFGS[arch])
+
+
+_RUNS: dict = {}
+
+
+def _tokens(arch, datapath, spec, sampling=None, max_new=8, **kw):
+    """Run the engine over PROMPTS; return ([generated...], engine).
+    Memoized on the full call signature: several tests compare against
+    the same spec-off baseline, and each engine build costs seconds of
+    XLA compiles at tiny scale."""
+    key = (arch, datapath, spec, tuple(sampling) if sampling else None,
+           max_new, tuple(sorted(kw.items())))
+    if key in _RUNS:
+        return _RUNS[key]
+    cfg = CFGS[arch]
+    kw.setdefault("max_slots", 4)
+    kw.setdefault("max_len", 64)
+    kw.setdefault("page_size", 8)
+    eng = ServeEngine(_params(arch), cfg, datapath=datapath,
+                      spec_decode=spec, draft_len=3, **kw)
+    sps = sampling if sampling is not None else [None] * len(PROMPTS)
+    for p, sp in zip(PROMPTS, sps):
+        eng.submit(p, max_new_tokens=max_new, sampling=sp)
+    done = eng.run_to_completion()
+    assert len(done) == len(PROMPTS)
+    out = [r.generated for r in sorted(done, key=lambda r: r.rid)], eng
+    _RUNS[key] = out
+    return out
+
+
+# ---------------------------------------------------------------------------
+# 1. the acceptance rule in isolation
+# ---------------------------------------------------------------------------
+
+@given(st.integers(min_value=1, max_value=8),
+       st.integers(min_value=0, max_value=8),
+       st.integers(min_value=0, max_value=10_000))
+@settings(max_examples=40, deadline=None)
+def test_accept_prefix_law(k, i, seed):
+    """m is the first index where draft and target disagree (k if they
+    never do) — mismatches AFTER the first must not matter."""
+    rng = np.random.default_rng(seed)
+    draft = rng.integers(0, 64, size=(1, k)).astype(np.int32)
+    target = draft.copy()
+    if i < k:
+        target[0, i] = (target[0, i] + 1 + rng.integers(0, 62)) % 64
+        # scramble everything past the first divergence: irrelevant
+        target[0, i + 1:] = rng.integers(0, 64, size=k - i - 1)
+    m = int(speculative_accept(jnp.asarray(draft), jnp.asarray(target))[0])
+    assert m == min(i, k)
+
+
+def test_accept_is_per_lane():
+    draft = jnp.asarray([[5, 6, 7], [5, 6, 7], [5, 6, 7]], jnp.int32)
+    target = jnp.asarray([[5, 6, 7], [5, 9, 7], [9, 6, 7]], jnp.int32)
+    assert speculative_accept(draft, target).tolist() == [3, 1, 0]
+
+
+def test_coupled_emission_preserves_target_marginal():
+    """The Monte-Carlo heart of the scheme.  At one position, draft and
+    target draws share Gumbel noise g: d = argmax(ld + g), tau =
+    argmax(lt + g).  The emitted token is ALWAYS tau (an accepted draft
+    IS tau; a rejected one is replaced by tau), so its marginal is
+    exactly softmax(lt) regardless of how bad the drafter is —
+    chi-square tested over many independent seed streams.  And when the
+    drafter equals the target, the coupling makes d == tau ALWAYS:
+    acceptance is 1.0, not merely high."""
+    V, N = 8, 4096
+    rng = np.random.default_rng(7)
+    lt = rng.normal(size=V).astype(np.float32) * 1.5
+    ld = rng.normal(size=V).astype(np.float32) * 1.5   # unrelated drafter
+    samp = pack_sampling([SamplingParams(temperature=1.0, seed=s)
+                          for s in range(N)])
+    pos = jnp.full((N,), 11, jnp.int32)
+    tile = lambda row: jnp.broadcast_to(jnp.asarray(row), (N, V))
+    tau = np.asarray(sample_tokens(tile(lt), pos, samp, V))
+    d = np.asarray(sample_tokens(tile(ld), pos, samp, V))
+
+    # (a) perfect drafter => perfect acceptance (coupling, not luck)
+    assert np.array_equal(
+        np.asarray(sample_tokens(tile(lt), pos, samp, V)), tau)
+
+    # (b) the emitted marginal is the target softmax: chi-square over V
+    # bins, dof = V-1 = 7; 24.32 is the 99.9% point — the draw is
+    # seed-deterministic, so this either always passes or flags a real
+    # distribution shift, it cannot flake.
+    p = np.exp(lt - lt.max());  p /= p.sum()
+    obs = np.bincount(tau, minlength=V).astype(np.float64)
+    chi2 = float(((obs - N * p) ** 2 / (N * p)).sum())
+    assert chi2 < 24.32, (chi2, obs.tolist(), (N * p).tolist())
+
+    # (c) the coupling is monotone: acceptance is far above the
+    # independent-draws rate sum_v p_d(v) p_t(v), which for these two
+    # rows is ~0.2 — shared noise concentrates agreement.
+    pd = np.exp(ld - ld.max());  pd /= pd.sum()
+    independent = float((pd * p).sum())
+    coupled = float((d == tau).mean())
+    assert coupled > independent + 0.1, (coupled, independent)
+
+
+# ---------------------------------------------------------------------------
+# 2. the engine differential matrix
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("datapath", ["qat", "sc_int"])
+@pytest.mark.parametrize("arch", ["attn", "mamba", "rwkv6"])
+def test_spec_greedy_matches_plain_and_sequential(arch, datapath):
+    """Greedy: spec-on emits exactly the spec-off tokens, which are
+    exactly the per-request sequential oracle's tokens — across both
+    target datapaths and all three mixer families."""
+    spec, eng = _tokens(arch, datapath, spec=True)
+    plain, _ = _tokens(arch, datapath, spec=False)
+    assert spec == plain
+    if arch == "attn":
+        # plain == sequential is already pinned per-arch by
+        # test_paged_kv / test_sampling; close the triangle once here
+        ref = sequential_generate(_params(arch), CFGS[arch], PROMPTS,
+                                  max_new_tokens=8, datapath=datapath)
+        assert spec == ref
+    st = eng.spec_stats
+    assert st["rounds"] >= 1 and st["emitted_tokens"] >= st["rounds"]
+    assert st["accepted_tokens"] <= st["draft_tokens"]
+    assert st["tokens_per_round"] >= 1.0
+
+
+@pytest.mark.parametrize("datapath", ["qat", "sc_int"])
+def test_spec_sampled_bit_identical(datapath):
+    """Seeded sampling: the coupled streams make spec-on == spec-off
+    bit-identical (same tokens, not just same distribution)."""
+    spec, _ = _tokens("attn", datapath, spec=True, sampling=SAMPLED)
+    plain, _ = _tokens("attn", datapath, spec=False, sampling=SAMPLED)
+    assert spec == plain
+    ref = sequential_generate(_params("attn"), CFGS["attn"], PROMPTS,
+                              max_new_tokens=8, datapath=datapath,
+                              sampling=SAMPLED)
+    assert spec == ref
+
+
+def test_spec_sampled_hybrid_jamba():
+    """The 8-layer hybrid (mamba + attention + MoE + cmix) exercises
+    every verify path — attention window scoring AND recurrent
+    state-snapshot rollback — in one model."""
+    spec, _ = _tokens("jamba", "sc_int", spec=True, sampling=SAMPLED,
+                      max_new=6)
+    plain, _ = _tokens("jamba", "sc_int", spec=False, sampling=SAMPLED,
+                       max_new=6)
+    assert spec == plain
+
+
+def test_spec_preemption_mid_draft():
+    """Under pool pressure a spec round may be impossible (growing the
+    draft window would evict work): the engine must fall back to plain
+    decode ticks, never preempt FOR speculation, and still emit the
+    spec-off tokens exactly."""
+    prompts = PROMPTS + [[10, 11, 12, 13, 14]]
+    kw = dict(max_slots=4, max_len=64, page_size=8, num_pages=9)
+    cfg = CFGS["attn"]
+    outs = []
+    for spec in (True, False):
+        eng = ServeEngine(_params("attn"), cfg, datapath="qat",
+                          spec_decode=spec, draft_len=3, **kw)
+        for p in prompts:
+            eng.submit(p, max_new_tokens=8)
+        done = eng.run_to_completion()
+        assert len(done) == len(prompts)
+        outs.append([r.generated for r in sorted(done,
+                                                 key=lambda r: r.rid)])
+    assert outs[0] == outs[1]
+
+
+def test_spec_window_fallback_near_max_len():
+    """Lanes within draft_len+1 of max_len cannot host a window; the
+    round degrades to plain decode and truncation lengths match the
+    spec-off engine exactly."""
+    spec, _ = _tokens("attn", "qat", spec=True, max_new=32, max_len=16)
+    plain, _ = _tokens("attn", "qat", spec=False, max_new=32, max_len=16)
+    assert spec == plain
+    assert [len(g) for g in spec] == [16 - len(p) for p in PROMPTS]
+
+
+def test_draft_equals_target_accepts_everything():
+    """Mechanism proof: point the drafter at the target datapath and
+    the shared-Gumbel coupling accepts EVERY draft (rate exactly 1.0),
+    with tokens still identical to spec-off.  Real sc_int_approx
+    drafters at random-init tiny scale accept ~nothing — which the
+    differential above shows is still output-preserving."""
+    cfg = CFGS["attn"]
+    eng = ServeEngine(_params("attn"), cfg, datapath="qat",
+                      spec_decode=True, draft_len=3, max_slots=4,
+                      max_len=64, page_size=8)
+    eng.cfg_draft = eng.cfg            # perfect drafter
+    for p, sp in zip(PROMPTS, SAMPLED):
+        eng.submit(p, max_new_tokens=8, sampling=sp)
+    done = eng.run_to_completion()
+    got = [r.generated for r in sorted(done, key=lambda r: r.rid)]
+    plain, _ = _tokens("attn", "qat", spec=False, sampling=SAMPLED)
+    assert got == plain
+    st = eng.spec_stats
+    assert st["acceptance_rate"] == 1.0, st
+    # prefill emits token 1; the 7 remaining tokens per lane take
+    # ceil(7 / (k+1)) = 2 verify rounds instead of 7 decode ticks —
+    # the whole speedup thesis in one integer
+    assert st["rounds"] == 2, st
+    assert st["emitted_tokens"] == 7 * len(PROMPTS), st
+
+
+# ---------------------------------------------------------------------------
+# 3. logprobs
+# ---------------------------------------------------------------------------
+
+def test_token_logprobs_scores_the_drawn_distribution():
+    """Greedy lanes score against log-softmax of the RAW logits;
+    sampled lanes against log-softmax of the FILTERED logits (the
+    distribution the draw actually came from)."""
+    rng = np.random.default_rng(3)
+    V = 16
+    logits = jnp.asarray(rng.normal(size=(2, V)).astype(np.float32))
+    samp = pack_sampling([SamplingParams(),                     # greedy
+                          SamplingParams(temperature=0.7, top_k=4,
+                                         seed=1)])
+    toks = jnp.asarray([int(np.argmax(np.asarray(logits[0]))), 2],
+                       jnp.int32)
+    chosen, top_ids, top_lp = token_logprobs(logits, toks, samp, V, k=V)
+
+    raw = jax.nn.log_softmax(logits[0])
+    assert float(chosen[0]) == pytest.approx(float(raw[toks[0]]), abs=1e-6)
+    assert int(top_ids[0, 0]) == int(toks[0])          # top-1 is argmax
+    # the full-width top list is a proper distribution (sums to one)
+    assert float(jnp.exp(top_lp[0]).sum()) == pytest.approx(1.0, abs=1e-5)
+
+    # sampled lane: exactly top_k=4 finite entries, -inf outside, and
+    # they renormalize over the kept set at temperature 0.7
+    kept = np.asarray(jnp.isfinite(top_lp[1])).sum()
+    assert kept == 4
+    assert float(jnp.exp(top_lp[1]).sum()) == pytest.approx(1.0, abs=1e-5)
+    scaled = jax.nn.log_softmax(
+        jnp.sort(logits[1])[-4:][::-1] / 0.7)
+    assert np.allclose(np.asarray(jnp.sort(top_lp[1])[-4:][::-1]),
+                       np.asarray(scaled), atol=1e-5)
+
+
+def test_engine_logprobs_match_dense_forward():
+    """Greedy engine logprobs equal the log-softmax of a dense
+    (un-paged, un-bucketed) forward pass over the final sequence — the
+    paged step's logits really are the model's logits."""
+    cfg = CFGS["attn"]
+    eng = ServeEngine(_params("attn"), cfg, datapath="qat", max_slots=4,
+                      max_len=64, page_size=8)
+    for p in PROMPTS:
+        eng.submit(p, max_new_tokens=5,
+                   sampling=SamplingParams(logprobs=4))
+    done = sorted(eng.run_to_completion(), key=lambda r: r.rid)
+    for r, prompt in zip(done, PROMPTS):
+        assert len(r.logprobs) == len(r.generated)
+        ids = jnp.asarray([prompt + r.generated], jnp.int32)
+        logits, _, _ = forward(_params("attn"), {"tokens": ids}, cfg,
+                               mode="prefill")
+        lp = jax.nn.log_softmax(
+            logits[0, :, :cfg.vocab_size].astype(jnp.float32), axis=-1)
+        for i, (tok, rec) in enumerate(zip(r.generated, r.logprobs)):
+            want = float(lp[len(prompt) - 1 + i, tok])
+            assert rec["logprob"] == pytest.approx(want, abs=1e-4)
+            assert len(rec["top"]) == 4
+            assert rec["top"][0][0] == tok      # greedy: top-1 == draw
+
+
+def test_spec_logprobs_equal_plain_logprobs():
+    """Logprobs ride the verify step unchanged: spec-on surfaces the
+    same records as spec-off, for greedy and seeded-sampled lanes."""
+    sps = [SamplingParams(logprobs=2),
+           SamplingParams(temperature=0.9, top_k=8, seed=5, logprobs=2),
+           SamplingParams(logprobs=2)]
+    runs = []
+    for spec in (True, False):
+        eng = ServeEngine(_params("attn"), CFGS["attn"], datapath="qat",
+                          spec_decode=spec, draft_len=3, max_slots=4,
+                          max_len=64, page_size=8)
+        for p, sp in zip(PROMPTS, sps):
+            eng.submit(p, max_new_tokens=6, sampling=sp)
+        done = sorted(eng.run_to_completion(), key=lambda r: r.rid)
+        runs.append([(r.generated, r.logprobs) for r in done])
+    for (g_on, lp_on), (g_off, lp_off) in zip(*runs):
+        assert g_on == g_off
+        assert len(lp_on) == len(lp_off)
+        for a, b in zip(lp_on, lp_off):
+            assert a["logprob"] == pytest.approx(b["logprob"], abs=1e-6)
+            assert [t for t, _ in a["top"]] == [t for t, _ in b["top"]]
+
+
+def test_logprobs_off_compiles_the_historical_step():
+    """lp_k=0 (nobody asked) must trace the byte-for-byte historical
+    decode step: no top_k/sort primitives from token_logprobs, and the
+    dot-profile snapshot from test_datapath_structure unchanged.  lp_k>0
+    is the only thing that buys the extra compute."""
+    cfg = CFGS["attn"]
+    eng = ServeEngine(_params("attn"), cfg, max_slots=4, max_len=64)
+    d_args = decode_example_args(eng)
+
+    def profile(lp_k):
+        with eng._scope():
+            jx = jax.make_jaxpr(partial(eng._decode_fn, do_sample=False,
+                                        lp_k=lp_k))(
+                eng.params, eng.cache, *d_args)
+        prims = Counter(e.primitive.name for e in iter_eqns(jx))
+        dots = Counter()
+        for e in iter_eqns(jx):
+            if e.primitive.name in ("dot_general", "conv_general_dilated"):
+                kind = ("float" if jnp.issubdtype(e.outvars[0].aval.dtype,
+                                                  jnp.floating) else "int")
+                dots[(eqn_provenance(e), kind)] += 1
+        return prims, dots
+
+    prims0, dots0 = profile(0)
+    assert prims0["top_k"] == 0 and prims0["sort"] == 0, prims0
+    assert dots0 == Counter({
+        ("models/common.py:dense_apply", "float"): 8,
+        ("kernels/paged_attention.py:_accumulate", "float"): 2,
+    }), dots0
+    prims4, _ = profile(4)
+    assert prims4["top_k"] >= 1, prims4   # the sampler compute is real
+
+
+def test_logprobs_zero_request_records_nothing():
+    eng = ServeEngine(_params("attn"), CFGS["attn"], datapath="qat",
+                      spec_decode=True, draft_len=3, max_slots=4,
+                      max_len=64, page_size=8)
+    for p in PROMPTS:        # default SamplingParams: logprobs=0
+        eng.submit(p, max_new_tokens=4)
+    done = eng.run_to_completion()
+    assert done and all(not r.logprobs for r in done)
+
+
+# ---------------------------------------------------------------------------
+# 4. configuration surface
+# ---------------------------------------------------------------------------
+
+def test_sampling_params_rejects_negative_logprobs():
+    with pytest.raises(ValueError, match="logprobs"):
+        SamplingParams(logprobs=-1)
+
+
+@pytest.mark.parametrize("bad", [0, -1, -7])
+def test_config_rejects_nonpositive_draft_len(bad):
+    with pytest.raises(ValueError, match="draft_len"):
+        EngineConfig(spec_decode=True, draft_len=bad).validate()
+    with pytest.raises(ValueError, match="draft_len"):
+        # the rule holds even with speculation off: the knob must
+        # never sit in an unusable state waiting to explode later
+        EngineConfig(draft_len=bad).validate()
+    with pytest.raises(ValueError, match="draft_len"):
+        ServeEngine(_params("attn"), CFGS["attn"], draft_len=bad)
+
+
+@pytest.mark.parametrize("datapath,ok", [("qat", True), ("sc_int", True),
+                                         ("sc_int_approx", False)])
+def test_config_spec_decode_target_matrix(datapath, ok):
+    """spec_decode with an sc_int_approx target is drafter == verifier:
+    a no-op that doubles compute — rejected.  Every other combination
+    validates, and the plain-kwargs shim routes through the same rule."""
+    cfg = EngineConfig(datapath=datapath, spec_decode=True)
+    if ok:
+        assert cfg.validate() is cfg
+        assert EngineConfig(datapath=datapath).validate()
+    else:
+        with pytest.raises(ValueError, match="sc_int_approx"):
+            cfg.validate()
+        # speculation OFF on the approx datapath stays legal
+        assert EngineConfig(datapath=datapath).validate()
+        with pytest.raises(ValueError, match="sc_int_approx"):
+            ServeEngine(_params("attn"), CFGS["attn"], datapath=datapath,
+                        spec_decode=True)
+
+
+def test_shim_kwargs_reach_the_engine():
+    eng = ServeEngine(_params("attn"), CFGS["attn"], spec_decode=True,
+                      draft_len=2, max_slots=2, max_len=32)
+    assert eng.spec_decode is True and eng.draft_len == 2
+    assert eng.config.spec_decode is True and eng.config.draft_len == 2
