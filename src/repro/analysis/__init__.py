@@ -5,6 +5,8 @@ from .contracts import (PassResult, Violation, audit_donation,
                         audit_host_boundary, audit_sharding,
                         run_engine_contracts)
 from .hlo_cost import HloCost, analyze_hlo, parse_computations
+from .kernel_audit import (audit_bounds, audit_grid, audit_registry,
+                           audit_revisit, audit_vmem, run_plan_audits)
 from .lint import LintViolation, lint_repo, lint_sources
 from .roofline import RooflineReport, V5E, roofline_from_compiled
 
@@ -13,4 +15,6 @@ __all__ = ["HloCost", "analyze_hlo", "parse_computations",
            "Violation", "PassResult", "audit_donation",
            "audit_dtype_purity", "audit_host_boundary", "audit_sharding",
            "audit_engine_retrace", "run_engine_contracts",
+           "audit_bounds", "audit_vmem", "audit_revisit", "audit_grid",
+           "run_plan_audits", "audit_registry",
            "LintViolation", "lint_repo", "lint_sources"]

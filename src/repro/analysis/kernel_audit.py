@@ -1,0 +1,399 @@
+"""Static auditor for the Pallas kernel fleet: BlockSpec bounds proofs,
+VMEM budgets, and revisit/race checks — no kernel is ever executed.
+
+The PR-8 contract gate (``contracts.py``) audits lowered jaxpr/HLO but
+stops at every ``pallas_call`` boundary: an out-of-bounds page-table
+index map, a VMEM-blowing block knob or a silently-revisited output
+block is invisible to it and only surfaces in differential tests after
+it has corrupted tokens (or, worse, only on real TPU hardware where an
+out-of-range DMA reads garbage instead of raising).  This module closes
+that gap by auditing the :class:`repro.kernels.plan.LaunchPlan` each
+kernel now builds — the *same* object the executing wrapper launches,
+so the audited geometry cannot drift from the executed one.
+
+Passes (each returns a :class:`~repro.analysis.contracts.PassResult`,
+so ANALYSIS.json carries kernel cells with the same shape as the
+contract cells):
+
+``bounds``   enumerate every BlockSpec index map over the full grid
+             with scalar-prefetch operands pinned to their worst-case
+             value model (page-table entries at ``num_pages - 1`` and
+             ``0``; lengths at ``max_len - 1`` and the ragged
+             ``plen % page_size in {0, 1, page_size - 1}`` fills) and
+             prove every block read/write lands inside its operand —
+             including the scale/residual aux pools.  Index maps in
+             this fleet are elementwise monotone in their scalar
+             entries, so the extremes are a proof, not a sample.
+``vmem``     per-program VMEM estimate (double-buffered input/output
+             block tiles + scratch) against a configurable budget —
+             reported per (kernel, shape, config) so the autotuner can
+             prune infeasible configs before compiling them
+             (``kernels/autotune.py`` does exactly that).
+``revisit``  detect output blocks written from more than one grid step
+             and require (a) the plan declares an accumulation
+             discipline for them, (b) the kernel body actually guards a
+             first write / finalize with ``pl.when``, and (c) no
+             revisited grid axis is declared ``parallel`` in
+             ``dimension_semantics`` (that would be a write race on
+             TPU).  A stale declaration on a non-revisited output also
+             fails — metadata must stay honest.
+``grid``     index-map arity == grid rank + scalar-prefetch count for
+             every operand, block rank/size vs operand shape, every
+             scalar-prefetch operand actually referenced (by an index
+             map, or declared ``kernel_only``), unique operand names.
+
+``audit_registry`` drives all four over every kernel registered in
+``kernels/dispatch.KERNEL_REGISTRY`` x its kv_formats x the autotune
+sweep shapes; ``tools/analyze.py --gate`` emits the result as the
+``kernel_audit`` section of ANALYSIS.json.
+"""
+
+from __future__ import annotations
+
+import inspect
+import itertools
+
+import numpy as np
+
+from repro.kernels.plan import (DEFAULT_VMEM_BUDGET, LaunchPlan,
+                                estimate_vmem, kernel_source_fn)
+
+from .contracts import PassResult, results_to_json
+
+__all__ = ["audit_bounds", "audit_vmem", "audit_revisit", "audit_grid",
+           "run_plan_audits", "audit_registry", "scalar_sets",
+           "DEFAULT_VMEM_BUDGET"]
+
+_MAX_REPORTED = 3          # violations reported per (pass, operand)
+
+
+def _arity(fn) -> int | None:
+    try:
+        return fn.__code__.co_argcount
+    except AttributeError:
+        try:
+            return len(inspect.signature(fn).parameters)
+        except (TypeError, ValueError):
+            return None
+
+
+def _map_provenance(fn) -> str:
+    """``file.py:line`` of an index map, relative to the repro package —
+    the same attribution style the contract passes use."""
+    try:
+        code = fn.__code__
+        f = str(code.co_filename).replace("\\", "/")
+        if "/repro/" in f:
+            f = f.split("/repro/")[-1]
+        return f"{f}:{code.co_firstlineno}"
+    except AttributeError:
+        return "<unknown>"
+
+
+def _scalar_fills(sc) -> tuple[int, ...]:
+    vals = {0, sc.max_value}
+    vals.update(v for v in sc.values if 0 <= v <= sc.max_value)
+    return tuple(sorted(vals))
+
+
+def scalar_sets(plan: LaunchPlan) -> list[dict]:
+    """Worst-case scalar-prefetch assignments: the cartesian product of
+    each scalar operand's fill values, every array filled uniformly.
+    Uniform extremes suffice because every index map in the fleet is
+    elementwise monotone in the scalar entries it reads (a table entry
+    feeds through unchanged as a block index) — see analysis/README.md
+    for the model's contract."""
+    if not plan.scalars:
+        return [{}]
+    names = [s.name for s in plan.scalars]
+    grids = [_scalar_fills(s) for s in plan.scalars]
+    out = []
+    for fills in itertools.product(*grids):
+        out.append({n: np.full(s.shape, v, dtype=np.dtype("int32"))
+                    for n, s, v in zip(names, plan.scalars, fills)})
+    return out
+
+
+def _grid_points(plan: LaunchPlan):
+    return itertools.product(*(range(g) for g in plan.grid))
+
+
+def _bad_arity_ops(plan: LaunchPlan) -> set[str]:
+    want = len(plan.grid) + len(plan.scalars)
+    return {op.name for op in plan.inputs + plan.outputs
+            if _arity(op.index_map) not in (None, want)}
+
+
+def _scalar_args(plan: LaunchPlan, arrs: dict) -> list:
+    return [arrs[s.name] for s in plan.scalars]
+
+
+# ---------------------------------------------------------------------------
+# pass 1: bounds
+# ---------------------------------------------------------------------------
+
+def audit_bounds(label: str, plan: LaunchPlan) -> PassResult:
+    """Prove every block index lands inside its operand for the whole
+    grid under every worst-case scalar set.  A block index ``i`` on a
+    dim of extent ``n`` with block ``b`` is legal iff
+    ``0 <= i < ceil(n / b)`` (Pallas pads a partial final block; past
+    that is an out-of-bounds DMA that corrupts silently on TPU)."""
+    res = PassResult("bounds", label)
+    skip = _bad_arity_ops(plan)
+    if skip:
+        res.notes.append(f"operands skipped for index-map arity mismatch "
+                         f"(see grid pass): {sorted(skip)}")
+    sets = scalar_sets(plan)
+    checked = 0
+    reported: dict[str, int] = {}
+    for op in plan.inputs + plan.outputs:
+        if op.name in skip:
+            continue
+        nblocks = tuple(-(-s // b) for s, b in zip(op.shape, op.block))
+        prov = _map_provenance(op.index_map)
+        for arrs in sets:
+            sargs = _scalar_args(plan, arrs)
+            fills = {k: int(v.flat[0]) for k, v in arrs.items()}
+            for point in _grid_points(plan):
+                idx = op.index_map(*point, *sargs)
+                checked += 1
+                if not isinstance(idx, tuple):
+                    idx = (idx,)
+                bad = (len(idx) != len(op.shape))
+                if not bad:
+                    bad = any(not (0 <= int(i) < nb)
+                              for i, nb in zip(idx, nblocks))
+                if bad:
+                    n = reported.get(op.name, 0)
+                    reported[op.name] = n + 1
+                    if n < _MAX_REPORTED:
+                        res.fail(
+                            f"operand {op.name} ({prov}): block index "
+                            f"{tuple(int(i) for i in idx)} outside "
+                            f"{nblocks} blocks of shape {op.shape} / "
+                            f"block {op.block} at grid point {point} "
+                            f"with scalars {fills}")
+    over = {k: v - _MAX_REPORTED for k, v in reported.items()
+            if v > _MAX_REPORTED}
+    if over:
+        res.fail(f"...and {sum(over.values())} more out-of-bounds block "
+                 f"indices suppressed: {over}")
+    res.notes.append(f"{checked} (grid point x scalar set x operand) "
+                     f"index evaluations, {len(sets)} worst-case scalar "
+                     "set(s)")
+    return res
+
+
+# ---------------------------------------------------------------------------
+# pass 2: vmem
+# ---------------------------------------------------------------------------
+
+def audit_vmem(label: str, plan: LaunchPlan, *,
+               budget: int = DEFAULT_VMEM_BUDGET) -> PassResult:
+    """Per-program VMEM estimate vs budget.  The estimate is the DMA
+    working set: 2x every input/output block (Pallas double-buffers the
+    pipeline) + scratch, see ``kernels.plan.estimate_vmem``."""
+    res = PassResult("vmem", label)
+    est = estimate_vmem(plan)
+    blocks = {op.name: op.block_bytes()
+              for op in plan.inputs + plan.outputs}
+    if est > budget:
+        top = sorted(blocks.items(), key=lambda kv: -kv[1])[:3]
+        res.fail(f"estimated per-program VMEM {est} B exceeds budget "
+                 f"{budget} B (largest blocks: "
+                 f"{', '.join(f'{n}={b}B' for n, b in top)}, "
+                 f"scratch={plan.scratch_bytes()}B) — shrink the block "
+                 "knob (num_splits / block_q / block_r) or raise the "
+                 "budget deliberately")
+    res.notes.append(f"vmem_est={est} budget={budget} "
+                     f"scratch={plan.scratch_bytes()}")
+    return res
+
+
+# ---------------------------------------------------------------------------
+# pass 3: revisit / race
+# ---------------------------------------------------------------------------
+
+def audit_revisit(label: str, plan: LaunchPlan) -> PassResult:
+    """Every output block written from >1 grid step must carry a
+    declared accumulation discipline, a ``pl.when``-guarded kernel body,
+    and only ``arbitrary``-ordered revisit axes.  Detection runs with
+    scalars pinned at max — no output index map in the fleet reads
+    scalars, and the grid pass flags any that silently starts to."""
+    res = PassResult("revisit", label)
+    skip = _bad_arity_ops(plan)
+    arrs = scalar_sets(plan)[-1]
+    sargs = _scalar_args(plan, arrs)
+    try:
+        src = inspect.getsource(kernel_source_fn(plan))
+    except (OSError, TypeError):
+        src = None
+        res.notes.append("kernel source unavailable: pl.when discipline "
+                         "check skipped")
+    revisited = {}
+    for op in plan.outputs:
+        if op.name in skip:
+            continue
+        first: dict[tuple, tuple] = {}
+        axes: set[int] = set()
+        count = 0
+        for point in _grid_points(plan):
+            idx = op.index_map(*point, *sargs)
+            idx = tuple(int(i) for i in (idx if isinstance(idx, tuple)
+                                         else (idx,)))
+            if idx in first:
+                count += 1
+                axes.update(a for a, (x, y) in
+                            enumerate(zip(first[idx], point)) if x != y)
+            else:
+                first[idx] = point
+        if count:
+            revisited[op.name] = sorted(axes)
+            if op.name not in plan.accumulate:
+                res.fail(
+                    f"output {op.name} is written from multiple grid "
+                    f"steps (revisit axes {sorted(axes)}) but the plan "
+                    "declares no accumulation discipline — silent "
+                    "last-write-wins")
+                continue
+            if src is not None and "pl.when" not in src:
+                res.fail(
+                    f"output {op.name} declares accumulation "
+                    f"'{plan.accumulate[op.name]}' but the kernel body "
+                    "has no pl.when guard — no first-write init or "
+                    "last-step finalize protects the revisited block")
+            if plan.dimension_semantics is not None:
+                for a in sorted(axes):
+                    if plan.dimension_semantics[a] == "parallel":
+                        res.fail(
+                            f"output {op.name} is revisited along grid "
+                            f"axis {a} which dimension_semantics "
+                            "declares 'parallel' — concurrent programs "
+                            "would race on the block")
+    for name, disc in plan.accumulate.items():
+        if name not in revisited and name not in skip:
+            res.fail(f"output {name} declares accumulation '{disc}' but "
+                     "is never revisited — stale metadata (or the index "
+                     "map no longer folds grid steps onto one block)")
+    res.notes.append(
+        "revisited outputs: "
+        + (", ".join(f"{n} (axes {a})" for n, a in revisited.items())
+           or "none"))
+    return res
+
+
+# ---------------------------------------------------------------------------
+# pass 4: grid / arity
+# ---------------------------------------------------------------------------
+
+class _Probe:
+    """Stand-in scalar array recording whether an index map indexes it."""
+
+    def __init__(self):
+        self.hit = False
+
+    def __getitem__(self, _):
+        self.hit = True
+        return 0
+
+
+def audit_grid(label: str, plan: LaunchPlan) -> PassResult:
+    res = PassResult("grid", label)
+    want = len(plan.grid) + len(plan.scalars)
+    if any(g <= 0 for g in plan.grid):
+        res.fail(f"degenerate grid {plan.grid}: every axis must be "
+                 "positive (zero-size launches route to the reference "
+                 "backend in dispatch)")
+    names = [op.name for op in plan.inputs + plan.outputs] \
+        + [s.name for s in plan.scalars]
+    if len(set(names)) != len(names):
+        dupes = sorted({n for n in names if names.count(n) > 1})
+        res.fail(f"duplicate operand names {dupes} — audit attribution "
+                 "and call_plan operand order would be ambiguous")
+    for op in plan.inputs + plan.outputs:
+        got = _arity(op.index_map)
+        prov = _map_provenance(op.index_map)
+        if got is not None and got != want:
+            res.fail(f"operand {op.name} ({prov}): index map takes {got} "
+                     f"args but grid rank + scalar prefetch is {want}")
+        if len(op.block) != len(op.shape):
+            res.fail(f"operand {op.name}: block rank {len(op.block)} != "
+                     f"operand rank {len(op.shape)}")
+            continue
+        for d, (b, s) in enumerate(zip(op.block, op.shape)):
+            if not 0 < b <= s:
+                res.fail(f"operand {op.name}: block dim {d} is {b}, "
+                         f"outside (0, {s}] for shape {op.shape}")
+    if plan.dimension_semantics is not None \
+            and len(plan.dimension_semantics) != len(plan.grid):
+        res.fail(f"dimension_semantics rank "
+                 f"{len(plan.dimension_semantics)} != grid rank "
+                 f"{len(plan.grid)}")
+    # which scalar-prefetch operands do the index maps actually read?
+    probes = {s.name: _Probe() for s in plan.scalars}
+    if plan.scalars:
+        zero = (0,) * len(plan.grid)
+        pargs = [probes[s.name] for s in plan.scalars]
+        for op in plan.inputs + plan.outputs:
+            try:
+                op.index_map(*zero, *pargs)
+            except (TypeError, IndexError):
+                pass                      # arity failures flagged above
+        for s in plan.scalars:
+            if not probes[s.name].hit and not s.kernel_only:
+                res.fail(f"scalar-prefetch operand {s.name} is never "
+                         "referenced by any BlockSpec index map and is "
+                         "not declared kernel_only — dead prefetch "
+                         "operand (or a forgotten index map)")
+    res.notes.append(
+        f"grid {plan.grid}, {len(plan.inputs)} inputs, "
+        f"{len(plan.outputs)} outputs, {len(plan.scalars)} scalar "
+        f"prefetch ({sum(p.hit for p in probes.values())} referenced by "
+        "index maps)")
+    return res
+
+
+# ---------------------------------------------------------------------------
+# orchestrators
+# ---------------------------------------------------------------------------
+
+def run_plan_audits(plan: LaunchPlan, label: str, *,
+                    vmem_budget: int = DEFAULT_VMEM_BUDGET) -> list:
+    """All four passes over one launch plan."""
+    return [
+        audit_bounds(f"{label}/bounds", plan),
+        audit_vmem(f"{label}/vmem", plan, budget=vmem_budget),
+        audit_revisit(f"{label}/revisit", plan),
+        audit_grid(f"{label}/grid", plan),
+    ]
+
+
+def audit_registry(*, vmem_budget: int = DEFAULT_VMEM_BUDGET,
+                   registry=None) -> dict:
+    """Audit every registered kernel x kv_format x autotune sweep shape.
+
+    Returns the ``kernel_audit`` section of ANALYSIS.json::
+
+        {"budget_bytes": ..., "ok": bool,
+         "kernels": {"paged_attn_decode/int8/serving_maxp4_splits2":
+                     {"ok": ..., "passes": [...], "vmem_est": ...}, ...}}
+    """
+    from repro.kernels.dispatch import KERNEL_REGISTRY
+    if registry is None:
+        registry = KERNEL_REGISTRY
+    out = {"budget_bytes": vmem_budget, "kernels": {}, "ok": True}
+    for entry in registry.values():
+        formats = entry.kv_formats or (None,)
+        for case_label, kwargs in entry.audit_cases():
+            for fmt in formats:
+                kw = dict(kwargs)
+                if fmt is not None:
+                    kw["kv_format"] = fmt
+                label = f"{entry.name}/{fmt or '-'}/{case_label}"
+                plan = entry.build_plan(**kw)
+                cell = results_to_json(
+                    run_plan_audits(plan, label, vmem_budget=vmem_budget))
+                cell["vmem_est"] = estimate_vmem(plan)
+                out["kernels"][label] = cell
+    out["ok"] = all(c["ok"] for c in out["kernels"].values())
+    return out

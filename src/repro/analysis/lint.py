@@ -23,6 +23,14 @@ Four rules over the ``repro`` source tree, no jax import required:
                      iteration re-traces every call (the engine's
                      sequential paged oracle shipped exactly this bug).
 
+A fifth, non-AST rule audits the *checkout* rather than the sources:
+
+``hygiene``          no tracked Python bytecode (``__pycache__/``,
+                     ``*.pyc``) in the git index — stale interpreter
+                     artifacts shadow source edits in diffs and bloat
+                     every clone.  Runs off ``git ls-files``; silently
+                     empty outside a git checkout.
+
 Reachability is a conservative over-approximation: module-level and
 function-level imports both register, nested defs are scanned with their
 parents, and unresolvable calls (third-party, dynamic) are ignored.
@@ -31,13 +39,15 @@ parents, and unresolvable calls (third-party, dynamic) are ignored.
 from __future__ import annotations
 
 import ast
+import subprocess
 from dataclasses import dataclass
 from pathlib import Path
 
-__all__ = ["LintViolation", "lint_repo", "lint_sources", "TRACED_ROOTS",
-           "RULES"]
+__all__ = ["LintViolation", "lint_repo", "lint_sources", "hygiene_repo",
+           "hygiene_scan", "TRACED_ROOTS", "RULES"]
 
-RULES = ("host-op", "blockspec-arity", "static-argnames", "jit-in-loop")
+RULES = ("host-op", "blockspec-arity", "static-argnames", "jit-in-loop",
+         "hygiene")
 
 # (path suffix, function) pairs the traced hot paths hang from.  The
 # kernels/dispatch entries are listed explicitly because core.bsn
@@ -473,6 +483,33 @@ def lint_sources(files: dict, roots=()) -> list:
         vios += _static_argnames_scan(mod)
         vios += _jit_in_loop_scan(mod)
     return sorted(vios, key=lambda v: (v.file, v.line, v.rule))
+
+
+def hygiene_scan(tracked_paths) -> list:
+    """Flag tracked-bytecode paths in an iterable of repo-relative paths
+    (the pure half of ``hygiene_repo``, for tests)."""
+    vios = []
+    for f in tracked_paths:
+        f = f.replace("\\", "/")
+        if f.endswith(".pyc") or "__pycache__/" in f:
+            vios.append(LintViolation(
+                f, 0, "hygiene",
+                "tracked Python bytecode — `git rm --cached` it; "
+                "__pycache__/ and *.pyc are covered by the root "
+                ".gitignore"))
+    return vios
+
+
+def hygiene_repo(repo_root: Path | str | None = None) -> list:
+    """Repo-hygiene check over the git index (see module docstring)."""
+    if repo_root is None:
+        repo_root = Path(__file__).resolve().parents[3]
+    try:
+        out = subprocess.run(["git", "ls-files"], cwd=str(repo_root),
+                             capture_output=True, text=True, check=True)
+    except (OSError, subprocess.CalledProcessError):
+        return []            # not a git checkout (sdist / wheel install)
+    return hygiene_scan(out.stdout.splitlines())
 
 
 def lint_repo(src_root: Path | str | None = None,

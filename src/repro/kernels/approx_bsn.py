@@ -41,9 +41,11 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from .plan import BlockOperand, LaunchPlan, call_plan
 
 __all__ = ["approx_bsn_pallas", "approx_bsn_temporal_pallas",
+           "approx_bsn_plan", "approx_bsn_temporal_plan",
            "validate_stages"]
 
 Stages = tuple[tuple[int, int, int], ...]
@@ -115,11 +117,52 @@ def _temporal_kernel(c_ref, o_ref, *, in_bsl: int, stages: Stages):
         o_ref[...] = o_ref[...] + part
 
 
-def _compiler_params(semantics: tuple[str, ...]):
-    try:
-        return pltpu.CompilerParams(dimension_semantics=semantics)
-    except AttributeError:                           # older jax naming
-        return pltpu.TPUCompilerParams(dimension_semantics=semantics)
+def approx_bsn_plan(*, rows: int, width: int, in_bsl: int, stages: Stages,
+                    block_r: int = 256) -> LaunchPlan:
+    """Static launch geometry of the spatial BSN kernel: one
+    (block_r, width) row tile per grid step, no revisits (the row axis
+    is embarrassingly parallel).  ``rows`` must already be padded to a
+    multiple of ``block_r`` (dispatch.py pads)."""
+    validate_stages(width, in_bsl, stages)
+    assert rows % block_r == 0, (rows, block_r)
+    return LaunchPlan(
+        name="approx_bsn_spatial",
+        grid=(rows // block_r,),
+        scalars=(),
+        inputs=(BlockOperand("counts", (rows, width), jnp.int32,
+                             (block_r, width), lambda i: (i, 0)),),
+        outputs=(BlockOperand("out", (rows, 1), jnp.int32,
+                              (block_r, 1), lambda i: (i, 0)),),
+        scratch=(),
+        kernel=functools.partial(_spatial_kernel, in_bsl=in_bsl,
+                                 stages=stages),
+        dimension_semantics=("parallel",),
+    )
+
+
+def approx_bsn_temporal_plan(*, rows: int, width: int, in_bsl: int,
+                             stages: Stages, cycles: int,
+                             block_r: int = 256) -> LaunchPlan:
+    """Static launch geometry of the temporal-reuse (Fig 12) variant:
+    the cycle axis revisits the same output block and accumulates under
+    a ``@pl.when(t == 0)`` init, so it is declared ``arbitrary`` (a
+    parallel cycle axis would be a write race)."""
+    validate_stages(width, in_bsl, stages)
+    assert rows % block_r == 0, (rows, block_r)
+    return LaunchPlan(
+        name="approx_bsn_temporal",
+        grid=(rows // block_r, cycles),
+        scalars=(),
+        inputs=(BlockOperand("counts", (rows, cycles * width), jnp.int32,
+                             (block_r, width), lambda i, t: (i, t)),),
+        outputs=(BlockOperand("out", (rows, 1), jnp.int32,
+                              (block_r, 1), lambda i, t: (i, 0)),),
+        scratch=(),
+        kernel=functools.partial(_temporal_kernel, in_bsl=in_bsl,
+                                 stages=stages),
+        accumulate={"out": "when-init-accumulate"},
+        dimension_semantics=("parallel", "arbitrary"),
+    )
 
 
 @functools.partial(jax.jit, static_argnames=("in_bsl", "stages", "block_r",
@@ -133,19 +176,9 @@ def approx_bsn_pallas(counts: jax.Array, *, in_bsl: int, stages: Stages,
     pipeline runs in one pallas_call; nothing leaves VMEM between stages.
     """
     r, width = counts.shape
-    out_bsl = validate_stages(width, in_bsl, stages)
-    del out_bsl
-    assert r % block_r == 0, (r, block_r)
-    kernel = functools.partial(_spatial_kernel, in_bsl=in_bsl, stages=stages)
-    out = pl.pallas_call(
-        kernel,
-        grid=(r // block_r,),
-        in_specs=[pl.BlockSpec((block_r, width), lambda i: (i, 0))],
-        out_specs=pl.BlockSpec((block_r, 1), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((r, 1), jnp.int32),
-        compiler_params=_compiler_params(("parallel",)),
-        interpret=interpret,
-    )(counts)
+    plan = approx_bsn_plan(rows=r, width=width, in_bsl=in_bsl,
+                           stages=stages, block_r=block_r)
+    out = call_plan(plan, (counts,), interpret=interpret)
     return out[:, 0]
 
 
@@ -165,16 +198,8 @@ def approx_bsn_temporal_pallas(counts: jax.Array, *, in_bsl: int,
     r, total = counts.shape
     assert total % cycles == 0, (total, cycles)
     width = total // cycles
-    validate_stages(width, in_bsl, stages)
-    assert r % block_r == 0, (r, block_r)
-    kernel = functools.partial(_temporal_kernel, in_bsl=in_bsl, stages=stages)
-    out = pl.pallas_call(
-        kernel,
-        grid=(r // block_r, cycles),
-        in_specs=[pl.BlockSpec((block_r, width), lambda i, t: (i, t))],
-        out_specs=pl.BlockSpec((block_r, 1), lambda i, t: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((r, 1), jnp.int32),
-        compiler_params=_compiler_params(("parallel", "arbitrary")),
-        interpret=interpret,
-    )(counts)
+    plan = approx_bsn_temporal_plan(rows=r, width=width, in_bsl=in_bsl,
+                                    stages=stages, cycles=cycles,
+                                    block_r=block_r)
+    out = call_plan(plan, (counts,), interpret=interpret)
     return out[:, 0]

@@ -13,6 +13,13 @@ Timing here is wall-clock over jitted calls with ``block_until_ready``
 — on this CPU container that measures the interpret path (dispatch
 overhead + interpreter), which is the comparable-correctness trajectory
 the bench JSONs track; on a real TPU the same sweep times Mosaic.
+
+Candidates are vetted *before* they are compiled: each sweep builds the
+kernel's :class:`~repro.kernels.plan.LaunchPlan` for the candidate knobs
+and skips any whose static VMEM estimate exceeds the audit budget — the
+same estimate the ``vmem`` pass of ``repro.analysis.kernel_audit``
+gates on, so the tuner can never crown a config the auditor would
+reject.  Winners carry their ``vmem_est`` in the BENCH JSONs.
 """
 
 from __future__ import annotations
@@ -25,9 +32,12 @@ import numpy as np
 
 from repro.core.kv_quant import check_kv_format, kv_quant
 
-from .approx_bsn import approx_bsn_pallas
+from .approx_bsn import approx_bsn_pallas, approx_bsn_plan
 from .paged_attention import (paged_attn_decode_pallas,
-                              paged_attn_prefill_pallas)
+                              paged_attn_decode_plan,
+                              paged_attn_prefill_pallas,
+                              paged_attn_prefill_plan)
+from .plan import DEFAULT_VMEM_BUDGET, estimate_vmem
 
 __all__ = ["time_callable", "sweep", "autotune_paged_decode",
            "autotune_paged_prefill", "autotune_approx_bsn"]
@@ -45,18 +55,44 @@ def time_callable(fn, iters: int = 10, warmup: int = 2) -> float:
     return float(np.median(times))
 
 
-def sweep(build, candidates: dict, *, iters: int = 10) -> dict:
+def sweep(build, candidates: dict, *, iters: int = 10, plan_for=None,
+          vmem_budget: int = DEFAULT_VMEM_BUDGET) -> dict:
     """Time ``build(**kwargs)`` for each candidate; pick the fastest.
 
     candidates: {label: kwargs}.  Returns {"winner": label,
     "us_per_call": {label: us}} — the stable schema the BENCH JSONs
     carry per shape.
+
+    ``plan_for(**kwargs)`` (optional) returns the candidate's
+    :class:`~repro.kernels.plan.LaunchPlan`; candidates whose
+    ``estimate_vmem`` exceeds ``vmem_budget`` are *pruned* — never
+    compiled or timed — and land in the report's ``"pruned"`` map
+    instead.  Surviving candidates carry ``"vmem_est"``.  If every
+    candidate is over budget the cheapest one runs anyway (flagged as
+    ``"all_over_budget"``) so the sweep still returns a winner.
     """
+    vmem_est, pruned, all_over = {}, {}, False
+    if plan_for is not None:
+        for label, kw in candidates.items():
+            vmem_est[label] = estimate_vmem(plan_for(**kw))
+        pruned = {l: b for l, b in vmem_est.items() if b > vmem_budget}
+        if candidates and len(pruned) == len(candidates):
+            all_over = True
+            del pruned[min(pruned, key=pruned.get)]
     table = {}
     for label, kw in candidates.items():
+        if label in pruned:
+            continue
         table[label] = round(time_callable(build(**kw), iters=iters), 2)
     winner = min(table, key=table.get)
-    return {"winner": winner, "us_per_call": table}
+    out = {"winner": winner, "us_per_call": table}
+    if plan_for is not None:
+        out["vmem_est"] = {l: vmem_est[l] for l in table}
+        if pruned:
+            out["pruned"] = pruned
+        if all_over:
+            out["all_over_budget"] = True
+    return out
 
 
 def _interpret() -> bool:
@@ -105,9 +141,15 @@ def autotune_paged_decode(S: int, Hkv: int, G: int, D: int, page: int,
             q, kp, vp, tables, lengths, num_splits=num_splits,
             interpret=interp, kv_format=kv_format, **aux)
 
+    def plan_for(num_splits):
+        return paged_attn_decode_plan(
+            S=S, Hkv=Hkv, G=G, D=D, page=page, maxp=maxp,
+            num_pages=kp.shape[0], num_splits=num_splits,
+            kv_format=kv_format)
+
     cands = {f"num_splits={s}": {"num_splits": s}
              for s in splits if s <= maxp}
-    out = sweep(build, cands, iters=iters)
+    out = sweep(build, cands, iters=iters, plan_for=plan_for)
     out["shape"] = dict(S=S, Hkv=Hkv, G=G, D=D, page=page, maxp=maxp,
                         kv_format=kv_format)
     return out
@@ -130,8 +172,14 @@ def autotune_paged_prefill(G: int, C: int, Hkv: int, Gq: int, D: int,
             q, kp, vp, tables, start=start, block_q=block_q,
             interpret=interp, kv_format=kv_format, **aux)
 
+    def plan_for(block_q):
+        return paged_attn_prefill_plan(
+            G=G, C=C, Hkv=Hkv, Gq=Gq, D=D, page=page, start=start,
+            num_pages=kp.shape[0], table_width=tables.shape[1],
+            block_q=block_q, kv_format=kv_format)
+
     cands = {f"block_q={b}": {"block_q": b} for b in block_qs if b <= C}
-    out = sweep(build, cands, iters=iters)
+    out = sweep(build, cands, iters=iters, plan_for=plan_for)
     out["shape"] = dict(G=G, C=C, Hkv=Hkv, Gq=Gq, D=D, page=page,
                         start=start, kv_format=kv_format)
     return out
@@ -155,7 +203,14 @@ def autotune_approx_bsn(rows: int, spec, *, block_rs=(64, 128, 256),
                                          stages=stages, block_r=br,
                                          interpret=interp)
 
+    def plan_for(block_r):
+        br = min(block_r, max(8, 1 << (rows - 1).bit_length()))
+        rp = (rows + br - 1) // br * br
+        return approx_bsn_plan(rows=rp, width=spec.width,
+                               in_bsl=spec.in_bsl, stages=stages,
+                               block_r=br)
+
     cands = {f"block_r={b}": {"block_r": b} for b in block_rs}
-    out = sweep(build, cands, iters=iters)
+    out = sweep(build, cands, iters=iters, plan_for=plan_for)
     out["shape"] = dict(rows=rows, width=spec.width, in_bsl=spec.in_bsl)
     return out

@@ -30,23 +30,29 @@ from __future__ import annotations
 
 import contextlib
 import math
-from typing import Iterator
+from dataclasses import dataclass
+from typing import Callable, Iterator
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.bsn import (ApproxBSNSpec, approx_bsn_counts,
-                            spatial_temporal_counts)
+                            default_approx_spec, spatial_temporal_counts)
 
 from . import ref
-from .approx_bsn import approx_bsn_pallas, approx_bsn_temporal_pallas
+from .approx_bsn import (approx_bsn_pallas, approx_bsn_plan,
+                         approx_bsn_temporal_pallas,
+                         approx_bsn_temporal_plan)
 from .paged_attention import (paged_attn_decode_pallas,
-                              paged_attn_prefill_pallas)
+                              paged_attn_decode_plan,
+                              paged_attn_prefill_pallas,
+                              paged_attn_prefill_plan)
 
 __all__ = ["BACKENDS", "select_backend", "set_default_backend",
            "get_default_backend", "backend_scope", "approx_bsn",
            "spec_stages", "attn_backend_scope", "set_attn_backend",
-           "get_attn_backend", "paged_attn_decode", "paged_attn_prefill"]
+           "get_attn_backend", "paged_attn_decode", "paged_attn_prefill",
+           "KernelEntry", "KERNEL_REGISTRY"]
 
 BACKENDS = ("pallas", "pallas-interpret", "reference")
 
@@ -246,3 +252,98 @@ def paged_attn_prefill(q: jax.Array, k_pages: jax.Array,
                                      start=start, block_q=block_q,
                                      interpret=chosen == "pallas-interpret",
                                      kv_format=kv_format, **aux)
+
+
+# ---------------------------------------------------------------------------
+# kernel registry: static-audit metadata for every dispatched kernel
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class KernelEntry:
+    """One dispatched Pallas kernel, as the static auditor sees it.
+
+    ``build_plan`` is the kernel's pure-Python launch-plan builder (the
+    same one the executing wrapper calls — audited geometry cannot drift
+    from executed geometry).  ``kv_formats`` lists the compressed-pool
+    variants the kernel compiles per format (empty when kv_format does
+    not apply, e.g. the BSN adder).  ``audit_cases()`` returns
+    ``(label, plan_kwargs)`` pairs covering the autotune sweep shapes,
+    so the auditor can prune/verify exactly the configs the autotuner
+    would compile.  New kernels MUST register here before dispatch:
+    ``tests/test_kernel_audit.py`` audits every entry x format.
+    """
+    name: str
+    build_plan: Callable
+    kv_formats: tuple[str, ...]
+    audit_cases: Callable[[], tuple[tuple[str, dict], ...]]
+
+
+def _bsn_case(rows: int, width: int, block_r: int,
+              cycles: int = 1) -> tuple[str, dict]:
+    """Mirror dispatch.approx_bsn's clamp-then-pad of (rows, block_r)."""
+    br = min(block_r, max(8, 1 << (rows - 1).bit_length()))
+    rp = (rows + br - 1) // br * br
+    spec = default_approx_spec(width, 2)
+    kw = dict(rows=rp, width=width, in_bsl=spec.in_bsl,
+              stages=spec_stages(spec), block_r=br)
+    if cycles > 1:
+        kw["cycles"] = cycles
+    return f"r{rows}_w{width}_b{br}" + (f"_t{cycles}" if cycles > 1
+                                        else ""), kw
+
+
+def _bsn_spatial_cases() -> tuple[tuple[str, dict], ...]:
+    # the bench_approx_bsn autotune sweep: (rows, width) x block_r
+    cases = {}
+    for rows, width in ((64, 128), (64, 512), (256, 1152)):
+        for block_r in (64, 128, 256):
+            label, kw = _bsn_case(rows, width, block_r)
+            cases[label] = kw                        # dedupe clamped ties
+    return tuple(cases.items())
+
+
+def _bsn_temporal_cases() -> tuple[tuple[str, dict], ...]:
+    cases = {}
+    for rows, width, cycles in ((64, 128, 4), (256, 128, 8)):
+        for block_r in (64, 256):
+            label, kw = _bsn_case(rows, width, block_r, cycles)
+            cases[label] = kw
+    return tuple(cases.items())
+
+
+def _decode_cases() -> tuple[tuple[str, dict], ...]:
+    # the bench_serving autotune shapes: the serving-scale decode point
+    # and the longer-context split-K point (pools sized like
+    # autotune._paged_case: S * maxp pages + the reserved trash page)
+    cases = []
+    for tag, maxp, splits in (("serving", 4, (1, 2, 4)),
+                              ("long", 16, (1, 2, 4, 8))):
+        for s in splits:
+            if s > maxp:
+                continue
+            cases.append((f"{tag}_maxp{maxp}_splits{s}",
+                          dict(S=8, Hkv=2, G=2, D=16, page=16, maxp=maxp,
+                               num_pages=8 * maxp + 1, num_splits=s)))
+    return tuple(cases)
+
+
+def _prefill_cases() -> tuple[tuple[str, dict], ...]:
+    return tuple(
+        (f"chunk32_start32_bq{bq}",
+         dict(G=4, C=32, Hkv=2, Gq=2, D=16, page=16, start=32,
+              num_pages=4 * 4 + 1, table_width=4, block_q=bq))
+        for bq in (8, 16, 32))
+
+
+KERNEL_REGISTRY: dict[str, KernelEntry] = {
+    e.name: e for e in (
+        KernelEntry("approx_bsn_spatial", approx_bsn_plan, (),
+                    _bsn_spatial_cases),
+        KernelEntry("approx_bsn_temporal", approx_bsn_temporal_plan, (),
+                    _bsn_temporal_cases),
+        KernelEntry("paged_attn_decode", paged_attn_decode_plan,
+                    ("fp", "int8", "sc"), _decode_cases),
+        KernelEntry("paged_attn_prefill", paged_attn_prefill_plan,
+                    ("fp", "int8", "sc"), _prefill_cases),
+    )
+}

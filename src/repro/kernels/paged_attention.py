@@ -61,11 +61,12 @@ import math
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 from ..core.kv_quant import SC_SHIFT, check_kv_format
+from .plan import BlockOperand, LaunchPlan, ScalarOperand, call_plan
 
-__all__ = ["paged_attn_decode_pallas", "paged_attn_prefill_pallas"]
+__all__ = ["paged_attn_decode_pallas", "paged_attn_prefill_pallas",
+           "paged_attn_decode_plan", "paged_attn_prefill_plan"]
 
 _NEG = -1e30
 
@@ -143,6 +144,95 @@ def _decode_kernel(pt_ref, len_ref, q_ref, k_ref, v_ref,
                             + jnp.dot(w, v))
 
 
+def paged_attn_decode_plan(*, S: int, Hkv: int, G: int, D: int,
+                           page: int, maxp: int, num_pages: int,
+                           num_splits: int = 1, kv_format: str = "fp",
+                           q_dtype=jnp.float32,
+                           kv_dtype=None) -> LaunchPlan:
+    """Static launch geometry of the flash-decoding decode kernel.
+
+    Single source of truth for the grid, BlockSpecs and scalar-prefetch
+    operands: :func:`paged_attn_decode_pallas` executes exactly this
+    plan, and the static auditor (``repro.analysis.kernel_audit``)
+    proves its bounds/VMEM/revisit properties without tracing it.
+    ``num_pages`` is the pool's leading dim (engine pools include the
+    reserved trash page), bounding legal page-table entries; ragged
+    worst-case lengths straddle the last page boundary.
+    """
+    check_kv_format(kv_format)
+    if kv_dtype is None:
+        kv_dtype = jnp.float32 if kv_format == "fp" else jnp.int8
+    num_splits = max(1, min(num_splits, maxp))
+    pps = -(-maxp // num_splits)                    # pages per split
+    maxp_pad = num_splits * pps                     # trash-padded lanes
+
+    kernel = functools.partial(_decode_kernel, page=page, pps=pps,
+                               scale=math.sqrt(D), kv_format=kv_format)
+
+    def kv_index(s, h, sp, p, pt, ln):
+        del ln
+        return (pt[s, sp * pps + p], 0, h, 0)
+
+    def scale_index(s, h, sp, p, pt, ln):
+        del ln
+        return (pt[s, sp * pps + p], 0, h)
+
+    kv = dict(shape=(num_pages, page, Hkv, D), dtype=kv_dtype,
+              block=(1, page, 1, D), index_map=kv_index)
+    sc = dict(shape=(num_pages, page, Hkv), dtype=jnp.float32,
+              block=(1, page, 1), index_map=scale_index)
+    inputs = [
+        BlockOperand("q", (S, Hkv, G, D), q_dtype, (1, 1, G, D),
+                     lambda s, h, sp, p, pt, ln: (s, h, 0, 0)),
+        BlockOperand("k_pages", **kv),
+        BlockOperand("v_pages", **kv),
+    ]
+    if kv_format != "fp":
+        inputs += [BlockOperand("k_scale", **sc),
+                   BlockOperand("v_scale", **sc)]
+    if kv_format == "sc":
+        inputs += [BlockOperand("k_resid", **kv),
+                   BlockOperand("v_resid", **kv)]
+
+    part_index = lambda s, h, sp, p, pt, ln: (s, h, sp, 0)  # noqa: E731
+    max_len = maxp * page
+    return LaunchPlan(
+        name="paged_attn_decode",
+        grid=(S, Hkv, num_splits, pps),
+        scalars=(
+            ScalarOperand("page_tables", (S, maxp_pad), jnp.int32,
+                          max_value=num_pages - 1),
+            # the just-scattered token sits AT lengths, so legal values
+            # are < max_len; worst cases straddle the last page
+            # boundary: plen = length+1 with plen % page in {0,1,page-1}
+            ScalarOperand("lengths", (S,), jnp.int32,
+                          max_value=max_len - 1,
+                          values=(max_len - page, max_len - page + 1,
+                                  max(0, max_len - page - 1)),
+                          kernel_only=True),
+        ),
+        inputs=tuple(inputs),
+        outputs=(
+            BlockOperand("m", (S, Hkv, num_splits, G), jnp.float32,
+                         (1, 1, 1, G), part_index),
+            BlockOperand("l", (S, Hkv, num_splits, G), jnp.float32,
+                         (1, 1, 1, G), part_index),
+            BlockOperand("acc", (S, Hkv, num_splits, G, D), jnp.float32,
+                         (1, 1, 1, G, D),
+                         lambda s, h, sp, p, pt, ln: (s, h, sp, 0, 0)),
+        ),
+        scratch=(),
+        kernel=kernel,
+        # the pps axis revisits each partial block only when a split
+        # spans more than one page; with pps == 1 every block is written
+        # exactly once (the @pl.when(p == 0) init always fires) and an
+        # accumulate declaration would be stale metadata
+        accumulate=({"m": "online-softmax", "l": "online-softmax",
+                     "acc": "online-softmax"} if pps > 1 else {}),
+        single_output=False,
+    )
+
+
 @functools.partial(jax.jit,
                    static_argnames=("num_splits", "interpret", "kv_format"))
 def paged_attn_decode_pallas(q: jax.Array, k_pages: jax.Array,
@@ -170,63 +260,23 @@ def paged_attn_decode_pallas(q: jax.Array, k_pages: jax.Array,
     S, Hkv, G, D = q.shape
     page = k_pages.shape[1]
     maxp = page_tables.shape[1]
-    num_splits = max(1, min(num_splits, maxp))
-    pps = -(-maxp // num_splits)                    # pages per split
-    if num_splits * pps != maxp:
+    plan = paged_attn_decode_plan(
+        S=S, Hkv=Hkv, G=G, D=D, page=page, maxp=maxp,
+        num_pages=k_pages.shape[0], num_splits=num_splits,
+        kv_format=kv_format, q_dtype=q.dtype, kv_dtype=k_pages.dtype)
+    maxp_pad = plan.scalars[0].shape[1]
+    if maxp_pad != maxp:
         # pad table lanes with the trash page: they sit past ``lengths``
         # (which is < maxp*page by construction) so masking kills them
-        page_tables = jnp.pad(page_tables,
-                              ((0, 0), (0, num_splits * pps - maxp)))
+        page_tables = jnp.pad(page_tables, ((0, 0), (0, maxp_pad - maxp)))
 
-    kernel = functools.partial(_decode_kernel, page=page, pps=pps,
-                               scale=math.sqrt(D), kv_format=kv_format)
-
-    def kv_index(s, h, sp, p, pt, ln):
-        del ln
-        return (pt[s, sp * pps + p], 0, h, 0)
-
-    def scale_index(s, h, sp, p, pt, ln):
-        del ln
-        return (pt[s, sp * pps + p], 0, h)
-
-    kv_spec = pl.BlockSpec((1, page, 1, D), kv_index)
-    scale_spec = pl.BlockSpec((1, page, 1), scale_index)
-    aux_specs, aux_ops = [], []
+    aux_ops = []
     if kv_format != "fp":
-        aux_specs += [scale_spec, scale_spec]
         aux_ops += [k_scale, v_scale]
     if kv_format == "sc":
-        aux_specs += [kv_spec, kv_spec]
         aux_ops += [k_resid, v_resid]
-
-    m, l, acc = pl.pallas_call(
-        kernel,
-        grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=2,
-            grid=(S, Hkv, num_splits, pps),
-            in_specs=[
-                pl.BlockSpec((1, 1, G, D),
-                             lambda s, h, sp, p, pt, ln: (s, h, 0, 0)),
-                kv_spec,
-                kv_spec,
-                *aux_specs,
-            ],
-            out_specs=[
-                pl.BlockSpec((1, 1, 1, G),
-                             lambda s, h, sp, p, pt, ln: (s, h, sp, 0)),
-                pl.BlockSpec((1, 1, 1, G),
-                             lambda s, h, sp, p, pt, ln: (s, h, sp, 0)),
-                pl.BlockSpec((1, 1, 1, G, D),
-                             lambda s, h, sp, p, pt, ln: (s, h, sp, 0, 0)),
-            ],
-        ),
-        out_shape=[
-            jax.ShapeDtypeStruct((S, Hkv, num_splits, G), jnp.float32),
-            jax.ShapeDtypeStruct((S, Hkv, num_splits, G), jnp.float32),
-            jax.ShapeDtypeStruct((S, Hkv, num_splits, G, D), jnp.float32),
-        ],
-        interpret=interpret,
-    )(page_tables, lengths, q, k_pages, v_pages, *aux_ops)
+    m, l, acc = call_plan(plan, (page_tables, lengths, q, k_pages,
+                                 v_pages, *aux_ops), interpret=interpret)
 
     # flash-decoding LSE merge across splits (exact: splits with no live
     # pages carry m=-1e30, l=0 and weigh zero)
@@ -284,6 +334,80 @@ def _prefill_kernel(pt_ref, q_ref, k_ref, v_ref,
                     ).astype(o_ref.dtype)
 
 
+def paged_attn_prefill_plan(*, G: int, C: int, Hkv: int, Gq: int, D: int,
+                            page: int, start: int, num_pages: int,
+                            table_width: int | None = None,
+                            block_q: int = 32, kv_format: str = "fp",
+                            q_dtype=jnp.float32,
+                            kv_dtype=None) -> LaunchPlan:
+    """Static launch geometry of the chunked-prefill kernel (see
+    :func:`paged_attn_decode_plan` for the contract).  ``table_width``
+    is the page-table lane count the engine passes (>= pages seen so
+    far); only lanes ``[0, (start+C)/page)`` are ever indexed."""
+    check_kv_format(kv_format)
+    if kv_dtype is None:
+        kv_dtype = jnp.float32 if kv_format == "fp" else jnp.int8
+    assert C % page == 0 and start % page == 0, (C, page, start)
+    Hq = Hkv * Gq
+    n_pg = (start + C) // page                      # pages seen so far
+    if table_width is None:
+        table_width = n_pg
+    assert table_width >= n_pg, (table_width, n_pg)
+    bq = min(block_q, C)
+    if C % bq:
+        bq = math.gcd(C, bq)
+
+    kernel = functools.partial(_prefill_kernel, bq=bq, page=page,
+                               n_pg=n_pg, start=start,
+                               scale=math.sqrt(D), kv_format=kv_format)
+
+    def kv_index(bh, qi, pg, pt):
+        return (pt[bh // Hq, pg], 0, (bh % Hq) // Gq, 0)
+
+    def scale_index(bh, qi, pg, pt):
+        return (pt[bh // Hq, pg], 0, (bh % Hq) // Gq)
+
+    kv = dict(shape=(num_pages, page, Hkv, D), dtype=kv_dtype,
+              block=(1, page, 1, D), index_map=kv_index)
+    sc = dict(shape=(num_pages, page, Hkv), dtype=jnp.float32,
+              block=(1, page, 1), index_map=scale_index)
+    inputs = [
+        BlockOperand("q", (G * Hq, C, D), q_dtype, (1, bq, D),
+                     lambda bh, qi, pg, pt: (bh, qi, 0)),
+        BlockOperand("k_pages", **kv),
+        BlockOperand("v_pages", **kv),
+    ]
+    if kv_format != "fp":
+        inputs += [BlockOperand("k_scale", **sc),
+                   BlockOperand("v_scale", **sc)]
+    if kv_format == "sc":
+        inputs += [BlockOperand("k_resid", **kv),
+                   BlockOperand("v_resid", **kv)]
+
+    return LaunchPlan(
+        name="paged_attn_prefill",
+        grid=(G * Hq, C // bq, n_pg),
+        scalars=(
+            ScalarOperand("page_tables", (G, table_width), jnp.int32,
+                          max_value=num_pages - 1),
+        ),
+        inputs=tuple(inputs),
+        outputs=(
+            BlockOperand("o", (G * Hq, C, D), q_dtype, (1, bq, D),
+                         lambda bh, qi, pg, pt: (bh, qi, 0)),
+        ),
+        scratch=(((bq, 1), jnp.float32),
+                 ((bq, 1), jnp.float32),
+                 ((bq, D), jnp.float32)),
+        kernel=kernel,
+        # every page revisits the same o block; (m,l,acc) live in VMEM
+        # scratch and o is written once, under @pl.when(last page) — a
+        # single-page launch writes each block exactly once
+        accumulate=({"o": "scratch-finalize"} if n_pg > 1 else {}),
+        single_output=True,
+    )
+
+
 @functools.partial(jax.jit,
                    static_argnames=("start", "block_q", "interpret",
                                     "kv_format"))
@@ -310,60 +434,24 @@ def paged_attn_prefill_pallas(q: jax.Array, k_pages: jax.Array,
     check_kv_format(kv_format)
     G, C, Hkv, Gq, D = q.shape
     page = k_pages.shape[1]
-    assert C % page == 0 and start % page == 0, (C, page, start)
     Hq = Hkv * Gq
-    n_pg = (start + C) // page                      # pages seen so far
-    bq = min(block_q, C)
-    if C % bq:
-        bq = math.gcd(C, bq)
+    plan = paged_attn_prefill_plan(
+        G=G, C=C, Hkv=Hkv, Gq=Gq, D=D, page=page, start=start,
+        num_pages=k_pages.shape[0], table_width=page_tables.shape[1],
+        block_q=block_q, kv_format=kv_format, q_dtype=q.dtype,
+        kv_dtype=k_pages.dtype)
 
     # head-major (G*Hq, C, D): program bh serves q head bh % Hq of
     # request bh // Hq; its KV head is (bh % Hq) // Gq (GQA grouping as
     # in flash_attention's kv index map)
     qh = jnp.moveaxis(q.reshape(G, C, Hq, D), 2, 1).reshape(G * Hq, C, D)
 
-    kernel = functools.partial(_prefill_kernel, bq=bq, page=page,
-                               n_pg=n_pg, start=start,
-                               scale=math.sqrt(D), kv_format=kv_format)
-
-    def kv_index(bh, qi, pg, pt):
-        return (pt[bh // Hq, pg], 0, (bh % Hq) // Gq, 0)
-
-    def scale_index(bh, qi, pg, pt):
-        return (pt[bh // Hq, pg], 0, (bh % Hq) // Gq)
-
-    kv_spec = pl.BlockSpec((1, page, 1, D), kv_index)
-    scale_spec = pl.BlockSpec((1, page, 1), scale_index)
-    aux_specs, aux_ops = [], []
+    aux_ops = []
     if kv_format != "fp":
-        aux_specs += [scale_spec, scale_spec]
         aux_ops += [k_scale, v_scale]
     if kv_format == "sc":
-        aux_specs += [kv_spec, kv_spec]
         aux_ops += [k_resid, v_resid]
-
-    out = pl.pallas_call(
-        kernel,
-        grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=1,
-            grid=(G * Hq, C // bq, n_pg),
-            in_specs=[
-                pl.BlockSpec((1, bq, D),
-                             lambda bh, qi, pg, pt: (bh, qi, 0)),
-                kv_spec,
-                kv_spec,
-                *aux_specs,
-            ],
-            out_specs=pl.BlockSpec((1, bq, D),
-                                   lambda bh, qi, pg, pt: (bh, qi, 0)),
-            scratch_shapes=[
-                pltpu.VMEM((bq, 1), jnp.float32),
-                pltpu.VMEM((bq, 1), jnp.float32),
-                pltpu.VMEM((bq, D), jnp.float32),
-            ],
-        ),
-        out_shape=jax.ShapeDtypeStruct((G * Hq, C, D), q.dtype),
-        interpret=interpret,
-    )(page_tables, qh, k_pages, v_pages, *aux_ops)
+    out = call_plan(plan, (page_tables, qh, k_pages, v_pages, *aux_ops),
+                    interpret=interpret)
     out = jnp.moveaxis(out.reshape(G, Hq, C, D), 1, 2)
     return out.reshape(G, C, Hkv, Gq, D)

@@ -10,6 +10,19 @@ prompt ladder twice and require zero cache growth on the repeat.  Results
 land in ``ANALYSIS.json``; ``--gate`` exits non-zero on any violation so
 CI can block on it.
 
+Beyond the engine cells, the report carries a ``kernel_audit`` section:
+the static Pallas-kernel auditor (``repro.analysis.kernel_audit``) runs
+its bounds / vmem / revisit / grid passes over every kernel registered
+in ``kernels/dispatch.KERNEL_REGISTRY`` x its kv_formats x the autotune
+sweep shapes — again without executing anything.  ``--vmem-warn``
+demotes vmem-budget violations to notes (the latest-jax CI leg uses it:
+block layouts may legitimately differ there, bounds/revisit may not).
+
+ANALYSIS.json is stamped with ``"schema": ANALYSIS_SCHEMA``; the gate
+refuses to clobber or trust an artifact whose stamp it does not know,
+so a stale checkout can never quietly overwrite (or green-light) a
+newer report format.
+
 Usage:
     python tools/analyze.py                 # full matrix, write ANALYSIS.json
     python tools/analyze.py --gate          # same + non-zero exit on violation
@@ -27,6 +40,30 @@ from pathlib import Path
 ROOT = Path(__file__).resolve().parent.parent
 if str(ROOT / "src") not in sys.path:
     sys.path.insert(0, str(ROOT / "src"))
+
+# Version of the ANALYSIS.json layout this tool reads and writes.
+# 2: added top-level "schema", "kernel_audit" (kernel x format x shape
+#    cells from repro.analysis.kernel_audit) and the hygiene lint rule.
+# 1: implicit — the PR-8 contract-matrix layout, no stamp.
+ANALYSIS_SCHEMA = 2
+KNOWN_SCHEMAS = (1, 2)
+
+
+def check_artifact_schema(path: Path) -> int | None:
+    """Schema stamp of an existing ANALYSIS.json (1 if pre-stamp, None
+    if absent/unreadable).  Raises SystemExit on an unknown stamp — an
+    artifact from a newer tool must not be silently clobbered or gated."""
+    try:
+        prev = json.loads(Path(path).read_text())
+    except (OSError, ValueError):
+        return None
+    schema = prev.get("schema", 1) if isinstance(prev, dict) else None
+    if schema not in KNOWN_SCHEMAS:
+        raise SystemExit(
+            f"{path}: unknown ANALYSIS.json schema {schema!r} (this tool "
+            f"knows {list(KNOWN_SCHEMAS)}) — refusing to overwrite or "
+            "gate on it; update tools/analyze.py or delete the artifact")
+    return schema
 
 # Tiny-but-structurally-faithful scale: same shapes the differential test
 # suite uses, so every lowering here matches a lowering the tests execute.
@@ -82,20 +119,24 @@ def _retrace_results(params, cfg, arch, datapath, kv_format):
     return label, [audit_engine_retrace(eng, PROMPTS, label)]
 
 
-def run_matrix(smoke: bool = False, skip_lint: bool = False) -> dict:
+def run_matrix(smoke: bool = False, skip_lint: bool = False,
+               vmem_warn: bool = False) -> dict:
     import jax
     from repro.analysis.contracts import results_to_json
-    from repro.analysis.lint import lint_repo
+    from repro.analysis.kernel_audit import audit_registry
+    from repro.analysis.lint import hygiene_repo, lint_repo
     from repro.launch.mesh import make_serving_mesh, serving_rules
     from repro.models import init_params
 
     t0 = time.time()
     cfgs = _arch_cfgs()
     archs = ("granite",) if smoke else tuple(cfgs)
-    report = {"jax": jax.__version__,
+    report = {"schema": ANALYSIS_SCHEMA,
+              "jax": jax.__version__,
               "backend": jax.default_backend(),
               "device_count": jax.device_count(),
-              "smoke": smoke, "cells": {}, "lint": [], "ok": True}
+              "smoke": smoke, "cells": {}, "lint": [],
+              "kernel_audit": {}, "ok": True}
 
     for arch in archs:
         cfg = cfgs[arch]
@@ -148,12 +189,33 @@ def run_matrix(smoke: bool = False, skip_lint: bool = False) -> dict:
               f"{'ok' if report['cells'][label]['ok'] else 'FAIL'}")
 
     if not skip_lint:
-        lint = lint_repo()
+        lint = lint_repo() + hygiene_repo()
         report["lint"] = [v.to_dict() for v in lint]
         print(f"  lint: {len(lint)} violation(s)")
 
+    # static kernel audit: every registered kernel x kv_format x sweep
+    # shape, never executed.  --vmem-warn demotes vmem failures to notes
+    # (bounds/revisit/grid stay fatal).
+    ka = audit_registry()
+    if vmem_warn:
+        for cell in ka["kernels"].values():
+            for p in cell["passes"]:
+                if p["pass"] == "vmem" and not p["ok"]:
+                    p["notes"] += [f"vmem-warn: {v['message']}"
+                                   for v in p["violations"]]
+                    p["violations"], p["ok"] = [], True
+            cell["violation_count"] = sum(len(p["violations"])
+                                          for p in cell["passes"])
+            cell["ok"] = not cell["violation_count"]
+        ka["ok"] = all(c["ok"] for c in ka["kernels"].values())
+        ka["vmem_warn"] = True
+    report["kernel_audit"] = ka
+    nbad = sum(not c["ok"] for c in ka["kernels"].values())
+    print(f"  kernel_audit: {len(ka['kernels'])} kernel cells, "
+          f"{nbad} failing")
+
     report["ok"] = (all(c["ok"] for c in report["cells"].values())
-                    and not report["lint"])
+                    and not report["lint"] and ka["ok"])
     report["elapsed_s"] = round(time.time() - t0, 1)
     return report
 
@@ -165,14 +227,21 @@ def main(argv=None) -> int:
     ap.add_argument("--smoke", action="store_true",
                     help="2-cell granite subset (fast CI smoke)")
     ap.add_argument("--skip-lint", action="store_true")
+    ap.add_argument("--vmem-warn", action="store_true",
+                    help="kernel-audit vmem violations warn instead of "
+                         "failing (latest-jax CI leg)")
     ap.add_argument("--out", default=str(ROOT / "ANALYSIS.json"),
                     help="report path (default: repo-root ANALYSIS.json)")
     args = ap.parse_args(argv)
 
-    report = run_matrix(smoke=args.smoke, skip_lint=args.skip_lint)
+    check_artifact_schema(Path(args.out))     # fail loudly on unknown stamp
+    report = run_matrix(smoke=args.smoke, skip_lint=args.skip_lint,
+                        vmem_warn=args.vmem_warn)
     Path(args.out).write_text(json.dumps(report, indent=2) + "\n")
 
     nvio = sum(c["violation_count"] for c in report["cells"].values()) \
+        + sum(c["violation_count"]
+              for c in report["kernel_audit"]["kernels"].values()) \
         + len(report["lint"])
     print(f"{len(report['cells'])} cells, {nvio} violation(s) "
           f"-> {args.out} ({report['elapsed_s']}s)")
@@ -181,6 +250,11 @@ def main(argv=None) -> int:
             for p in cell["passes"]:
                 for v in p["violations"]:
                     print(f"FAIL {label} [{p['pass']}] {v['message']}")
+        for label, cell in report["kernel_audit"]["kernels"].items():
+            for p in cell["passes"]:
+                for v in p["violations"]:
+                    print(f"FAIL kernel {label} [{p['pass']}] "
+                          f"{v['message']}")
         for v in report["lint"]:
             print(f"FAIL lint [{v['rule']}] {v['file']}:{v['line']} "
                   f"{v['message']}")
